@@ -1,0 +1,32 @@
+"""Forecaster comparison (paper Fig. 5 top panel): LSTM vs baselines."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.forecaster import (EnsembleMaxForecaster, MovingMaxForecaster,
+                                   forecast_mae, train_lstm_forecaster)
+from repro.data.traces import synthetic_twitter_trace
+
+Row = Tuple[str, float, str]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    trace = synthetic_twitter_trace(seconds=3 * 3600, seed=2)
+    split = 2 * 3600
+    t0 = time.time()
+    lstm, losses = train_lstm_forecaster(trace[:split], steps=250, batch=32)
+    train_us = (time.time() - t0) * 1e6
+    rows.append(("lstm.train", train_us,
+                 f"loss={losses[0]:.4f}->{losses[-1]:.4f}"))
+    test = trace[split:]
+    for name, fc in [("lstm", lstm), ("movingmax", MovingMaxForecaster()),
+                     ("ensemble", EnsembleMaxForecaster(
+                         members=(lstm, MovingMaxForecaster())))]:
+        t0 = time.time()
+        m = forecast_mae(fc, test, stride=300)
+        us = (time.time() - t0) * 1e6
+        rows.append((name, us,
+                     f"mae={m['mae']:.2f} under={m['under_rate']:.2f}"))
+    return rows

@@ -1,0 +1,67 @@
+"""Kernel micro-bench: Pallas (interpret) vs pure-jnp oracle.
+
+Interpret-mode wall time is NOT TPU performance — on CPU the interpreter is
+expected to be slower; this bench exists to (a) pin call overheads, (b) keep a
+correctness-at-speed regression guard, and (c) record the analytic FLOP rates
+the kernels would need on a v5e (derived column)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    B, S, H, KV, hd = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    flops = 4 * B * S * S * H * hd / 2
+    us = _time(lambda a, b, c: ops.flash_prefill(a, b, c), q, k, v)
+    rows.append(("flash_prefill.pallas", us,
+                 f"v5e_t={flops/197e12*1e6:.2f}us_at_peak"))
+    us = _time(lambda a, b, c: ref.ref_flash_prefill(a, b, c), q, k, v)
+    rows.append(("flash_prefill.jnp_oracle", us, f"flops={flops:.2e}"))
+
+    C = 2048
+    qd = jax.random.normal(ks[3], (B, 1, H, hd))
+    kd = jax.random.normal(ks[4], (B, C, KV, hd))
+    vd = jax.random.normal(ks[5], (B, C, KV, hd))
+    bias = jnp.zeros((B, C))
+    dec_bytes = 2 * B * C * KV * hd * 4
+    us = _time(lambda a, b, c, d: ops.flash_decode(a, b, c, d), qd, kd, vd, bias)
+    rows.append(("flash_decode.pallas", us,
+                 f"v5e_t={dec_bytes/819e9*1e6:.2f}us_hbm_bound"))
+    us = _time(lambda a, b, c, d: ref.ref_flash_decode(a, b, c, d), qd, kd, vd, bias)
+    rows.append(("flash_decode.jnp_oracle", us, f"bytes={dec_bytes:.2e}"))
+
+    b, s, h, p, n = 1, 512, 8, 64, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.abs(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[4], (b, s, n))
+    ssd_flops = 2 * b * s * 128 * h * p + 4 * b * s * h * p * n
+    us = _time(lambda *a: ops.ssd_scan(*a)[0], x, dt, A, Bm, Cm)
+    rows.append(("ssd_scan.pallas", us,
+                 f"v5e_t={ssd_flops/197e12*1e6:.2f}us_at_peak"))
+    us = _time(lambda *a: ref.ref_ssd(*a)[0], x, dt, A, Bm, Cm)
+    rows.append(("ssd_scan.jnp_oracle", us, f"flops={ssd_flops:.2e}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Roofline summary from reports/dryrun/*.json (§Roofline deliverable)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    files = sorted(glob.glob(os.path.join(REPORT_DIR, "*.json")))
+    if not files:
+        return [("missing", 0.0, "run repro.launch.dryrun first")]
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = os.path.basename(f)[:-5]
+        if d.get("skipped"):
+            n_skip += 1
+            continue
+        if "error" in d:
+            n_err += 1
+            rows.append((tag, 0.0, "ERROR " + d["error"][:60]))
+            continue
+        n_ok += 1
+        if d["mesh"] != "16x16":
+            continue  # roofline table is single-pod; multi-pod proves lowering
+        dom_ms = {"compute": d["compute_s"], "memory": d["memory_s"],
+                  "collective": d["collective_s"]}[d["dominant"]] * 1e3
+        rows.append((f"{d['arch']}.{d['shape']}", dom_ms * 1e3,
+                     f"dom={d['dominant']} c={d['compute_s']*1e3:.2f}ms "
+                     f"m={d['memory_s']*1e3:.2f}ms "
+                     f"x={d['collective_s']*1e3:.2f}ms "
+                     f"useful={d['usefulness']:.2f} "
+                     f"fits={d.get('fits_v5e_16gb')}"))
+    rows.append(("summary", 0.0,
+                 f"compiled={n_ok} skipped={n_skip} errors={n_err}"))
+    return rows

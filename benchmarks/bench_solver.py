@@ -1,0 +1,53 @@
+"""Solver scalability (the paper's §7 'Scalability with ML' future work):
+runtime + optimality gap of exact-DP and greedy vs brute force as the variant
+ladder grows. Brute force is exponential; the exact DP answers the paper's
+scalability concern without ML."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.profiles import VariantProfile
+from repro.core.solver import solve_bruteforce, solve_exact, solve_greedy
+
+Row = Tuple[str, float, str]
+
+
+def _ladder(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n):
+        frac = (i + 1) / n
+        out[f"v{i}"] = VariantProfile(
+            name=f"v{i}", accuracy=55.0 + 40.0 * frac ** 0.5,
+            rt=2.0 + 14.0 * frac,
+            th_slope=14.0 - 11.0 * frac + rng.normal(0, 0.2),
+            th_intercept=max(0.0, 12.0 - 8.0 * frac),
+            lat_base_ms=20.0 + 100.0 * frac,
+            lat_k_ms=80.0 + 600.0 * frac)
+    return out
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    lam, slo = 80.0, 750.0
+    for n, budget in [(5, 20), (10, 24), (25, 32), (50, 32), (100, 48)]:
+        profiles = _ladder(n)
+        t0 = time.time()
+        e = solve_exact(profiles, lam, budget, slo)
+        t_exact = (time.time() - t0) * 1e6
+        t0 = time.time()
+        g = solve_greedy(profiles, lam, budget, slo)
+        t_greedy = (time.time() - t0) * 1e6
+        gap = (e.objective - g.objective) if (e.feasible and g.feasible) else float("nan")
+        rows.append((f"exact.n{n}", t_exact, f"obj={e.objective:.2f}"))
+        rows.append((f"greedy.n{n}", t_greedy, f"gap={gap:.3f}"))
+        if n <= 5:
+            t0 = time.time()
+            b = solve_bruteforce(profiles, lam, budget, slo)
+            t_bf = (time.time() - t0) * 1e6
+            rows.append((f"bruteforce.n{n}", t_bf,
+                         f"exact_matches={abs(b.objective - e.objective) < 0.25}"))
+    return rows

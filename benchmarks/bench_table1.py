@@ -1,0 +1,49 @@
+"""Paper Table 1 as a measured benchmark: all five systems on one trace."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.adapter import (ControllerConfig, InfAdapterController,
+                                MSPlusController, VPAPlusController)
+from repro.core.cocktail import CocktailController
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.infaas import INFaaSController
+from repro.core.profiles import paper_resnet_profiles
+from repro.data.traces import paper_bursty_trace
+from repro.sim.runner import run_experiment
+
+Row = Tuple[str, float, str]
+REF = 78.31
+
+
+def run() -> List[Row]:
+    profiles = paper_resnet_profiles(noise=0.0)
+    trace = paper_bursty_trace()
+    cfg = ControllerConfig(budget=20, beta=0.05, gamma=0.2)
+    systems = [
+        ("infadapter", InfAdapterController(profiles, MovingMaxForecaster(), cfg),
+         profiles, {"resnet18": 8}),
+        ("ms+", MSPlusController(profiles, MovingMaxForecaster(), cfg),
+         profiles, {"resnet18": 8}),
+        ("infaas", INFaaSController(profiles, cfg, min_accuracy=76.0),
+         profiles, {"resnet50": 8}),
+        ("cocktail", CocktailController(profiles, MovingMaxForecaster(),
+                                        ControllerConfig(budget=40, beta=0.05,
+                                                         gamma=0.2)),
+         profiles, {"resnet18": 8}),
+        ("vpa.resnet50", VPAPlusController(profiles["resnet50"], cfg),
+         {"resnet50": profiles["resnet50"]}, {"resnet50": 8}),
+    ]
+    rows: List[Row] = []
+    for name, ctrl, profs, warm in systems:
+        t0 = time.time()
+        r = run_experiment(name, ctrl, profs, trace, warm_start=warm,
+                           reference_accuracy=REF)
+        us = (time.time() - t0) * 1e6
+        s = r.summary
+        rows.append((name, us,
+                     f"viol={s['violation_rate']:.3f} "
+                     f"loss={s['accuracy_loss']:.2f}% "
+                     f"cost={s['avg_cost_units']:.1f}"))
+    return rows

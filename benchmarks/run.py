@@ -1,0 +1,68 @@
+"""Benchmark harness — one benchmark per paper table/figure (+ beyond-paper
+studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
+
+  fig1_throughput       variant throughput vs cores (paper Fig. 1)
+  fig2_budget_accuracy  variant-set vs single-variant accuracy loss (Fig. 2)
+  fig4_batching         batching/parallelism study, CPU + TPU-roofline (Fig. 4)
+  fig5_bursty           20-min bursty trace comparison (Fig. 5)
+  fig6_profile_fit      linear-regression profile R² (Fig. 6)
+  fig7_beta_sweep       β sensitivity, cumulative metrics (Fig. 7/9/10)
+  fig8_nonbursty        non-bursty trace comparison (Fig. 8)
+  forecaster            LSTM vs baselines MAE/under-rate (Fig. 5 top)
+  solver_scalability    exact/greedy/bruteforce runtime + optimality gap (§7)
+  kernels               Pallas kernel vs jnp-oracle wall time (interpret mode)
+  roofline              summary table from reports/dryrun/*.json (§Roofline)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig5_bursty,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_figures, bench_forecaster, bench_kernels,
+                        bench_robustness, bench_roofline, bench_solver,
+                        bench_table1)
+
+ALL = {
+    "fig1_throughput": bench_figures.fig1_throughput,
+    "fig2_budget_accuracy": bench_figures.fig2_budget_accuracy,
+    "fig4_batching": bench_figures.fig4_batching,
+    "fig6_profile_fit": bench_figures.fig6_profile_fit,
+    "fig5_bursty": bench_figures.fig5_bursty,
+    "fig8_nonbursty": bench_figures.fig8_nonbursty,
+    "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
+    "table1_systems": bench_table1.run,
+    "profile_robustness": bench_robustness.run,
+    "forecaster": bench_forecaster.run,
+    "solver_scalability": bench_solver.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(ALL)
+
+    print("name,us_per_call,derived")
+    for name in names:
+        fn = ALL[name]
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        wall_us = (time.time() - t0) * 1e6
+        for rname, us, derived in rows:
+            print(f"{name}.{rname},{us:.1f},{derived}")
+        print(f"{name}.total,{wall_us:.1f},ok")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

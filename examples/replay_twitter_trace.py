@@ -1,0 +1,62 @@
+"""Replay the paper's 20-minute evaluation (Fig. 5/7/8) in simulation.
+
+Compares InfAdapter vs MS+ vs VPA+{ResNet18,50,152} on the bursty and
+non-bursty traces, printing the accuracy-loss / cost / P99 panels the paper
+plots, plus the beyond-paper reactive+queue-aware InfAdapter.
+
+Run:  PYTHONPATH=src python examples/replay_twitter_trace.py [--beta 0.05]
+"""
+import argparse
+
+from repro.core.adapter import (ControllerConfig, InfAdapterController,
+                                MSPlusController, VPAPlusController)
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.profiles import paper_resnet_profiles
+from repro.data.traces import paper_bursty_trace, paper_nonbursty_trace
+from repro.sim.runner import run_experiment
+
+REF_ACC = 78.31  # ResNet152 (most accurate variant)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--beta", type=float, default=0.05)
+    ap.add_argument("--budget", type=int, default=20)
+    args = ap.parse_args()
+
+    profiles = paper_resnet_profiles()
+    for tname, trace in [("bursty (Fig.5)", paper_bursty_trace()),
+                         ("non-bursty (Fig.8)", paper_nonbursty_trace())]:
+        print(f"\n=== {tname}, beta={args.beta} ===")
+        print(f"{'method':<22} {'viol%':>7} {'p99 ms':>8} {'acc loss':>9} {'cost':>6}")
+        rows = []
+        cfg = ControllerConfig(budget=args.budget, beta=args.beta, gamma=0.2)
+        c = InfAdapterController(profiles, MovingMaxForecaster(), cfg)
+        rows.append(run_experiment("InfAdapter", c, profiles, trace,
+                                   warm_start={"resnet18": 8},
+                                   reference_accuracy=REF_ACC))
+        cfg_r = ControllerConfig(budget=args.budget, beta=args.beta, gamma=0.2,
+                                 reactive=True, queue_aware=True)
+        c = InfAdapterController(profiles, MovingMaxForecaster(), cfg_r)
+        rows.append(run_experiment("InfAdapter-reactive*", c, profiles, trace,
+                                   warm_start={"resnet18": 8},
+                                   reference_accuracy=REF_ACC))
+        c = MSPlusController(profiles, MovingMaxForecaster(), cfg)
+        rows.append(run_experiment("MS+", c, profiles, trace,
+                                   warm_start={"resnet18": 8},
+                                   reference_accuracy=REF_ACC))
+        for v in ("resnet18", "resnet50", "resnet152"):
+            c = VPAPlusController(profiles[v], cfg)
+            rows.append(run_experiment(f"VPA-{v}", c, {v: profiles[v]}, trace,
+                                       warm_start={v: 8},
+                                       reference_accuracy=REF_ACC))
+        for r in rows:
+            s = r.summary
+            print(f"{r.name:<22} {s['violation_rate']*100:6.2f}% "
+                  f"{s['p99_ms']:8.0f} {s['accuracy_loss']:8.2f}% "
+                  f"{s['avg_cost_units']:6.1f}")
+        print("(* beyond-paper extension; see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""End-to-end driver: serve REAL JAX models with batched requests behind the
+InfAdapter control loop (the serving analogue of "train a 100M model").
+
+A three-variant tinyllama-family ladder (2/4/6 layers) is served by the
+in-process engine; the controller profiles each variant live (readiness time
+and measured throughput), then adapts the variant set as synthetic load rises
+and falls. Everything here executes real model code — prefill, KV-cache
+decode, micro-batching — on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_autoscale.py [--seconds 30]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.adapter import ControllerConfig, InfAdapterController
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.profiles import VariantProfile
+from repro.serving.engine import InProcessServingEngine, Request
+
+
+def build_ladder():
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(d_model=128)
+    # pseudo-accuracies from the documented scaling-law proxy
+    return {
+        "tiny-2L": (base.replace(num_layers=2, name="tiny-2L"), 70.0),
+        "tiny-4L": (base.replace(num_layers=4, name="tiny-4L"), 75.0),
+        "tiny-6L": (base.replace(num_layers=6, name="tiny-6L"), 78.0),
+    }
+
+
+def calibrate(engine, variants, reps=3):
+    """Measure per-variant throughput (generate-RPS) + readiness live."""
+    profiles = {}
+    for name in variants:
+        engine.apply_allocation(0.0, {name: 1})
+        b = engine.backends[name]
+        prompts = np.ones((b.max_batch, b.prompt_len), np.int64)
+        t0 = time.time()
+        for _ in range(reps):
+            b.generate(prompts, max_new=8)
+        per_req = (time.time() - t0) / (reps * b.max_batch)
+        rps = 1.0 / per_req
+        profiles[name] = VariantProfile(
+            name=name, accuracy=variants[name][1], rt=b.readiness_s,
+            th_slope=rps, th_intercept=0.0, lat_base_ms=per_req * 1000,
+            lat_k_ms=per_req * 1000 * b.max_batch, max_units=4)
+        print(f"  {name}: {rps:6.1f} req/s per unit, readiness "
+              f"{b.readiness_s:.2f}s, p(1)~{profiles[name].p99_ms(1):.0f} ms")
+    engine.apply_allocation(0.0, {})
+    return profiles
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=int, default=24)
+    ap.add_argument("--interval", type=float, default=6.0)
+    args = ap.parse_args()
+
+    variants = build_ladder()
+    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16)
+    print("calibrating variants (live profiling)...")
+    profiles = calibrate(engine, variants)
+
+    slo_ms = 2000.0
+    cfg = ControllerConfig(interval_s=args.interval, budget=3, slo_ms=slo_ms,
+                           beta=0.05, gamma=0.05, reactive=True,
+                           queue_aware=True)
+    ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10),
+                                cfg)
+
+    rng = np.random.default_rng(0)
+    t_start = time.time()
+    rid = 0
+    next_ctrl = 0.0
+    print(f"\nserving for {args.seconds}s with a rising-falling load...")
+    while True:
+        now = time.time() - t_start
+        if now > args.seconds:
+            break
+        if now >= next_ctrl:
+            ctrl.monitor.advance_to(now)
+            d = ctrl.step(now, engine)
+            active = {k: v for k, v in d.allocation.units.items() if v}
+            print(f"  t={now:5.1f}s predicted={d.predicted_load:5.1f} rps "
+                  f"-> {active}")
+            next_ctrl += args.interval
+        # load profile: ramp up then down
+        phase = now / args.seconds
+        lam = 4.0 + 28.0 * np.sin(np.pi * phase) ** 2
+        n_new = rng.poisson(lam * 0.25)  # pump granularity 0.25s
+        for _ in range(n_new):
+            ctrl.monitor.record(now, 1)
+            req = Request(rid=rid, tokens=rng.integers(
+                0, 256, size=16).astype(np.int64), max_new=8, arrival=time.time())
+            engine.submit(req, ctrl.dispatcher.next_backend())
+            rid += 1
+        engine.pump(now)
+        time.sleep(0.05)
+
+    s = engine.summarize(slo_ms, best_accuracy=78.0)
+    print(f"\nserved {s['n_requests']} requests: "
+          f"viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
+          f"mean={s['mean_latency_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Generate the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md from
+reports/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m repro.analysis.report [--dir reports/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | 16×16 | 2×16×16 | HBM-est/dev | fallbacks |",
+           "|---|---|---|---|---|---|"]
+    by_key = {}
+    for d in rows:
+        if d.get("skipped"):
+            by_key.setdefault((d["arch"], d["shape"]), {})["skip"] = d["reason"]
+            continue
+        if "error" in d:
+            by_key.setdefault((d["arch"], d["shape"]), {})[d.get("mesh", "?")] = "ERROR"
+            continue
+        by_key.setdefault((d["arch"], d["shape"]), {})[d["mesh"]] = d
+    for (arch, shape), entry in sorted(by_key.items()):
+        if "skip" in entry:
+            out.append(f"| {arch} | {shape} | SKIP | SKIP | — | "
+                       f"{entry['skip'][:60]}… |")
+            continue
+        d1 = entry.get("16x16")
+        d2 = entry.get("2x16x16")
+        def cell(d):
+            if d is None:
+                return "—"
+            if d == "ERROR":
+                return "FAIL"
+            return f"✓ {d['compile_s']:.0f}s"
+        hbm = (f"{d1['hbm_estimate_bytes']/1e9:.1f} GB "
+               f"({'fits' if d1.get('fits_v5e_16gb') else 'needs μbatch'})"
+               if isinstance(d1, dict) else "—")
+        fb = len(d1.get("sharding_fallbacks", [])) if isinstance(d1, dict) else 0
+        out.append(f"| {arch} | {shape} | {cell(d1)} | {cell(d2)} | {hbm} | "
+                   f"{fb} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful | note |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in sorted(rows, key=lambda d: (d.get("arch", ""), d.get("shape", ""))):
+        if d.get("skipped") or "error" in d or d.get("mesh") != "16x16":
+            continue
+        note = (d.get("notes") or "")[:48]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']:.3f} | "
+            f"{d['memory_s']:.3f} | {d['collective_s']:.3f} | "
+            f"**{d['dominant']}** | {d['usefulness']:.2f} | {note} |")
+    return "\n".join(out)
+
+
+def inject(md_path: str, marker: str, table: str) -> None:
+    with open(md_path) as f:
+        text = f.read()
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{table}\n{end}"
+    if begin in text and end in text:
+        pre = text.split(begin)[0]
+        post = text.split(end)[1]
+        text = pre + block + post
+    elif begin in text:
+        text = text.replace(begin, block)
+    with open(md_path, "w") as f:
+        f.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--md", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    inject(args.md, "DRYRUN_TABLE", dryrun_table(rows))
+    inject(args.md, "ROOFLINE_TABLE", roofline_table(rows))
+    n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
+    n_skip = sum(1 for d in rows if d.get("skipped"))
+    n_err = sum(1 for d in rows if "error" in d)
+    print(f"tables written: ok={n_ok} skip={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Config registry. Importing this package registers every assigned arch."""
+from . import (deepseek_67b, gemma_2b, granite_moe_3b_a800m, hymba_1_5b,
+               internvl2_26b, mamba2_130m, qwen3_moe_235b_a22b, tinyllama_1_1b,
+               whisper_tiny, yi_6b)  # noqa: F401  (registration side effects)
+from .base import REGISTRY, ModelConfig, get_config, smoke_variant  # noqa: F401
+from .shapes import (SHAPES, InputShape, adapt_config_for_shape,  # noqa: F401
+                     get_shape, pairs)
+
+ALL_ARCHS = sorted(REGISTRY)

@@ -1,0 +1,184 @@
+"""The InfAdapter control loop + the VPA+/MS+ baseline controllers.
+
+Every ``interval_s`` (paper: 30 s) the adapter:
+  1. reads per-second load history from the monitor,
+  2. forecasts the next-minute max load,
+  3. solves Eq. 1 for a variant set + allocations + quotas,
+  4. enacts the config on the cluster (new variants become ready after their
+     readiness time rt_m — the zero-downtime create-then-remove semantics the
+     paper patched into VPA is the default here),
+  5. pushes quotas to the dispatcher.
+
+The cluster is abstract (``ClusterAPI``): the discrete-event simulator and the
+real JAX serving engine both implement it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Protocol, Set
+
+import numpy as np
+
+from repro.core.dispatcher import WeightedRoundRobinDispatcher
+from repro.core.monitoring import RateMonitor
+from repro.core.objective import Allocation, evaluate
+from repro.core.profiles import VariantProfile
+from repro.core.solver import SOLVERS
+
+
+class ClusterAPI(Protocol):
+    def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
+        """Reconfigure backends (create-then-remove; readiness delays apply)."""
+        ...
+
+    def loaded_variants(self, t: float) -> Set[str]:
+        ...
+
+
+@dataclass
+class ControllerConfig:
+    interval_s: float = 30.0
+    budget: int = 20
+    slo_ms: float = 750.0
+    alpha: float = 1.0
+    beta: float = 0.05
+    gamma: float = 0.01
+    solver: str = "exact"
+    min_load: float = 1.0          # floor for the predicted load
+    # --- beyond-paper extensions (off by default = paper-faithful) ---
+    reactive: bool = False         # emergency re-solve when observed load
+    reactive_check_s: float = 5.0  # exceeds provisioned capacity
+    queue_aware: bool = False      # inflate λ by backlog/interval to drain
+
+
+@dataclass
+class Decision:
+    t: float
+    predicted_load: float
+    allocation: Allocation
+
+
+class InfAdapterController:
+    """The paper's Adapter component (forecaster + solver)."""
+
+    def __init__(self, profiles: Mapping[str, VariantProfile],
+                 forecaster, cfg: ControllerConfig,
+                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None):
+        self.profiles = dict(profiles)
+        self.forecaster = forecaster
+        self.cfg = cfg
+        self.dispatcher = dispatcher or WeightedRoundRobinDispatcher()
+        self.monitor = RateMonitor()
+        self.decisions: List[Decision] = []
+
+    def predict(self) -> float:
+        recent = self.monitor.history(600)
+        lam = self.forecaster.predict(recent)
+        return max(lam, self.cfg.min_load)
+
+    def decide(self, t: float, cluster: ClusterAPI) -> Decision:
+        lam = self.predict()
+        if self.cfg.queue_aware:
+            backlog = getattr(cluster, "backlog", lambda t: 0.0)(t)
+            lam += backlog / self.cfg.interval_s   # drain within one interval
+        solver = SOLVERS[self.cfg.solver]
+        alloc = solver(self.profiles, lam, self.cfg.budget, self.cfg.slo_ms,
+                       alpha=self.cfg.alpha, beta=self.cfg.beta,
+                       gamma=self.cfg.gamma,
+                       loaded=cluster.loaded_variants(t))
+        d = Decision(t=t, predicted_load=lam, allocation=alloc)
+        self.decisions.append(d)
+        return d
+
+    def step(self, t: float, cluster: ClusterAPI) -> Decision:
+        d = self.decide(t, cluster)
+        cluster.apply_allocation(t, d.allocation.units)
+        if d.allocation.quotas:
+            self.dispatcher.set_weights(d.allocation.quotas)
+        return d
+
+    def maybe_react(self, t: float, cluster: ClusterAPI) -> Optional[Decision]:
+        """Beyond-paper: between intervals, if the observed short-window rate
+        exceeds the last decision's provisioned capacity, re-solve immediately
+        (MArk-style reactive scaling on top of the proactive loop)."""
+        if not self.cfg.reactive or not self.decisions:
+            return None
+        last = self.decisions[-1].allocation
+        cap = sum(self.profiles[m].throughput(n)
+                  for m, n in last.units.items() if n > 0)
+        observed = self.monitor.current_rate(window=5) * 1.1
+        backlog = getattr(cluster, "backlog", lambda t: 0.0)(t)
+        if observed > cap or backlog > cap * 2.0:
+            return self.step(t, cluster)
+        return None
+
+
+class MSPlusController(InfAdapterController):
+    """Model-Switching+ (baseline): single variant + predictive sizing,
+    same objective — the paper's MS extension."""
+
+    def __init__(self, profiles, forecaster, cfg: ControllerConfig, **kw):
+        cfg = ControllerConfig(**{**cfg.__dict__, "solver": "single"})
+        super().__init__(profiles, forecaster, cfg, **kw)
+
+
+class VPAPlusController:
+    """Kubernetes VPA, as patched by the paper (VPA+): one *fixed* variant;
+    the recommender tracks a usage percentile with headroom, scales up
+    immediately, scales down conservatively (hysteresis). Zero-downtime
+    create-then-remove is modeled by the cluster's readiness semantics.
+
+    Resource recommendation follows Autopilot-style target utilization:
+        n = ceil(cores needed for peak recent load / target_util)
+    using the variant's own throughput profile.
+    """
+
+    def __init__(self, profile: VariantProfile, cfg: ControllerConfig,
+                 target_util: float = 0.8, peak_window_s: int = 120,
+                 downscale_patience: int = 4,
+                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None):
+        self.profile = profile
+        self.cfg = cfg
+        self.target_util = target_util
+        self.peak_window_s = peak_window_s
+        self.downscale_patience = downscale_patience
+        self.dispatcher = dispatcher or WeightedRoundRobinDispatcher()
+        self.monitor = RateMonitor()
+        self.decisions: List[Decision] = []
+        self._below_count = 0
+        self._last_units = 0
+
+    def _units_for(self, lam: float) -> int:
+        p = self.profile
+        need = lam / max(self.target_util, 1e-6)
+        if p.th_slope <= 0:
+            return self.cfg.budget
+        n = int(np.ceil((need - p.th_intercept) / p.th_slope))
+        lo = p.min_feasible_units(self.cfg.slo_ms) or 1
+        return int(np.clip(n, lo, self.cfg.budget))
+
+    def step(self, t: float, cluster: ClusterAPI) -> Decision:
+        peak = self.monitor.history(self.peak_window_s)
+        lam = float(peak.max()) if len(peak) else self.cfg.min_load
+        lam = max(lam, self.cfg.min_load)
+        n = self._units_for(lam)
+        if n < self._last_units:
+            # paper: dropped the lower bound to scale up faster; scale DOWN
+            # keeps hysteresis so transient dips don't thrash
+            self._below_count += 1
+            if self._below_count < self.downscale_patience:
+                n = self._last_units
+            else:
+                self._below_count = 0
+        else:
+            self._below_count = 0
+        self._last_units = n
+        units = {self.profile.name: n}
+        cluster.apply_allocation(t, units)
+        alloc = evaluate({self.profile.name: self.profile}, units, lam,
+                         self.cfg.slo_ms, alpha=self.cfg.alpha,
+                         beta=self.cfg.beta, gamma=self.cfg.gamma)
+        self.dispatcher.set_weights({self.profile.name: 1.0})
+        d = Decision(t=t, predicted_load=lam, allocation=alloc)
+        self.decisions.append(d)
+        return d

@@ -1,0 +1,186 @@
+"""Workload forecasting — the paper's LSTM + simpler ensemble baselines.
+
+Paper-faithful configuration (§5 "Load forecaster"): a 25-unit LSTM layer
+followed by a 1-unit dense output, trained with Adam on MSE; input is the
+per-second load of the past 10 minutes (600 steps), target is the *maximum*
+load of the next minute. Implemented from scratch in JAX.
+
+Beyond-paper: ``SeasonalMaxForecaster`` (seasonal-naive max) and an ensemble
+that takes the elementwise max — measured against the LSTM in benchmarks
+(fig. "forecaster_mae").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+HISTORY = 600     # seconds of input history (10 min)
+HORIZON = 60      # predict max load over the next minute
+
+
+# ---------------------------------------------------------------------------
+# LSTM core
+# ---------------------------------------------------------------------------
+
+def lstm_init(key, hidden: int = 25, input_dim: int = 1) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = 1.0 / np.sqrt(hidden)
+    return {
+        "wx": jax.random.normal(k1, (input_dim, 4 * hidden)) * scale,
+        "wh": jax.random.normal(k2, (hidden, 4 * hidden)) * scale,
+        "b": jnp.zeros((4 * hidden,)),
+        "dense_w": jax.random.normal(k3, (hidden, 1)) * scale,
+        "dense_b": jnp.zeros((1,)),
+    }
+
+
+def lstm_apply(params: Dict, seq: jax.Array) -> jax.Array:
+    """seq: (B, T, 1) normalized loads -> (B,) predicted (normalized) max."""
+    B = seq.shape[0]
+    H = params["wh"].shape[0]
+
+    def cell(carry, x_t):
+        h, c = carry
+        z = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    (h, _), _ = jax.lax.scan(cell, init, seq.transpose(1, 0, 2))
+    out = h @ params["dense_w"] + params["dense_b"]
+    return out[:, 0]
+
+
+def _windows(trace: np.ndarray, history: int, horizon: int, stride: int = 30
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    xs, ys = [], []
+    for t in range(history, len(trace) - horizon, stride):
+        xs.append(trace[t - history:t])
+        ys.append(trace[t:t + horizon].max())
+    return np.asarray(xs, np.float32), np.asarray(ys, np.float32)
+
+
+@dataclass
+class LSTMForecaster:
+    """Paper's forecaster. Normalizes by the training trace's max."""
+    params: Dict
+    scale: float
+    history: int = HISTORY
+    horizon: int = HORIZON
+
+    def predict(self, recent: np.ndarray) -> float:
+        """recent: per-second loads (uses the trailing ``history`` seconds)."""
+        h = np.asarray(recent, np.float32)[-self.history:]
+        if len(h) < self.history:
+            h = np.pad(h, (self.history - len(h), 0), mode="edge")
+        x = jnp.asarray(h / self.scale)[None, :, None]
+        y = float(lstm_apply(self.params, x)[0]) * self.scale
+        return max(y, 0.0)
+
+
+def train_lstm_forecaster(trace: np.ndarray, *, hidden: int = 25,
+                          steps: int = 400, batch: int = 64,
+                          history: int = HISTORY, horizon: int = HORIZON,
+                          lr: float = 3e-3, seed: int = 0,
+                          ) -> Tuple[LSTMForecaster, List[float]]:
+    """Train on a per-second load trace (the paper uses 2 weeks of the
+    Twitter trace; we train on the generator's training split)."""
+    scale = float(max(trace.max(), 1.0))
+    xs, ys = _windows(trace, history, horizon)
+    xs, ys = xs / scale, ys / scale
+    params = lstm_init(jax.random.PRNGKey(seed), hidden)
+    opt_cfg = AdamConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                         schedule="cosine", grad_clip=1.0)
+    opt_state = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step_fn(params, opt_state, xb, yb):
+        def loss_fn(p):
+            pred = lstm_apply(p, xb[:, :, None])
+            return jnp.mean(jnp.square(pred - yb))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = adam_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    for s in range(steps):
+        idx = rng.integers(0, len(xs), size=batch)
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(xs[idx]),
+                                          jnp.asarray(ys[idx]))
+        losses.append(float(loss))
+    return LSTMForecaster(params=params, scale=scale, history=history,
+                          horizon=horizon), losses
+
+
+# ---------------------------------------------------------------------------
+# Baseline / ensemble forecasters (beyond paper)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MovingMaxForecaster:
+    """max over the recent window, with a safety headroom factor."""
+    window: int = 120
+    headroom: float = 1.1
+
+    def predict(self, recent: np.ndarray) -> float:
+        h = np.asarray(recent, np.float32)
+        if len(h) == 0:
+            return 0.0
+        return float(h[-self.window:].max() * self.headroom)
+
+
+@dataclass
+class SeasonalMaxForecaster:
+    """Seasonal-naive: max of the same minute one period ago and the recent
+    minute (captures diurnal repeats in the Twitter-like trace)."""
+    period: int = 3600
+    fallback: MovingMaxForecaster = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.fallback is None:
+            self.fallback = MovingMaxForecaster()
+        self._buffer: List[float] = []
+
+    def observe(self, value: float):
+        self._buffer.append(value)
+
+    def predict(self, recent: np.ndarray) -> float:
+        base = self.fallback.predict(recent)
+        buf = self._buffer
+        if len(buf) >= self.period:
+            seasonal = max(buf[-self.period:-self.period + HORIZON] or [0.0])
+            return max(base, seasonal)
+        return base
+
+
+@dataclass
+class EnsembleMaxForecaster:
+    """Elementwise max of member forecasts: conservative (SLO-protective)."""
+    members: Tuple = ()
+
+    def predict(self, recent: np.ndarray) -> float:
+        return max(m.predict(recent) for m in self.members)
+
+
+def forecast_mae(forecaster, trace: np.ndarray, history: int = HISTORY,
+                 horizon: int = HORIZON, stride: int = 60) -> Dict[str, float]:
+    """Evaluation used by the forecaster benchmark: MAE + under-prediction
+    rate (under-predictions are what cause SLO violations)."""
+    errs, unders = [], []
+    for t in range(history, len(trace) - horizon, stride):
+        pred = forecaster.predict(trace[:t])
+        true = trace[t:t + horizon].max()
+        errs.append(abs(pred - true))
+        unders.append(1.0 if pred < true else 0.0)
+    return {"mae": float(np.mean(errs)),
+            "under_rate": float(np.mean(unders))}

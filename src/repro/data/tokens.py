@@ -1,0 +1,35 @@
+"""Synthetic token data pipeline for LM training (offline container: no
+downloadable corpora). Generates a learnable Markov-chain token stream —
+losses drop well below the uniform-entropy floor iff the model learns."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticTokenPipeline:
+    """Order-1 Markov stream with a skewed transition matrix + shift labels."""
+
+    def __init__(self, vocab: int = 512, seq_len: int = 128, batch: int = 8,
+                 seed: int = 0, branching: int = 8):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        rng = np.random.default_rng(seed)
+        # each token can transition to `branching` successors w/ Zipf weights
+        self._succ = rng.integers(0, vocab, size=(vocab, branching))
+        w = 1.0 / np.arange(1, branching + 1)
+        self._w = w / w.sum()
+        self._rng = rng
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        toks = np.empty((self.batch, self.seq_len + 1), np.int32)
+        toks[:, 0] = self._rng.integers(0, self.vocab, self.batch)
+        for t in range(self.seq_len):
+            choice = self._rng.choice(self._succ.shape[1], size=self.batch,
+                                      p=self._w)
+            toks[:, t + 1] = self._succ[toks[:, t], choice]
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}

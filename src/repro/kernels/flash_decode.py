@@ -1,0 +1,95 @@
+"""Flash-decoding GQA attention for a single new token — Pallas TPU kernel.
+
+One query token per sequence attends to a long KV cache. The KV cache is
+tiled into BK-sized blocks (the innermost grid axis); running (m, l, acc)
+scratch implements the online softmax across blocks — the TPU analogue of
+flash-decoding's split-K, realized through the sequential TPU grid instead of
+a cross-SM reduction (hardware adaptation noted in DESIGN.md).
+
+An additive bias (B, C) carries slot validity (ring-buffer occupancy and
+sliding-window masks are computed by the caller — they depend on the cache
+discipline, not on the kernel).
+
+Grid: (B, KV, C/BK). Block shapes keep the whole GQA group resident:
+q (G, hd), k/v (BK, hd), bias (BK,) — VMEM ≈ G·hd + 2·BK·hd floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, bk: int, softcap: float, n_kv_blocks: int):
+    jk = pl.program_id(2)
+    G, hd = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (BK, hd)
+    bias = bias_ref[0].astype(jnp.float32)                 # (BK,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, BK)
+    s = s / np.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = s + bias[None, :]
+
+    m_prev = m_ref[...]                                    # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))  # (G,)
+    p = jnp.exp(s - m_new[:, None])
+    scale = jnp.exp(m_prev[:, 0] - m_new)
+    l_ref[...] = l_ref[...] * scale[:, None] + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # (G, hd)
+    acc_ref[...] = acc_ref[...] * scale[:, None] + pv
+    m_ref[...] = m_new[:, None]
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "bk", "interpret"))
+def flash_decode_bkhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                      bias: jax.Array, *, softcap: float = 0.0,
+                      bk: int = DEFAULT_BK, interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, KV, C, hd); bias: (B, C) -> out like q."""
+    B, KV, G, hd = q.shape
+    C = k.shape[2]
+    assert C % bk == 0, (C, bk)
+    n_k = C // bk
+    kernel = functools.partial(_decode_kernel, bk=bk, softcap=softcap,
+                               n_kv_blocks=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,115 @@
+"""Block-tiled causal flash attention (prefill/train) — Pallas TPU kernel.
+
+Online-softmax flash attention with GQA grouping and optional sliding window.
+Tiling is MXU-oriented: query/key blocks of 128 along the sequence, the full
+GQA group G and head_dim kept resident in VMEM per block.
+
+Grid: (B, KV_heads, S/BQ, S/BK) with the KV-block axis innermost — TPU grids
+execute sequentially, so the (m, l, acc) scratch accumulators implement the
+online softmax across KV blocks. Fully-masked KV blocks (block start beyond
+the causal frontier or behind the sliding window) are skipped with pl.when.
+
+VMEM budget per step (BQ=BK=128, G<=8, hd<=256, fp32 scratch):
+  q (G*BQ*hd) + k,v (BK*hd) + acc (G*BQ*hd) + scores (G*BQ*BK)  ≈ 2-3 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                    bq: int, bk: int, window: int, softcap: float,
+                    seq_len: int, n_kv_blocks: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    G, hd = q_ref.shape[2], q_ref.shape[4]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = jk * bk
+    # Block-level causal/window reachability (static per grid step).
+    reachable = k_start <= q_start + bq - 1
+    if window > 0:
+        reachable &= k_start + bk - 1 > q_start - window
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (BK, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (BK, hd)
+        s = jax.lax.dot_general(q.reshape(G * bq, hd), k,
+                                (((1,), (1,)), ((), ())))    # (G*BQ, BK)
+        s = s.reshape(G, bq, bk) / np.sqrt(hd)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos <= qpos
+        if window > 0:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None], s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (G, BQ)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(p.reshape(G * bq, bk), v,
+                                 (((1,), (0,)), ((), ())))   # (G*BQ, hd)
+        acc_ref[...] = acc_ref[...] * scale[..., None] + pv.reshape(G, bq, hd)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_prefill_bkhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       window: int = 0, softcap: float = 0.0,
+                       bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                       interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, S, hd); k, v: (B, KV, S, hd) -> out like q.
+
+    S must be divisible by the block sizes (ops.py pads).
+    """
+    B, KV, G, S, hd = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_k = S // bq, S // bk
+    kernel = functools.partial(
+        _prefill_kernel, bq=bq, bk=bk, window=window, softcap=softcap,
+        seq_len=S, n_kv_blocks=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),        # running max m
+            pltpu.VMEM((G, bq), jnp.float32),        # running sum l
+            pltpu.VMEM((G, bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles layout transposes between the model's (B, S, H, hd) convention and the
+kernels' (B, KV, G, S, hd) tiling layout, pads sequences/caches to block
+multiples, and selects interpret mode automatically (interpret=True everywhere
+except a real TPU backend — this container validates on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_decode as fd
+from repro.kernels import flash_prefill as fp
+from repro.kernels import ssd_scan as ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> Tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd). Causal (+window)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = bk = min(fp.DEFAULT_BQ, max(8, 1 << (S - 1).bit_length()))
+    qk = q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)   # (B,KV,G,S,hd)
+    kk = k.transpose(0, 2, 1, 3)                               # (B,KV,S,hd)
+    vk = v.transpose(0, 2, 1, 3)
+    qk, _ = _pad_to(qk, 3, bq)
+    kk, _ = _pad_to(kk, 2, bk)
+    vk, _ = _pad_to(vk, 2, bk)
+    out = fp.flash_prefill_bkhd(qk, kk, vk, window=window, softcap=softcap,
+                                bq=bq, bk=bk, interpret=_interpret())
+    out = out[:, :, :, :S]                                     # drop padding
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array, *,
+                 softcap: float = 0.0) -> jax.Array:
+    """q: (B,1,H,hd); k,v: (B,C,KV,hd); bias: (B,C) -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    C, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qk = q.reshape(B, KV, G, hd)
+    kk = k.transpose(0, 2, 1, 3)                               # (B,KV,C,hd)
+    vk = v.transpose(0, 2, 1, 3)
+    out = flash_decode_bkchd(qk, kk, vk, bias, softcap=softcap)
+    return out.reshape(B, 1, H, hd)
+
+
+def flash_decode_bkchd(q: jax.Array, k: jax.Array, v: jax.Array,
+                       bias: jax.Array, *, softcap: float = 0.0) -> jax.Array:
+    """Kernel-native layout: q (B,KV,G,hd); k,v (B,KV,C,hd); bias (B,C)
+    -> (B,KV,G,hd). No relayout copies (cache is stored in this layout)."""
+    B, KV, G, hd = q.shape
+    C = k.shape[2]
+    bk = min(fd.DEFAULT_BK, max(8, 1 << (C - 1).bit_length()))
+    kk, _ = _pad_to(k, 2, bk)
+    vk, _ = _pad_to(v, 2, bk)
+    bias_p, padded = _pad_to(bias, 1, bk)
+    if padded:
+        bias_p = bias_p.at[:, C:].set(-1e9)
+    return fd.flash_decode_bkhd(q, kk, vk, bias_p,
+                                softcap=softcap, bk=bk,
+                                interpret=_interpret())
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = ss.DEFAULT_CHUNK,
+             initial_state: Optional[jax.Array] = None):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,n). s % chunk == 0
+    (the model pads). Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    return ss.ssd_scan_chunked(x, dt, A, B, C, initial_state, chunk=chunk,
+                               interpret=_interpret())

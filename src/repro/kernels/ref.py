@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, obviously-correct forms).
+
+These are intentionally *independent* implementations (no chunking, no online
+softmax) so kernel tests compare two different algorithms for the same math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """Causal GQA attention. q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, k.astype(jnp.float32))
+    scores = scores / np.sqrt(hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    ok = kj <= qi
+    if window > 0:
+        ok &= kj > qi - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                     bias: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """One-token GQA decode. q: (B,1,H,hd); k,v: (B,C,KV,hd); bias: (B,C)
+    additive (-1e9 for invalid slots) -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    C, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qf, k.astype(jnp.float32)) / np.sqrt(hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = scores + bias[:, None, None, :].astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def ref_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, initial_state: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Naive sequential SSD recurrence (token by token).
+
+    x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,n).
+    h_t = exp(dt_t*A) * h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = h_t · C_t
+    Returns (y (b,s,h,p), final state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))   # (b,h)
+        dBx = jnp.einsum("bn,bhp->bhpn", B_t.astype(jnp.float32),
+                         (x_t * dt_t[..., None]).astype(jnp.float32))
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         B.transpose(1, 0, 2), C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

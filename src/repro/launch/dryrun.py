@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) pair, lower + compile the appropriate
+step function on the production mesh — single-pod 16×16 (256 chips) and
+multi-pod 2×16×16 (512 chips) — and record memory/cost/collective analysis
+for EXPERIMENTS.md §Dry-run and §Roofline.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run should see 512
+placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod] \
+      [--out reports/dryrun]
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax                          # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import roofline as rl                   # noqa: E402
+from repro.configs import (ALL_ARCHS, SHAPES, adapt_config_for_shape,  # noqa: E402
+                           get_config, get_shape)
+from repro.launch import steps as steps_mod                 # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.sharding.context import activation_sharding  # noqa: E402
+from repro.sharding.policy import (batch_specs, cache_specs,  # noqa: E402
+                                   param_specs)
+
+# Serving weights that exceed one device's HBM under 16-way TP fall back to
+# ZeRO-style extra sharding over the data axis (qwen3-moe-235b).
+SERVE_FSDP_BYTES = 12e9
+
+
+def _ns(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _compile_once(cfg, shape, mesh, microbatches: int = 1, zero: int = 3):
+    """Lower + compile one step function; return (compiled, seconds, report).
+
+    ``zero``: 3 = fully sharded params+optimizer over the data axis (default);
+    2 = optimizer state sharded, params TP-only (no per-layer weight gathers).
+    """
+    fn, args = steps_mod.input_specs(cfg, shape, microbatches=microbatches)
+    params = args[0]
+    param_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(params))
+    fsdp = (shape.kind == "train"
+            or param_bytes / mesh.shape["model"] > SERVE_FSDP_BYTES)
+    if shape.kind == "train" and zero == 2:
+        pspecs, report = param_specs(cfg, params, mesh, fsdp=False)
+        ospecs_m, _ = param_specs(cfg, params, mesh, fsdp=True)
+    else:
+        pspecs, report = param_specs(cfg, params, mesh, fsdp=fsdp)
+        ospecs_m = pspecs
+
+    if shape.kind == "train":
+        ospecs = type(args[1])(step=P(), mu=ospecs_m, nu=ospecs_m)
+        bspecs = batch_specs(cfg, args[2], mesh, shape.global_batch)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), None)
+    elif shape.kind == "prefill":
+        bspecs = batch_specs(cfg, args[1], mesh, shape.global_batch)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, bspecs))
+        out_sh = None
+    else:
+        cspecs = cache_specs(cfg, args[1], mesh, shape.global_batch)
+        tspecs = batch_specs(cfg, args[2], mesh, shape.global_batch)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, tspecs))
+        # cache comes back with the same sharding: no per-step resharding
+        out_sh = (None, _ns(mesh, cspecs))
+
+    t0 = time.time()
+    # NamedShardings carry the mesh; the activation-sharding context addition-
+    # ally pins batch shardings inside the model (§Perf hillclimb A).
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    gb = shape.global_batch
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    baxes = baxes if (gb % bsz == 0 and gb >= bsz) else None
+    with activation_sharding(mesh, baxes):
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+    return compiled, time.time() - t0, report, fsdp, param_bytes
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll, _ = rl.collective_bytes(hlo)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll, hlo)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            overrides: Optional[Dict] = None, verbose: bool = True,
+            microbatches: int = 1, zero: int = 3) -> Dict:
+    shape = get_shape(shape_name)
+    cfg = get_config(arch)
+    cfg, note = adapt_config_for_shape(cfg, shape)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": note}
+    cfg = cfg.replace(dtype="bfloat16",
+                      param_dtype="float32" if shape.kind == "train"
+                      else "bfloat16")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+    # 1) THE dry-run artifact: full config, layer-scanned, lower + compile.
+    compiled, compile_s, report, fsdp, param_bytes = _compile_once(
+        cfg.replace(scan_layers=True), shape, mesh, microbatches=microbatches,
+        zero=zero)
+    f_s, b_s, x_s, hlo = _cost_of(compiled)
+    mem = compiled.memory_analysis()
+    mem_per_dev = None
+    if mem is not None:
+        mem_per_dev = float(mem.argument_size_in_bytes
+                            + mem.output_size_in_bytes
+                            + mem.temp_size_in_bytes)
+
+    # 2) Cost calibration. XLA's cost analysis counts a while/scan body once,
+    # and the layer-scan adds stacked-cache slice traffic + XLA:CPU convert
+    # artifacts a TPU in-place/donated execution would not pay. Per-layer cost
+    # is therefore recovered from two fast *unrolled* compiles:
+    #   unroll-1L: v_1 = outside + layer
+    #   unroll-2L: v_2 = outside + 2·layer
+    #   => total(L) = outside + L·layer = 2·v_1 − v_2 + L·(v_2 − v_1)
+    # Exact for the uniform layer stacks all assigned archs use.
+    L = cfg.num_layers
+    t_cal = time.time()
+    # Serve shapes calibrate in fp32 and halve the byte/collective totals:
+    # XLA:CPU inserts bf16→f32 convert copies around every dot that a TPU's
+    # native-bf16 MXU never materializes; an all-fp32 run has no converts and
+    # exactly 2× the TPU-bf16 traffic. (Training is mixed fp32-state/bf16-
+    # compute, so its numbers are kept as-is and documented as upper bounds.)
+    if shape.kind == "train":
+        cal_base, byte_scale = cfg, 1.0
+    else:
+        cal_base = cfg.replace(dtype="float32", param_dtype="float32")
+        byte_scale = 0.5
+    cal1 = cal_base.replace(scan_layers=False, num_layers=1,
+                            enc_layers=min(cfg.enc_layers, 1))
+    compiled1, _, _, _, _ = _compile_once(cal1, shape, mesh,
+                                          microbatches=microbatches, zero=zero)
+    f_1, b_1, x_1, _ = _cost_of(compiled1)
+    cal2 = cal_base.replace(scan_layers=False, num_layers=2,
+                            enc_layers=min(cfg.enc_layers, 2))
+    compiled2, _, _, _, _ = _compile_once(cal2, shape, mesh,
+                                          microbatches=microbatches, zero=zero)
+    f_2, b_2, x_2, _ = _cost_of(compiled2)
+    cal_s = time.time() - t_cal
+
+    def extrap(v_1, v_2):
+        layer = max(v_2 - v_1, 0.0)
+        outside = max(v_1 - layer, 0.0)
+        return outside + L * layer
+
+    cost = {"flops": extrap(f_1, f_2) * microbatches,
+            "bytes accessed": extrap(b_1, b_2) * microbatches * byte_scale}
+    coll_total = extrap(x_1, x_2) * microbatches * byte_scale
+    baxes = [a for a in ("pod", "data") if a in mesh.shape]
+    bshard = 1
+    for a in baxes:
+        bshard *= mesh.shape[a]
+    if shape.global_batch % bshard or shape.global_batch < bshard:
+        bshard = 1   # batch replicated (long_500k)
+    heads_sharded = cfg.num_heads > 0 and cfg.num_heads % mesh.shape["model"] == 0
+    xf, xb, corr_note = rl.scan_corrections(
+        cfg, shape, batch_shard=bshard, model_shard=mesh.shape["model"],
+        heads_sharded=heads_sharded)
+    rep = rl.analyze(arch, shape_name, mesh_name, chips, cost, hlo,
+                     rl.model_flops(cfg, shape), memory_bytes=mem_per_dev,
+                     notes="; ".join(x for x in (note, corr_note) if x),
+                     extra_flops=xf, extra_bytes=xb,
+                     collective_override=coll_total)
+    hbm_est = rl.analytic_hbm_bytes(
+        cfg, shape, param_bytes_global=param_bytes,
+        model_shard=mesh.shape["model"],
+        batch_shard=bshard,
+        fsdp_shard=mesh.shape.get("data", 1) if fsdp else 1,
+        train=shape.kind == "train", microbatches=microbatches)
+    out = rep.to_dict()
+    out.update({
+        "skipped": False,
+        "compile_s": compile_s,
+        "calibration_compile_s": cal_s,
+        "hbm_estimate_bytes": hbm_est,
+        "fits_v5e_16gb": hbm_est < 16e9,
+        "fsdp": fsdp,
+        "param_bytes_global": param_bytes,
+        "sharding_fallbacks": report.fallbacks[:8],
+        "n_sharded": len(report.sharded),
+        "n_replicated": len(report.replicated),
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes if mem else None,
+            "output_bytes": mem.output_size_in_bytes if mem else None,
+            "temp_bytes": mem.temp_size_in_bytes if mem else None,
+        },
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: compile "
+              f"{compile_s:.1f}s, hbm-est "
+              f"{hbm_est/1e9:.2f} GB ({'fits' if hbm_est < 16e9 else 'OVER'} "
+              f"16GB v5e; xla-cpu temp {(mem_per_dev or 0)/1e9:.1f}), "
+              f"dominant={rep.dominant} "
+              f"(c={rep.compute_s*1e3:.2f}ms m={rep.memory_s*1e3:.2f}ms "
+              f"x={rep.collective_s*1e3:.2f}ms) useful={rep.usefulness:.2f}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = ALL_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                try:
+                    res = run_one(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append(tag)
+                    res = {"arch": arch, "shape": shape, "skipped": False,
+                           "error": str(e)[:2000]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2, default=str)
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("dry-run complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

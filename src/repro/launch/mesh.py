@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Target: TPU v5e. Single pod = 16×16 (256 chips, axes data×model);
+multi-pod = 2×16×16 (512 chips, axes pod×data×model) where the pod axis is an
+outer data-parallel / replica axis (gradient all-reduce over DCN in training;
+independent serving replicas — i.e. the resource pools InfAdapter's solver
+allocates variants into).
+
+Functions, not module constants: importing this module never touches jax
+device state (the 512-device XLA flag is set only by dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_axis_size(mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out

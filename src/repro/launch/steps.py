@@ -1,0 +1,139 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs (no
+device allocation) for the function the shape's kind lowers:
+  train_4k     -> train_step(params, opt, batch)  (loss + Adam update, remat)
+  prefill_32k  -> prefill_step(params, batch)     (prompt -> cache + logits)
+  decode_*     -> serve_step(params, cache, toks) (ONE token, KV/state cache)
+
+Audio/VLM frontends are stubs per the assignment: ``input_specs`` provides
+precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.model import AUDIO_FRAME_DIM, VISION_EMBED_DIM, build_model
+from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+TRAIN_ADAM = AdamConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = shape.seq_len
+    batch: Dict[str, Any] = {}
+    if shape.kind == "train":
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if cfg.is_encoder_decoder and shape.kind in ("train", "prefill"):
+        batch["frames"] = sds((B, cfg.enc_seq, AUDIO_FRAME_DIM), cfg.dtype)
+    if cfg.frontend == "vision_patches" and shape.kind in ("train", "prefill"):
+        batch["patch_embeds"] = sds((B, cfg.num_frontend_tokens,
+                                     VISION_EMBED_DIM), cfg.dtype)
+    return batch
+
+
+def params_shapes(cfg: ModelConfig):
+    m = build_model(cfg)
+    return jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+
+
+def opt_shapes(params):
+    return jax.eval_shape(adam_init, params)
+
+
+def cache_shapes(cfg: ModelConfig, shape: InputShape):
+    m = build_model(cfg)
+    return jax.eval_shape(
+        lambda: m.init_cache(shape.global_batch, shape.seq_len))
+
+
+def make_train_step(cfg: ModelConfig, microbatches: int = 1) -> Callable:
+    """Training step: loss + Adam update. ``microbatches > 1`` enables
+    gradient accumulation (sequential lax.scan over batch slices) — trades a
+    k× smaller activation working set for k× weight re-streaming."""
+    m = build_model(cfg)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = m.loss(p, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                acc = carry
+                mb_batch = jax.tree_util.tree_map(
+                    lambda x: slice_mb(x, i), batch)
+                (l, met), g = grads_of(params, mb_batch)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, (l, met["aux_loss"])
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, auxes) = jax.lax.scan(
+                body, zeros, jnp.arange(microbatches))
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = {"ce_loss": loss, "aux_loss": jnp.mean(auxes)}
+        params, opt_state, opt_metrics = adam_update(TRAIN_ADAM, grads,
+                                                     opt_state, params)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    m = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return m.prefill(params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    m = build_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        return m.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                microbatches: int = 1) -> Tuple[Callable, Tuple]:
+    """Returns (step_fn, example ShapeDtypeStruct args)."""
+    params = params_shapes(cfg)
+    if shape.kind == "train":
+        fn = make_train_step(cfg, microbatches=microbatches)
+        return fn, (params, opt_shapes(params), batch_specs_for(cfg, shape))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len)
+        return fn, (params, batch_specs_for(cfg, shape))
+    # decode
+    fn = make_serve_step(cfg)
+    cache = cache_shapes(cfg, shape)
+    toks = sds((shape.global_batch,), jnp.int32)
+    return fn, (params, cache, toks)

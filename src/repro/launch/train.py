@@ -1,0 +1,76 @@
+"""Training launcher.
+
+CPU demo: train a reduced config with the full substrate. On TPU the same
+``make_train_step`` lowers against ``make_production_mesh()`` with the
+sharding policy (exactly what launch/dryrun.py proves for every arch × shape).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 100 --batch 8 --seq 128 [--microbatches 2]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, smoke_variant
+from repro.data.tokens import SyntheticTokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import adam_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the production config (TPU-scale; CPU will OOM)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory (resume if it has checkpoints)")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = smoke_variant(cfg).replace(num_layers=4, d_model=256, d_ff=512,
+                                         vocab_size=512, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, microbatches={args.microbatches}")
+
+    step = jax.jit(make_train_step(cfg, microbatches=args.microbatches))
+    opt = adam_init(params)
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, meta = ckpt.restore(args.ckpt_dir, {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        start = ckpt.latest_step(args.ckpt_dir) + 1
+        print(f"resumed from step {start - 1}")
+    pipe = SyntheticTokenPipeline(vocab=cfg.vocab_size, seq_len=args.seq,
+                                  batch=args.batch)
+    t0 = time.time()
+    for i in range(start, start + args.steps):
+        params, opt, metrics = step(params, opt, pipe.next_batch())
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i, {"params": params, "opt": opt},
+                      metadata={"loss": float(metrics['loss'])})
+            ckpt.prune(args.ckpt_dir, keep=3)
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s), "
+          f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

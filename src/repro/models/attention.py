@@ -1,0 +1,229 @@
+"""GQA attention: train/prefill (full-sequence causal, optional sliding window)
+and single-token decode against a (possibly ring-buffered) KV cache.
+
+Two execution paths:
+  * pure-jnp einsum path (always available; oracle for the kernels)
+  * Pallas path (``cfg.use_pallas``) via ``repro.kernels.ops``
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, truncated_normal_init
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal_init(ks[0], (D, H * hd), 1.0, pd),
+        "wk": truncated_normal_init(ks[1], (D, KV * hd), 1.0, pd),
+        "wv": truncated_normal_init(ks[2], (D, KV * hd), 1.0, pd),
+        "wo": truncated_normal_init(ks[3], (H * hd, D), 1.0, pd),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def causal_mask_bias(q_len: int, kv_len: int, q_offset: int, window) -> jax.Array:
+    """(q_len, kv_len) additive bias; window==0 means full causal.
+
+    ``window`` may be a Python int or a traced scalar (per-layer windows in
+    hybrid models scanned over layers).
+    """
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    ok = kj <= qi
+    win = jnp.asarray(window)
+    ok &= (kj > qi - win) | (win <= 0)
+    return jnp.where(ok, 0.0, -1e9).astype(jnp.float32)
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: Optional[jax.Array],
+               softcap: float = 0.0) -> jax.Array:
+    """q: (B,S,H,hd)  k,v: (B,T,KV,hd)  bias: (S,T) or (B,S,T) additive.
+
+    Operands stay in their native dtype (bf16 in production) with fp32
+    accumulation via ``preferred_element_type`` — avoids materializing fp32
+    copies of the K/V cache every step (§Perf hillclimb C: −45% decode HBM
+    traffic). Softmax runs in fp32; probabilities are cast back to the value
+    dtype for the PV matmul (flash-attention convention). For fp32 inputs the
+    math is bit-identical to the previous all-fp32 form.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if bias is not None:
+        if bias.ndim == 2:
+            scores = scores + bias[None, None, None, :, :]
+        else:
+            scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# Above this sequence length the jnp path switches to the q-block flash form
+# (never materializes the (S, S) score matrix). The Pallas kernel is used when
+# cfg.use_pallas regardless.
+FLASH_JNP_THRESHOLD = 2048
+FLASH_JNP_BQ = 512
+
+
+def flash_attend_qblocks(q: jax.Array, k: jax.Array, v: jax.Array, window,
+                         softcap: float = 0.0, bq: int = FLASH_JNP_BQ,
+                         q_offset: int = 0) -> jax.Array:
+    """Blockwise causal attention in pure jnp: lax.scan over query blocks,
+    each block attending to the full K/V with a mask. Memory is O(bq·S) per
+    block instead of O(S²). (The scanned body is cost-corrected analytically
+    in the dry-run roofline — see repro.analysis.roofline.)"""
+    B, S, H, hd = q.shape
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // bq
+    qb = q.reshape(B, nq, bq, H, hd).transpose(1, 0, 2, 3, 4)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def block(carry, inp):
+        # rematerialized in the backward pass: the (bq, S) score/prob blocks
+        # are recomputed instead of stored (flash-attention backward)
+        qi, idx = inp
+        bias = causal_mask_bias(bq, S, idx * bq + q_offset, window)
+        out = gqa_attend(qi, k, v, bias, softcap)
+        return carry, out
+
+    _, outs = jax.lax.scan(block, None, (qb, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, hd)
+    from repro.sharding.context import constrain_batch
+    return constrain_batch(out[:, :S])
+
+
+def attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
+                      window: Optional[int] = None) -> jax.Array:
+    """Full-sequence causal self-attention (training / prefill)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)), KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.sliding_window if window is None else window
+    S = x.shape[1]
+    if cfg.use_pallas and isinstance(w, int):
+        from repro.kernels import ops as kops
+        out = kops.flash_prefill(q, k, v, window=w, softcap=cfg.attn_logit_softcap)
+    elif S > FLASH_JNP_THRESHOLD:
+        out = flash_attend_qblocks(q, k, v, w, cfg.attn_logit_softcap)
+    else:
+        bias = causal_mask_bias(S, S, 0, w)
+        out = gqa_attend(q, k, v, bias, cfg.attn_logit_softcap)
+    out = out.reshape(x.shape[0], x.shape[1], H * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+
+
+def bidirectional_attention(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    """Encoder self-attention (no mask, no rope — whisper-style)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)), KV, hd)
+    out = gqa_attend(q, k, v, None)
+    return jnp.einsum("bse,ed->bsd", out.reshape(x.shape[0], x.shape[1], H * hd),
+                      p["wo"].astype(dt))
+
+
+def cross_attention(cfg: ModelConfig, p: Dict, x: jax.Array, enc: jax.Array) -> jax.Array:
+    """Decoder cross-attention over encoder outputs."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("btd,de->bte", enc, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("btd,de->bte", enc, p["wv"].astype(dt)), KV, hd)
+    out = gqa_attend(q, k, v, None)
+    return jnp.einsum("bse,ed->bsd", out.reshape(x.shape[0], x.shape[1], H * hd),
+                      p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Decode against a KV cache (one new token)
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, pos: jax.Array, window: Optional[int] = None,
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, 1, D); k/v_cache: (B, KV, C, hd) where C = cache capacity.
+
+    Cache layout is (B, KV, C, hd) — the exact operand layout of the decode
+    attention dot, so no per-step relayout/transpose copy is paid (§Perf
+    hillclimb C iteration 2: the (B, C, KV, hd) layout showed transpose
+    buffers in the lowered IR every step).
+
+    ``pos``: (B,) int32 absolute position of the new token. When the cache
+    capacity C is smaller than the max position (sliding window) the cache is
+    a ring buffer indexed by ``pos % C``.
+
+    Returns (attn_out (B,1,D), new_k_cache, new_v_cache).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    B, C = k_cache.shape[0], k_cache.shape[2]
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)), KV, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % C).astype(jnp.int32)                       # (B,)
+    batch_idx = jnp.arange(B)
+    k_cache = k_cache.astype(dt).at[batch_idx, :, slot].set(k[:, 0])
+    v_cache = v_cache.astype(dt).at[batch_idx, :, slot].set(v[:, 0])
+
+    w = cfg.sliding_window if window is None else window
+    # validity of each cache slot: the absolute position stored in slot j is
+    # the largest value p <= pos with p % C == j; valid iff pos - p < min(C, pos+1)
+    j = jnp.arange(C)[None, :]
+    stored_pos = pos[:, None] - ((pos[:, None] - j) % C)     # (B, C) abs positions
+    ok = stored_pos >= 0
+    ok &= stored_pos >= jnp.maximum(pos[:, None] - C + 1, 0)
+    if w is not None and not (isinstance(w, int) and w == 0):
+        win = jnp.asarray(w)
+        ok &= (stored_pos > pos[:, None] - win) | (win <= 0)
+    bias = jnp.where(ok, 0.0, -1e9).astype(jnp.float32)      # (B, C)
+
+    qg = q.reshape(B, KV, H // KV, hd)                       # (B,KV,G,hd)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_decode_bkchd(qg, k_cache, v_cache, bias,
+                                      softcap=cfg.attn_logit_softcap)
+    else:
+        scores = jnp.einsum("bkgh,bkth->bkgt", qg, k_cache,
+                            preferred_element_type=jnp.float32) / np.sqrt(hd)
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        scores = scores + bias[:, None, None, :]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgt,bkth->bkgh", probs.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+        out = out.astype(dt)
+    out = out.reshape(B, 1, H * hd)
+    attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    return attn, k_cache, v_cache

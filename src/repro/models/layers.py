@@ -1,0 +1,135 @@
+"""Shared neural building blocks (pure JAX, functional, no framework deps)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int) -> np.ndarray:
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d_model)
+    out = np.zeros((max_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": truncated_normal_init(k1, (D, F), 1.0, pd),
+        "wo": truncated_normal_init(k3, (F, D), 1.0, pd),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["wg"] = truncated_normal_init(k2, (D, F), 1.0, pd)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_type == "geglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with vocab padding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"table": truncated_normal_init(k1, (cfg.padded_vocab, cfg.d_model), 1.0, pd)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal_init(k2, (cfg.d_model, cfg.padded_vocab), 1.0, pd)
+    return p
+
+
+def embed(cfg: ModelConfig, p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"].astype(x.dtype))
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def vocab_mask(cfg: ModelConfig) -> np.ndarray:
+    """Additive mask: 0 for real vocab entries, -1e9 for padding."""
+    m = np.zeros((cfg.padded_vocab,), np.float32)
+    m[cfg.vocab_size:] = -1e9
+    return m

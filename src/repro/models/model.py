@@ -1,0 +1,486 @@
+"""Language-model assembly for all assigned architecture families.
+
+One ``LM`` class covers dense / moe / ssm / hybrid / vlm / audio configs:
+layers are parameter-stacked and executed with ``lax.scan`` (95-layer models
+compile fast), caches are stacked alongside. Whisper-style encoder-decoder is
+handled with a separate encoder stack + cross-attention in the decoder blocks.
+
+Public (pure, jittable) methods:
+  init(rng)                       -> params
+  apply(params, batch)            -> logits (teacher forcing)
+  loss(params, batch)             -> (scalar, metrics)
+  init_cache(batch_size, max_len) -> cache pytree
+  prefill(params, batch)          -> (last-token logits, cache)
+  decode_step(params, cache, tok) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import constrain_batch
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import (apply_mlp, embed, init_embed, init_mlp,
+                                 rms_norm, sinusoidal_positions,
+                                 truncated_normal_init, unembed, vocab_mask)
+
+AUDIO_FRAME_DIM = 80     # stub frontend: mel-frame embedding width
+VISION_EMBED_DIM = 1024  # stub frontend: ViT patch embedding width
+
+
+def _layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full attention)."""
+    L = cfg.num_layers
+    w = np.full((L,), cfg.sliding_window, np.int32)
+    if cfg.sliding_window and cfg.global_layer_every:
+        w[::cfg.global_layer_every] = 0
+    return w
+
+
+def _uniform_window(cfg: ModelConfig):
+    """Static per-layer window if all layers share one, else None."""
+    w = _layer_windows(cfg)
+    return int(w[0]) if (w == w[0]).all() else None
+
+
+def _layer_slice(tree, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def _stack_layers(dicts):
+    if not dicts or not dicts[0]:
+        return {}
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *dicts)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+        self._vmask = vocab_mask(cfg)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _init_layer(self, key) -> Dict:
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        p: Dict = {"ln1": jnp.zeros((cfg.d_model,), pd)}
+        if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            p["attn"] = attn.init_attention(ks[0], cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            p["ssm"] = ssd_mod.init_ssm(ks[1], cfg)
+        if cfg.family == "hybrid":
+            p["mix_scale"] = jnp.zeros((2,), pd)  # learned attn/ssm fusion
+        if cfg.family == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[2], cfg)
+            p["ln2"] = jnp.zeros((cfg.d_model,), pd)
+        elif cfg.family in ("dense", "vlm", "audio", "hybrid"):
+            p["ffn"] = init_mlp(ks[3], cfg)
+            p["ln2"] = jnp.zeros((cfg.d_model,), pd)
+        if cfg.is_encoder_decoder:
+            p["xattn"] = attn.init_attention(ks[4], cfg, cross=True)
+            p["lnx"] = jnp.zeros((cfg.d_model,), pd)
+        return p
+
+    def _init_encoder_layer(self, key) -> Dict:
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), pd),
+            "attn": attn.init_attention(k1, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), pd),
+            "ffn": init_mlp(k2, cfg),
+        }
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(rng, 8)
+        params: Dict = {"embed": init_embed(keys[0], cfg),
+                        "final_norm": jnp.zeros((cfg.d_model,), pd)}
+        lkeys = jax.random.split(keys[1], cfg.num_layers)
+        params["layers"] = jax.vmap(self._init_layer)(lkeys)
+        if cfg.is_encoder_decoder:
+            ekeys = jax.random.split(keys[2], cfg.enc_layers)
+            params["enc_layers"] = jax.vmap(self._init_encoder_layer)(ekeys)
+            params["enc_in"] = truncated_normal_init(
+                keys[3], (AUDIO_FRAME_DIM, cfg.d_model), 1.0, pd)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), pd)
+        if cfg.frontend == "vision_patches":
+            params["vis_proj"] = truncated_normal_init(
+                keys[4], (VISION_EMBED_DIM, cfg.d_model), 1.0, pd)
+        return params
+
+    # ------------------------------------------------------------------
+    # decoder block (full-sequence path: train / prefill)
+    # ------------------------------------------------------------------
+    def _block(self, lp: Dict, x: jax.Array, positions: jax.Array,
+               window, enc: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        x = constrain_batch(x)   # keep batch sharded across layer boundaries
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family == "ssm":
+            x = x + ssd_mod.ssm_forward(cfg, lp["ssm"], h)
+        elif cfg.family == "hybrid":
+            a = attn.attention_forward(cfg, lp["attn"], h, positions, window)
+            s = ssd_mod.ssm_forward(cfg, lp["ssm"], h)
+            sc = jax.nn.sigmoid(lp["mix_scale"].astype(jnp.float32))
+            x = x + (sc[0] * a.astype(jnp.float32)
+                     + sc[1] * s.astype(jnp.float32)).astype(x.dtype)
+        else:
+            x = x + attn.attention_forward(cfg, lp["attn"], h, positions, window)
+        if cfg.is_encoder_decoder and enc is not None:
+            hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+            x = x + attn.cross_attention(cfg, lp["xattn"], hx, enc)
+        if "ffn" in lp:
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, metrics = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+                aux = metrics["aux_loss"]
+            else:
+                y = apply_mlp(cfg, lp["ffn"], h2)
+            x = x + y
+        return x, aux
+
+    def _run_layers(self, params: Dict, x: jax.Array, positions: jax.Array,
+                    enc: Optional[jax.Array], train: bool) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        if not cfg.scan_layers:
+            windows = _layer_windows(cfg)
+            block = self._block
+            if cfg.remat and train:
+                block = jax.checkpoint(block, prevent_cse=False,
+                                       static_argnums=(3,))
+            aux_total = jnp.zeros((), jnp.float32)
+            for i in range(cfg.num_layers):
+                lp = _layer_slice(params["layers"], i)
+                x, aux = block(lp, x, positions, int(windows[i]), enc)
+                aux_total = aux_total + aux
+            return x, aux_total / cfg.num_layers
+        uw = _uniform_window(cfg)
+        if uw is not None:
+            # uniform window -> keep it static (enables the Pallas path)
+            def body(carry, lp):
+                y, aux = self._block(lp, carry, positions, uw, enc)
+                return y, aux
+            xs = params["layers"]
+        else:
+            def body(carry, inp):
+                lp, w = inp
+                y, aux = self._block(lp, carry, positions, w, enc)
+                return y, aux
+            xs = (params["layers"], jnp.asarray(_layer_windows(cfg)))
+
+        if cfg.remat and train:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, auxes = jax.lax.scan(body, x, xs)
+        return x, jnp.mean(auxes)
+
+    # ------------------------------------------------------------------
+    # encoder (whisper)
+    # ------------------------------------------------------------------
+    def encode(self, params: Dict, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        x = jnp.einsum("btf,fd->btd", frames.astype(dt), params["enc_in"].astype(dt))
+        pos = jnp.asarray(sinusoidal_positions(frames.shape[1], cfg.d_model))
+        x = x + pos[None].astype(dt)
+
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            carry = carry + attn.bidirectional_attention(cfg, lp["attn"], h)
+            h2 = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+            carry = carry + apply_mlp(cfg, lp["ffn"], h2)
+            return carry, None
+
+        if not cfg.scan_layers:
+            for i in range(cfg.enc_layers):
+                x, _ = body(x, _layer_slice(params["enc_layers"], i))
+        else:
+            x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------
+    # embed input sequence (handles multimodal prefixes)
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params: Dict, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        x = embed(cfg, params["embed"], batch["tokens"], dt)
+        if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+            vis = jnp.einsum("bpe,ed->bpd", batch["patch_embeds"].astype(dt),
+                             params["vis_proj"].astype(dt))
+            x = jnp.concatenate([vis, x], axis=1)
+        if cfg.rope_theta <= 0 and not cfg.is_encoder_decoder:
+            pos = jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model))
+            x = x + pos[None].astype(dt)
+        if cfg.is_encoder_decoder:
+            pos = jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model))
+            x = x + pos[None].astype(dt)
+        return x
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (train)
+    # ------------------------------------------------------------------
+    def apply(self, params: Dict, batch: Dict, train: bool = True
+              ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc = None
+        if cfg.is_encoder_decoder:
+            enc = self.encode(params, batch["frames"])
+        x = constrain_batch(self._embed_inputs(params, batch))
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, aux = self._run_layers(params, x, positions, enc, train)
+        x = rms_norm(constrain_batch(x), params["final_norm"], cfg.norm_eps)
+        logits = unembed(cfg, params["embed"], x)
+        logits = logits + jnp.asarray(self._vmask, logits.dtype)
+        return logits, aux
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        logits, aux = self.apply(params, batch, train=True)
+        labels = batch["labels"]
+        n_prefix = logits.shape[1] - labels.shape[1]  # multimodal prefix tokens
+        logits = logits[:, n_prefix:]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(
+            constrain_batch(logits).astype(jnp.float32), axis=-1)
+        nll = constrain_batch(
+            -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0])
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = loss + cfg.aux_loss_coef * aux
+        return total, {"ce_loss": loss, "aux_loss": aux}
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_capacity(self, max_len: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window and cfg.family != "hybrid":
+            return min(max_len, cfg.sliding_window)
+        if cfg.family == "hybrid" and cfg.sliding_window:
+            return min(max_len, cfg.sliding_window)
+        return max_len
+
+    def init_cache(self, batch_size: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        cache: Dict = {"pos": jnp.zeros((batch_size,), jnp.int32)}
+        if cfg.family != "ssm":
+            C = self.cache_capacity(max_len)
+            # (B, KV, C, hd): the decode dot's native operand layout (§Perf C)
+            cache["k"] = jnp.zeros((L, batch_size, KV, C, hd), dt)
+            cache["v"] = jnp.zeros((L, batch_size, KV, C, hd), dt)
+        if cfg.family in ("ssm", "hybrid"):
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            cache["conv"] = jnp.zeros((L, batch_size, cfg.conv_width - 1, ch), dt)
+            cache["ssd"] = jnp.zeros(
+                (L, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+        if cfg.is_encoder_decoder:
+            cache["enc"] = jnp.zeros((batch_size, cfg.enc_seq, cfg.d_model), dt)
+        return cache
+
+    # ------------------------------------------------------------------
+    # prefill: run the full prompt, build the cache
+    # ------------------------------------------------------------------
+    def prefill(self, params: Dict, batch: Dict, max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        enc = None
+        if cfg.is_encoder_decoder:
+            enc = self.encode(params, batch["frames"])
+        x = self._embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        C = self.cache_capacity(max_len or S)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        uw = _uniform_window(cfg)
+        dt = self.compute_dtype
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def body(carry, inp):
+            if uw is not None:
+                lp, w = inp, uw
+            else:
+                lp, w = inp
+            x_in = carry
+            out = {}
+            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+            if cfg.family == "ssm":
+                y, (conv_st, ssd_st) = ssd_mod.ssm_forward(cfg, lp["ssm"], h,
+                                                           return_cache=True)
+                x_new = x_in + y
+                out.update(conv=conv_st, ssd=ssd_st)
+            elif cfg.family == "hybrid":
+                a = attn.attention_forward(cfg, lp["attn"], h, positions, w)
+                s, (conv_st, ssd_st) = ssd_mod.ssm_forward(cfg, lp["ssm"], h,
+                                                           return_cache=True)
+                sc = jax.nn.sigmoid(lp["mix_scale"].astype(jnp.float32))
+                x_new = x_in + (sc[0] * a.astype(jnp.float32)
+                                + sc[1] * s.astype(jnp.float32)).astype(x_in.dtype)
+                out.update(conv=conv_st, ssd=ssd_st)
+            else:
+                x_new = x_in + attn.attention_forward(cfg, lp["attn"], h,
+                                                      positions, w)
+            if cfg.family != "ssm":
+                # recompute K/V once for the cache (cheap relative to attn)
+                hh = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+                k = jnp.einsum("bsd,de->bse", hh, lp["attn"]["wk"].astype(dt))
+                v = jnp.einsum("bsd,de->bse", hh, lp["attn"]["wv"].astype(dt))
+                k = k.reshape(B, S, KV, hd)
+                v = v.reshape(B, S, KV, hd)
+                k = attn.apply_rope(k, positions, cfg.rope_theta)
+                k = k.transpose(0, 2, 1, 3)        # (B, KV, S, hd)
+                v = v.transpose(0, 2, 1, 3)
+                kc = jnp.zeros((B, KV, C, hd), dt)
+                vc = jnp.zeros((B, KV, C, hd), dt)
+                if S >= C:
+                    # keep last C positions, ring-aligned: slot = pos % C
+                    tail_k, tail_v = k[:, :, S - C:], v[:, :, S - C:]
+                    roll = (S - C) % C
+                    slots = (jnp.arange(C) + roll) % C
+                    kc = kc.at[:, :, slots].set(tail_k)
+                    vc = vc.at[:, :, slots].set(tail_v)
+                else:
+                    kc = kc.at[:, :, :S].set(k)
+                    vc = vc.at[:, :, :S].set(v)
+                out.update(k=kc, v=vc)
+            if cfg.is_encoder_decoder and enc is not None:
+                hx = rms_norm(x_new, lp["lnx"], cfg.norm_eps)
+                x_new = x_new + attn.cross_attention(cfg, lp["xattn"], hx, enc)
+            if "ffn" in lp:
+                h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+                else:
+                    y = apply_mlp(cfg, lp["ffn"], h2)
+                x_new = x_new + y
+            return x_new, out
+
+        if not cfg.scan_layers:
+            windows = _layer_windows(cfg)
+            outs = []
+            for i in range(cfg.num_layers):
+                lp = _layer_slice(params["layers"], i)
+                inp = lp if uw is not None else (lp, jnp.asarray(windows[i]))
+                x, out = body(x, inp)
+                outs.append(out)
+            layer_caches = _stack_layers(outs)
+        else:
+            xs = params["layers"] if uw is not None else (
+                params["layers"], jnp.asarray(_layer_windows(cfg)))
+            x, layer_caches = jax.lax.scan(body, x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(cfg, params["embed"], x[:, -1:])
+        logits = logits + jnp.asarray(self._vmask, logits.dtype)
+
+        cache: Dict = {"pos": jnp.full((B,), S, jnp.int32)}
+        cache.update(layer_caches)
+        if cfg.is_encoder_decoder:
+            cache["enc"] = enc
+        return logits[:, 0], cache
+
+    # ------------------------------------------------------------------
+    # one-token decode against the cache
+    # ------------------------------------------------------------------
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        """tokens: (B,) int32 -> (logits (B, V), updated cache)."""
+        cfg = self.cfg
+        dt = self.compute_dtype
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = embed(cfg, params["embed"], tokens[:, None], dt)
+        if cfg.rope_theta <= 0 or cfg.is_encoder_decoder:
+            posenc = jnp.asarray(
+                sinusoidal_positions(1, cfg.d_model))  # slot-0 fallback
+            # gather true sinusoidal row for each position
+            half = cfg.d_model // 2
+            inv = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
+            ang = pos[:, None].astype(jnp.float32) * inv[None]
+            pe = jnp.zeros((B, cfg.d_model), jnp.float32)
+            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+            x = x + pe[:, None, :].astype(dt)
+        enc = cache.get("enc")
+        windows = jnp.asarray(_layer_windows(cfg))
+
+        def body(carry, inp):
+            lp, w, lc = inp
+            x_in = carry
+            new_lc = {}
+            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+            if cfg.family == "ssm":
+                y, conv_st, ssd_st = ssd_mod.ssm_decode(cfg, lp["ssm"], h,
+                                                        lc["conv"], lc["ssd"])
+                x_new = x_in + y
+                new_lc.update(conv=conv_st, ssd=ssd_st)
+            elif cfg.family == "hybrid":
+                a, kc, vc = attn.decode_attention(cfg, lp["attn"], h, lc["k"],
+                                                  lc["v"], pos, w)
+                s, conv_st, ssd_st = ssd_mod.ssm_decode(cfg, lp["ssm"], h,
+                                                        lc["conv"], lc["ssd"])
+                sc = jax.nn.sigmoid(lp["mix_scale"].astype(jnp.float32))
+                x_new = x_in + (sc[0] * a.astype(jnp.float32)
+                                + sc[1] * s.astype(jnp.float32)).astype(x_in.dtype)
+                new_lc.update(k=kc, v=vc, conv=conv_st, ssd=ssd_st)
+            else:
+                a, kc, vc = attn.decode_attention(cfg, lp["attn"], h, lc["k"],
+                                                  lc["v"], pos, w)
+                x_new = x_in + a
+                new_lc.update(k=kc, v=vc)
+            if cfg.is_encoder_decoder and enc is not None:
+                hx = rms_norm(x_new, lp["lnx"], cfg.norm_eps)
+                x_new = x_new + attn.cross_attention(cfg, lp["xattn"], hx, enc)
+            if "ffn" in lp:
+                h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+                else:
+                    y = apply_mlp(cfg, lp["ffn"], h2)
+                x_new = x_new + y
+            return x_new, new_lc
+
+        layer_caches = {k: cache[k] for k in ("k", "v", "conv", "ssd")
+                        if k in cache}
+        if not cfg.scan_layers:
+            wnp = _layer_windows(cfg)
+            outs = []
+            for i in range(cfg.num_layers):
+                inp = (_layer_slice(params["layers"], i), jnp.asarray(wnp[i]),
+                       _layer_slice(layer_caches, i))
+                x, out = body(x, inp)
+                outs.append(out)
+            new_caches = _stack_layers(outs)
+        else:
+            x, new_caches = jax.lax.scan(body, x, (params["layers"], windows,
+                                                   layer_caches))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(cfg, params["embed"], x)
+        logits = logits + jnp.asarray(self._vmask, logits.dtype)
+        new_cache = dict(cache)
+        new_cache.update(new_caches)
+        new_cache["pos"] = pos + 1
+        return logits[:, 0], new_cache
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_lm(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return _cached_lm(cfg)

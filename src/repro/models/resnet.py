@@ -1,0 +1,106 @@
+"""ResNet variant family (the paper's own backends: ResNet-18/34/50/101/152).
+
+Pure-JAX implementation with ``lax.conv_general_dilated``; BatchNorm is folded
+into inference-mode scale/shift (serving systems run frozen BN). Used by the
+faithful-reproduction serving path and its tests; the InfAdapter control plane
+consumes these variants' profiles exactly as the paper does.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (block type, layers-per-stage, ImageNet top-1 accuracy %, readiness time s)
+RESNET_SPECS: Dict[str, Tuple[str, List[int], float, float]] = {
+    "resnet18": ("basic", [2, 2, 2, 2], 69.76, 4.0),
+    "resnet34": ("basic", [3, 4, 6, 3], 73.31, 6.0),
+    "resnet50": ("bottleneck", [3, 4, 6, 3], 76.13, 8.0),
+    "resnet101": ("bottleneck", [3, 4, 23, 3], 77.37, 12.0),
+    "resnet152": ("bottleneck", [3, 8, 36, 3], 78.31, 15.0),
+}
+STAGE_WIDTHS = [64, 128, 256, 512]
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / fan)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, scale, shift):
+    return x * scale + shift
+
+
+def init_resnet(key, name: str, num_classes: int = 1000) -> Dict:
+    block, stages, _, _ = RESNET_SPECS[name]
+    expansion = 1 if block == "basic" else 4
+    keys = jax.random.split(key, 200)
+    ki = iter(range(200))
+    p: Dict = {"stem": _conv_init(keys[next(ki)], 7, 7, 3, 64),
+               "stem_scale": jnp.ones((64,)), "stem_shift": jnp.zeros((64,))}
+    cin = 64
+    for si, (n_blocks, width) in enumerate(zip(stages, STAGE_WIDTHS)):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            cout = width * expansion
+            bp: Dict = {}
+            if block == "basic":
+                bp["c1"] = _conv_init(keys[next(ki)], 3, 3, cin, width)
+                bp["c2"] = _conv_init(keys[next(ki)], 3, 3, width, cout)
+            else:
+                bp["c1"] = _conv_init(keys[next(ki)], 1, 1, cin, width)
+                bp["c2"] = _conv_init(keys[next(ki)], 3, 3, width, width)
+                bp["c3"] = _conv_init(keys[next(ki)], 1, 1, width, cout)
+            for nm in list(bp):
+                ch = bp[nm].shape[-1]
+                bp[nm + "_scale"] = jnp.ones((ch,))
+                bp[nm + "_shift"] = jnp.zeros((ch,))
+            if stride != 1 or cin != cout:
+                bp["proj"] = _conv_init(keys[next(ki)], 1, 1, cin, cout)
+                bp["proj_scale"] = jnp.ones((cout,))
+                bp["proj_shift"] = jnp.zeros((cout,))
+            p[f"s{si}b{bi}"] = bp
+            cin = cout
+    p["head"] = jax.random.normal(keys[next(ki)], (cin, num_classes)) * 0.01
+    return p
+
+
+def apply_resnet(p: Dict, name: str, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    block, stages, _, _ = RESNET_SPECS[name]
+    h = _conv(x, p["stem"], 2)
+    h = jax.nn.relu(_bn(h, p["stem_scale"], p["stem_shift"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n_blocks in enumerate(stages):
+        for bi in range(n_blocks):
+            bp = p[f"s{si}b{bi}"]
+            stride = 2 if (si > 0 and bi == 0) else 1  # static (matches init)
+            r = h
+            if block == "basic":
+                y = jax.nn.relu(_bn(_conv(h, bp["c1"], stride), bp["c1_scale"], bp["c1_shift"]))
+                y = _bn(_conv(y, bp["c2"], 1), bp["c2_scale"], bp["c2_shift"])
+            else:
+                y = jax.nn.relu(_bn(_conv(h, bp["c1"], 1), bp["c1_scale"], bp["c1_shift"]))
+                y = jax.nn.relu(_bn(_conv(y, bp["c2"], stride), bp["c2_scale"], bp["c2_shift"]))
+                y = _bn(_conv(y, bp["c3"], 1), bp["c3_scale"], bp["c3_shift"])
+            if "proj" in bp:
+                r = _bn(_conv(r, bp["proj"], stride), bp["proj_scale"], bp["proj_shift"])
+            h = jax.nn.relu(y + r)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["head"]
+
+
+def resnet_flops(name: str, image: int = 224) -> float:
+    """Analytic forward GFLOPs (for profile calibration sanity checks)."""
+    known = {"resnet18": 1.82, "resnet34": 3.68, "resnet50": 4.12,
+             "resnet101": 7.85, "resnet152": 11.58}
+    return known[name] * 1e9 * (image / 224) ** 2

@@ -1,0 +1,218 @@
+"""Mamba-2 SSD (state-space duality) layer — pure-jnp implementation.
+
+The chunked algorithm follows arXiv:2405.21060: intra-chunk outputs are dense
+matmuls (MXU-friendly quadratic-in-chunk blocks), inter-chunk states follow the
+linear recurrence. This module is also the oracle for ``kernels/ssd_scan.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm, truncated_normal_init
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[..., i, j] = sum_{k=j+1..i} x_k  (j<=i)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      discretization steps (post-softplus)
+    A:  (h,)           negative decay rates
+    B:  (b, s, n)      input projections (ngroups=1, shared across heads)
+    C:  (b, s, n)      output projections
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    c, q = s // chunk, chunk
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)          # dt-weighted input
+    dA = (dt.astype(jnp.float32) * A.astype(jnp.float32))  # (b, s, h)
+
+    xdt = xdt.reshape(b, c, q, h, p)
+    Bc = B.reshape(b, c, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, c, q, n).astype(jnp.float32)
+    dA = dA.reshape(b, c, q, h).transpose(0, 3, 1, 2)      # (b, h, c, q)
+    dA_cs = jnp.cumsum(dA, axis=-1)                        # (b, h, c, q)
+
+    # 1) intra-chunk (dense quadratic block)
+    L = jnp.exp(segsum(dA))                                # (b, h, c, q, q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xdt)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)        # (b, h, c, q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # 3) inter-chunk recurrence over chunk dimension
+    chunk_decay = jnp.exp(dA_cs[..., -1])                  # (b, h, c)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                      # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state BEFORE chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, initial_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4),       # (c, b, h, p, n)
+         chunk_decay.transpose(2, 0, 1)))       # (c, b, h)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b, c, h, p, n)
+
+    # 4) contribution of the carried-in state to each position
+    state_decay_out = jnp.exp(dA_cs)                       # (b, h, c, q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. x: (b,h,p), dt: (b,h), B,C: (b,n), state: (b,h,p,n)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))   # (b, h)
+    dBx = jnp.einsum("bn,bhp->bhpn", B.astype(jnp.float32),
+                     (x * dt[..., None]).astype(jnp.float32))
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width-w) over (x, B, C) channels, as in Mamba-2
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(u: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """u: (b, s, ch); w: (cw, ch); bias: (ch,). Causal depthwise conv + silu."""
+    cw = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(cw):  # cw is tiny (4) — unrolled taps
+        out = out + pad[:, i:i + u.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(u.dtype)
+
+
+def conv_decode_step(u_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                     bias: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """u_t: (b, ch); conv_state: (b, cw-1, ch) past inputs. Returns (out, new_state)."""
+    window = jnp.concatenate([conv_state, u_t[:, None, :]], axis=1)   # (b, cw, ch)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(out + bias.astype(jnp.float32)).astype(u_t.dtype)
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Full SSM mixer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": truncated_normal_init(ks[0], (D, 2 * di + 2 * N + H), 1.0, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pd),
+        "D_skip": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "norm_w": jnp.zeros((di,), pd),
+        "out_proj": truncated_normal_init(ks[4], (di, D), 1.0, pd),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:di + di + 2 * N]        # x,B,C go through the conv
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xc, dt
+
+
+def ssm_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                initial_state: Optional[jax.Array] = None,
+                return_cache: bool = False):
+    """Full-sequence SSM mixer. x: (B,S,D) -> (B,S,D) [+ (conv_state, ssd_state)]."""
+    B_, S, D = x.shape
+    di, N, H, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xc_raw, dtr = _split_in_proj(cfg, zxbcdt)
+    xc = causal_conv1d(xc_raw, p["conv_w"], p["conv_b"])
+    xs = xc[..., :di].reshape(B_, S, H, hp)
+    Bm = xc[..., di:di + N]
+    Cm = xc[..., di + N:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    chunk = min(cfg.ssd_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        y, ssd_state = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=chunk,
+                                     initial_state=initial_state)
+    else:
+        y, ssd_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk, initial_state)
+    if pad:
+        y = y[:, :S]
+    y = y + xs[:, :S] * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    if return_cache:
+        # conv state: last (cw-1) *pre-conv* channel inputs
+        cw = cfg.conv_width
+        if S >= cw - 1:
+            conv_state = xc_raw[:, S - (cw - 1):S, :]
+        else:
+            conv_state = jnp.pad(xc_raw, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        return out, (conv_state, ssd_state)
+    return out
+
+
+def ssm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, conv_state: jax.Array,
+               ssd_state: jax.Array):
+    """One-token SSM step. x: (B,1,D). Returns (out (B,1,D), conv_state, ssd_state)."""
+    B_, _, D = x.shape
+    di, N, H, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bd,de->be", x[:, 0], p["in_proj"].astype(dt_))
+    di2 = di + 2 * N
+    z = zxbcdt[..., :di]
+    xc_raw = zxbcdt[..., di:di + di2]
+    dtr = zxbcdt[..., di + di2:]
+    xc, conv_state = conv_decode_step(xc_raw, conv_state, p["conv_w"], p["conv_b"])
+    xs = xc[..., :di].reshape(B_, H, hp)
+    Bm = xc[..., di:di + N]
+    Cm = xc[..., di + N:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssd_state = ssd_decode_step(xs, dt, A, Bm, Cm, ssd_state)
+    y = y + xs * p["D_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B_, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(dt_))[:, None, :]
+    return out, conv_state, ssd_state

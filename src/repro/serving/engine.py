@@ -1,0 +1,162 @@
+"""In-process JAX serving engine — the real-execution counterpart of the
+discrete-event simulator. Implements the adapter's ClusterAPI so the same
+InfAdapter controller drives either.
+
+Each active variant gets a ``VariantBackend``: params + jitted prefill/decode
+with slot-based batching (requests are micro-batched up to ``max_batch`` per
+pump). Variant loading (init + jit warm-up) happens on first use — that IS
+the readiness time rt_m on this backend, measured rather than assumed.
+
+This engine is CPU-sized (smoke-scale variants) — it exists to run the
+end-to-end example and integration tests with actual model execution; the
+TPU-scale path is exercised by the dry-run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # prompt (prompt_len,)
+    max_new: int
+    arrival: float
+    backend: str = ""
+    completion: float = 0.0
+    output: Optional[np.ndarray] = None
+    accuracy: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.completion - self.arrival) * 1000.0
+
+
+class VariantBackend:
+    def __init__(self, name: str, cfg: ModelConfig, accuracy: float,
+                 max_batch: int = 8, prompt_len: int = 32, max_new: int = 16,
+                 seed: int = 0):
+        self.name = name
+        self.cfg = cfg
+        self.accuracy = accuracy
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.model = build_model(cfg)
+        self.units = 1
+        t0 = time.time()
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len=prompt_len + max_new))
+        self._decode = jax.jit(self.model.decode_step)
+        # warm-up compile at the fixed batch shape (part of readiness)
+        toks = jnp.zeros((max_batch, prompt_len), jnp.int32)
+        lg, cache = self._prefill(self.params, {"tokens": toks})
+        self._decode(self.params, cache, jnp.zeros((max_batch,), jnp.int32))
+        self.readiness_s = time.time() - t0
+
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """prompts: (b, prompt_len) padded to max_batch internally."""
+        b = prompts.shape[0]
+        pad = self.max_batch - b
+        toks = jnp.asarray(np.pad(prompts, ((0, pad), (0, 0))))
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        outs = []
+        tok = jnp.argmax(logits, axis=-1)
+        for _ in range(max_new):
+            outs.append(tok)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1)
+        out = jnp.stack(outs, axis=1)
+        return np.asarray(out[:b])
+
+
+class InProcessServingEngine:
+    """ClusterAPI + request execution on real models."""
+
+    def __init__(self, variants: Mapping[str, Tuple[ModelConfig, float]],
+                 max_batch: int = 8, prompt_len: int = 32):
+        self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.backends: Dict[str, VariantBackend] = {}
+        self.units: Dict[str, int] = {}
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.cost_log: List[Tuple[float, int]] = []
+
+    # ---- ClusterAPI ----
+    def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
+        target = {m: n for m, n in units.items() if n > 0}
+        for m, n in target.items():
+            if m not in self.backends:
+                cfg, acc = self.variant_defs[m]
+                self.backends[m] = VariantBackend(
+                    m, cfg, acc, max_batch=self.max_batch,
+                    prompt_len=self.prompt_len)
+            self.backends[m].units = n
+        for m in list(self.backends):
+            if m not in target:
+                del self.backends[m]
+        self.units = dict(target)
+        self.cost_log.append((t, sum(target.values())))
+
+    def loaded_variants(self, t: float) -> Set[str]:
+        return set(self.backends)
+
+    def backlog(self, t: float) -> float:
+        return float(len(self.queue))
+
+    # ---- serving ----
+    def submit(self, req: Request, backend: Optional[str]) -> None:
+        req.backend = backend or ""
+        self.queue.append(req)
+
+    def pump(self, now: float) -> int:
+        """Serve queued requests in micro-batches. Returns #served."""
+        if not self.queue or not self.backends:
+            return 0
+        served = 0
+        by_backend: Dict[str, List[Request]] = {}
+        for r in self.queue:
+            name = r.backend if r.backend in self.backends else \
+                min(self.backends)
+            by_backend.setdefault(name, []).append(r)
+        self.queue.clear()
+        for name, reqs in by_backend.items():
+            b = self.backends[name]
+            for i in range(0, len(reqs), b.max_batch):
+                chunk = reqs[i:i + b.max_batch]
+                prompts = np.stack([r.tokens for r in chunk])
+                out = b.generate(prompts, max_new=max(r.max_new for r in chunk))
+                tdone = time.time()
+                for j, r in enumerate(chunk):
+                    r.output = out[j, :r.max_new]
+                    r.completion = tdone
+                    r.accuracy = b.accuracy
+                    self.done.append(r)
+                    served += 1
+        return served
+
+    def summarize(self, slo_ms: float, best_accuracy: float) -> Dict:
+        if not self.done:
+            return {}
+        lat = np.array([r.latency_ms for r in self.done])
+        acc = np.array([r.accuracy for r in self.done])
+        return {
+            "n_requests": len(self.done),
+            "violation_rate": float((lat > slo_ms).mean()),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_latency_ms": float(lat.mean()),
+            "avg_accuracy": float(acc.mean()),
+            "accuracy_loss": float(best_accuracy - acc.mean()),
+        }

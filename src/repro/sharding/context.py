@@ -1,0 +1,92 @@
+"""Activation-sharding context: lets the (mesh-agnostic) model pin the batch
+axis of its activations when compiled under a mesh.
+
+GSPMD generally propagates input shardings, but propagation can drop the
+batch sharding through reshapes (e.g. the q-block flash scan) and the loss
+pipeline — the deepseek-67b × train_4k hillclimb found full-global-batch
+all-reduces (f32[256, 4096, ...]) in the partitioned HLO, i.e. 16× replicated
+batch work on those ops. Pinning ``P(batch_axes, None, ...)`` on layer
+boundaries and the loss removes them (§Perf hillclimb A).
+
+The context is process-global and set only by launch-time code (dryrun /
+train launcher); models behave identically when it is unset.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "batch_axes": None}
+
+
+def set_activation_sharding(mesh, batch_axes: Optional[Tuple[str, ...]]):
+    _STATE["mesh"] = mesh
+    _STATE["batch_axes"] = tuple(batch_axes) if batch_axes else None
+
+
+def clear_activation_sharding():
+    _STATE["mesh"] = None
+    _STATE["batch_axes"] = None
+
+
+@contextmanager
+def activation_sharding(mesh, batch_axes: Optional[Tuple[str, ...]]):
+    set_activation_sharding(mesh, batch_axes)
+    try:
+        yield
+    finally:
+        clear_activation_sharding()
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 to the batch axes (no-op when no context or indivisible)."""
+    mesh, bats = _STATE["mesh"], _STATE["batch_axes"]
+    if mesh is None or bats is None or x.ndim == 0:
+        return x
+    size = 1
+    for a in bats:
+        size *= mesh.shape[a]
+    if x.shape[0] % size:
+        return x
+    spec = P(bats, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_shard_size() -> int:
+    """Number of shards the batch axes provide (1 when no context)."""
+    mesh, bats = _STATE["mesh"], _STATE["batch_axes"]
+    if mesh is None or bats is None:
+        return 1
+    size = 1
+    for a in bats:
+        size *= mesh.shape[a]
+    return size
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """Generic pin: axes entries are None, "batch" (-> the batch mesh axes),
+    or a mesh axis name. Silently no-ops on indivisible dims / no context."""
+    mesh, bats = _STATE["mesh"], _STATE["batch_axes"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in enumerate(axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        if ax == "batch":
+            if bats is None:
+                spec.append(None)
+                continue
+            size = 1
+            for a in bats:
+                size *= mesh.shape[a]
+            spec.append(bats if x.shape[dim] % size == 0 else None)
+        else:
+            spec.append(ax if x.shape[dim] % mesh.shape[ax] == 0 else None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,200 @@
+"""Divisibility-aware sharding policy (Megatron-style TP + data parallelism).
+
+Given a params pytree (shapes suffice — works on ShapeDtypeStructs) and a
+mesh, produce a PartitionSpec tree by path-based rules with per-tensor
+divisibility fallbacks:
+
+  * embeddings: vocab-sharded over "model" (vocab is padded to 256 so every
+    assigned arch divides a 16-way axis);
+  * attention QKV column-parallel over heads, O row-parallel — only when the
+    (kv-)head count divides the model axis, else replicated on "model"
+    (gemma-2b's 8 heads, hymba's 25, whisper's 6 fall back — recorded);
+  * dense FFN up/gate column-parallel, down row-parallel over d_ff;
+  * MoE experts expert-parallel when E divides the axis, else d_ff-sharded
+    (granite's 40 experts on a 16-way axis fall back to d_ff);
+  * SSM mixer params replicated (mamba2-130m is small; documented);
+  * norms/scalars replicated.
+
+KV caches are sharded batch→("pod","data") and cache-sequence→"model"
+(rope-safe; softmax over a sharded axis is handled by GSPMD partial
+reductions). Optimizer state inherits the param specs verbatim.
+
+Every fallback is recorded in ``PolicyReport`` and surfaced by the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+
+@dataclass
+class PolicyReport:
+    sharded: List[str] = field(default_factory=list)
+    replicated: List[str] = field(default_factory=list)
+    fallbacks: List[str] = field(default_factory=list)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_specs(cfg: ModelConfig, params_tree: Any, mesh,
+                fsdp: bool = False) -> Tuple[Any, PolicyReport]:
+    """PartitionSpec tree for a params pytree (shapes or arrays).
+
+    ``fsdp=True`` additionally shards one more (divisible, yet-unsharded)
+    dimension of each >=2D weight over the "data" axis — ZeRO-3-style fully
+    sharded parameters/optimizer state for training and for serving models
+    whose TP-sharded weights exceed a single device's HBM (qwen3-moe).
+    """
+    msize = mesh.shape["model"]
+    dsize = mesh.shape.get("data", 1)
+    report = PolicyReport()
+    heads_ok = cfg.num_heads > 0 and cfg.num_heads % msize == 0
+    kv_ok = cfg.num_kv_heads > 0 and cfg.num_kv_heads % msize == 0
+    ff_ok = cfg.d_ff > 0 and cfg.d_ff % msize == 0
+    experts_ok = cfg.num_experts > 0 and cfg.num_experts % msize == 0
+    vocab_ok = cfg.padded_vocab % msize == 0 if cfg.vocab_size else False
+
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = name.startswith("layers/") or name.startswith("enc_layers/")
+        lead = (None,) if stacked else ()
+
+        def spec(*rest):
+            return P(*(lead + rest))
+
+        # ---- embeddings ----
+        if name.endswith("embed/table"):
+            return P("model", None) if vocab_ok else P(None, None)
+        if name.endswith("embed/unembed"):
+            return P(None, "model") if vocab_ok else P(None, None)
+        # ---- attention ----
+        if "/attn/" in name or "/xattn/" in name:
+            w = name.split("/")[-1]
+            if w == "wq" and heads_ok:
+                return spec(None, "model")
+            if w in ("wk", "wv") and kv_ok:
+                return spec(None, "model")
+            if w == "wo" and heads_ok:
+                return spec("model", None)
+            report.fallbacks.append(f"{name}: heads {cfg.num_heads}/kv "
+                                    f"{cfg.num_kv_heads} !% model({msize}) -> replicated")
+            return spec(*([None] * (ndim - len(lead))))
+        # ---- MoE experts ----
+        if "/ffn/" in name and cfg.is_moe:
+            w = name.split("/")[-1]
+            if w == "router":
+                return spec(None, None)
+            if experts_ok:
+                return spec("model", None, None)           # expert-parallel
+            if ff_ok:
+                report.fallbacks.append(
+                    f"{name}: E={cfg.num_experts} !% model({msize}) -> "
+                    "d_ff-sharded instead of expert-parallel")
+                if w in ("wi", "wg"):
+                    return spec(None, None, "model")       # d_ff fallback
+                if w == "wo":
+                    return spec(None, "model", None)
+            report.fallbacks.append(f"{name}: E={cfg.num_experts} and "
+                                    f"d_ff={cfg.d_ff} !% model -> replicated")
+            return spec(*([None] * (ndim - len(lead))))
+        # ---- dense FFN ----
+        if "/ffn/" in name:
+            w = name.split("/")[-1]
+            if ff_ok:
+                if w in ("wi", "wg"):
+                    return spec(None, "model")
+                if w == "wo":
+                    return spec("model", None)
+            report.fallbacks.append(f"{name}: d_ff={cfg.d_ff} !% model -> replicated")
+            return spec(*([None] * (ndim - len(lead))))
+        # ---- everything else (norms, ssm mixer, projections, scalars) ----
+        return spec(*([None] * max(ndim - len(lead), 0)))
+
+    def with_fsdp(path, leaf, sp):
+        name = _path_str(path)
+        axes = list(sp) + [None] * (len(leaf.shape) - len(sp))
+        if not fsdp or len(leaf.shape) < 2:
+            return P(*axes)
+        stacked = name.startswith("layers/") or name.startswith("enc_layers/")
+        # candidate dims: skip the stacked layer dim; prefer the largest
+        cands = [(leaf.shape[i], i) for i in range(len(axes))
+                 if axes[i] is None and not (stacked and i == 0)
+                 and leaf.shape[i] % dsize == 0 and leaf.shape[i] >= dsize]
+        if cands:
+            _, i = max(cands)
+            axes[i] = "data"
+        return P(*axes)
+
+    base = jax.tree_util.tree_map_with_path(rule, params_tree)
+    specs = jax.tree_util.tree_map_with_path(with_fsdp, params_tree, base)
+
+    def log(path, leaf, sp):
+        name = _path_str(path)
+        if any(ax is not None for ax in sp):
+            report.sharded.append(f"{name}: {sp}")
+        else:
+            report.replicated.append(name)
+    jax.tree_util.tree_map_with_path(log, params_tree, specs)
+    return specs, report
+
+
+def cache_specs(cfg: ModelConfig, cache_tree: Any, mesh, global_batch: int) -> Any:
+    """Specs for a decode cache pytree."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    bspec = P(*baxes) if global_batch % bsize == 0 and global_batch >= bsize else P()
+    b = bspec if bspec != P() else None
+    bats = baxes if b is not None else None
+    msize = mesh.shape["model"]
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name == "pos":
+            return P(bats) if bats else P()
+        if name in ("k", "v"):
+            # (L, B, KV, C, hd): batch -> data axes, cache seq -> model
+            c_ok = shape[3] % msize == 0
+            return P(None, bats, None, "model" if c_ok else None, None)
+        if name == "conv":
+            return P(None, bats, None, None)
+        if name == "ssd":
+            return P(None, bats, None, None, None)
+        if name == "enc":
+            return P(bats, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def batch_specs(cfg: ModelConfig, batch_tree: Any, mesh, global_batch: int) -> Any:
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    bats = baxes if (global_batch % bsize == 0 and global_batch >= bsize) else None
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        return P(bats, *([None] * (nd - 1))) if nd else P()
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)

@@ -1,0 +1,220 @@
+"""Discrete-event simulation of the serving cluster.
+
+Each backend (variant, n units) is a c-server FIFO queue whose capacity
+matches the profile exactly (Little's law):
+
+    servers c   = max(1, round(th(n) · p(n)))        # concurrency in flight
+    service s   = c / th(n)                          # per-request seconds
+    => capacity = c / s = th(n), loaded latency ≈ p(n)
+
+mirroring the paper's TF-Serving setup (inter-op parallelism = #cores,
+batching off ⇒ concurrency ≈ cores).
+
+Reconfiguration semantics (paper §5, incl. their zero-downtime VPA patch):
+  * resizing a *running* variant applies after RESIZE_DELAY_S;
+  * a *new* variant warms up until t + rt_m; while warming it receives no
+    traffic — its quota spills onto the ready backends (overloading them,
+    which is exactly the transient-SLO-violation dynamic the paper reports);
+  * an old variant retires only once every newly created backend is ready
+    (create-then-remove).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Set
+
+import numpy as np
+
+from repro.core.profiles import VariantProfile
+
+RESIZE_DELAY_S = 1.0
+# Profiled th(n) is the *SLO-sustained* rate (the paper measures throughput at
+# the point where P99 reaches the SLO). The raw service rate at saturation is
+# slightly higher; the gap is what lets a backlog drain after a burst.
+SERVICE_HEADROOM = 1.35
+
+
+@dataclass
+class Backend:
+    profile: VariantProfile
+    units: int
+    ready_at: float
+    retire_at: float = float("inf")
+    server_free: List[float] = field(default_factory=list)   # heap
+
+    def __post_init__(self):
+        th = self.profile.throughput(self.units)
+        p_s = self.profile.p99_ms(self.units) / 1000.0
+        c = max(1, int(round(th * p_s)))
+        self.capacity = th
+        self.service_s = c / max(th * SERVICE_HEADROOM, 1e-9)
+        if not self.server_free:
+            self.server_free = [self.ready_at] * c
+            heapq.heapify(self.server_free)
+
+    def resized(self, n: int, t: float) -> "Backend":
+        """Live resize: inherit the in-flight server queue; extra servers come
+        online after RESIZE_DELAY_S; shrink keeps the earliest-free servers."""
+        nb = Backend(self.profile, n, ready_at=self.ready_at)  # resize never
+        # un-warms a loading backend nor stalls a ready one
+        c_new = len(nb.server_free)
+        inherited = sorted(self.server_free)[:c_new]
+        while len(inherited) < c_new:
+            inherited.append(t + RESIZE_DELAY_S)
+        nb.server_free = inherited
+        heapq.heapify(nb.server_free)
+        return nb
+
+    def ready(self, t: float) -> bool:
+        return self.ready_at <= t
+
+    def queue_delay(self, t: float) -> float:
+        return max(self.server_free[0] - t, 0.0)
+
+    def serve(self, arrival: float) -> float:
+        free = heapq.heappop(self.server_free)
+        start = max(arrival, free, self.ready_at)
+        done = start + self.service_s
+        heapq.heappush(self.server_free, done)
+        return done
+
+
+@dataclass
+class ServedRequest:
+    arrival: float
+    completion: float
+    backend: str
+    accuracy: float
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.completion - self.arrival) * 1000.0
+
+
+class SimCluster:
+    """Implements the adapter's ClusterAPI + request serving."""
+
+    def __init__(self, profiles: Mapping[str, VariantProfile]):
+        self.profiles = dict(profiles)
+        self.backends: Dict[str, Backend] = {}
+        self.requests: List[ServedRequest] = []
+        self.cost_samples: List[tuple] = []    # (t, provisioned units)
+
+    # ------------------------------------------------------------- ClusterAPI
+    def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
+        target = {m: n for m, n in units.items() if n > 0}
+        new_ready = [t]
+        for m, n in target.items():
+            b = self.backends.get(m)
+            if b is not None:
+                b.retire_at = float("inf")   # re-selected: cancel retirement
+                if b.units != n:
+                    self.backends[m] = b.resized(n, t)
+                new_ready.append(self.backends[m].ready_at)
+            else:
+                nb = Backend(self.profiles[m], n, ready_at=t + self.profiles[m].rt)
+                self.backends[m] = nb
+                new_ready.append(nb.ready_at)
+        switch_t = max(new_ready)
+        for m, b in self.backends.items():
+            if m not in target:
+                b.retire_at = min(b.retire_at, switch_t)
+        self.cost_samples.append(
+            (t, sum(b.units for b in self.backends.values()
+                    if b.retire_at == float("inf"))))
+
+    def loaded_variants(self, t: float) -> Set[str]:
+        return {m for m, b in self.backends.items() if b.ready(t)}
+
+    def backlog(self, t: float) -> float:
+        """Requests queued beyond the in-service set (for queue-aware mode)."""
+        total = 0.0
+        for b in self.backends.values():
+            if b.retire_at <= t:
+                continue
+            waiting = sum(max(f - t, 0.0) for f in b.server_free)
+            total += waiting / max(b.service_s, 1e-9)
+        return total
+
+    # ---------------------------------------------------------------- serving
+    def _purge(self, t: float) -> None:
+        for m in [m for m, b in self.backends.items() if b.retire_at <= t]:
+            del self.backends[m]
+
+    def dispatch(self, arrival: float, backend_name: Optional[str]) -> None:
+        self._purge(arrival)
+        candidates = {m: b for m, b in self.backends.items()
+                      if b.retire_at > arrival}
+        if not candidates:
+            self.requests.append(ServedRequest(arrival, arrival + 10.0,
+                                               "none", 0.0))
+            return
+        b = candidates.get(backend_name) if backend_name else None
+        if b is None or not b.ready(arrival):
+            ready = {m: bb for m, bb in candidates.items() if bb.ready(arrival)}
+            pool = ready or candidates
+            name = min(pool, key=lambda m: pool[m].queue_delay(arrival))
+            b = pool[name]
+            backend_name = name
+        done = b.serve(arrival)
+        self.requests.append(ServedRequest(arrival, done, backend_name,
+                                           b.profile.accuracy))
+
+    def dispatch_fanout(self, arrival: float, backend_names, accuracy: float
+                        ) -> None:
+        """Cocktail-style ensembling: the request runs on EVERY member;
+        latency is the slowest member (majority vote needs all of them)."""
+        self._purge(arrival)
+        done = arrival + 10.0
+        served = False
+        for name in backend_names:
+            b = self.backends.get(name)
+            if b is None or b.retire_at <= arrival:
+                continue
+            done = max(done if served else arrival, b.serve(arrival))
+            served = True
+        if not served:
+            self.dispatch(arrival, None)
+            return
+        self.requests.append(ServedRequest(arrival, done, "+".join(backend_names),
+                                           accuracy))
+
+    # ---------------------------------------------------------------- metrics
+    def summarize(self, slo_ms: float, best_accuracy: float,
+                  window_s: float = 10.0) -> Dict:
+        reqs = sorted(self.requests, key=lambda r: r.arrival)
+        if not reqs:
+            return {}
+        lat = np.array([r.latency_ms for r in reqs])
+        acc = np.array([r.accuracy for r in reqs])
+        arr = np.array([r.arrival for r in reqs])
+        viol = lat > slo_ms
+        t_end = arr.max()
+        wins, p99s, accs, vrate = [], [], [], []
+        for w0 in np.arange(0, t_end, window_s):
+            m = (arr >= w0) & (arr < w0 + window_s)
+            if m.sum() > 3:
+                wins.append(float(w0))
+                p99s.append(float(np.percentile(lat[m], 99)))
+                accs.append(float(acc[m].mean()))
+                vrate.append(float(viol[m].mean()))
+        cost_t = np.array([c[0] for c in self.cost_samples], float)
+        cost_v = np.array([c[1] for c in self.cost_samples], float)
+        if len(cost_t) > 1:
+            avg_cost = float(np.trapezoid(cost_v, cost_t)
+                             / max(cost_t[-1] - cost_t[0], 1e-9))
+        else:
+            avg_cost = float(cost_v.mean()) if len(cost_v) else 0.0
+        return {
+            "n_requests": len(reqs),
+            "violation_rate": float(viol.mean()),
+            "violation_seconds": float(len({int(a) for a, v in zip(arr, viol) if v})),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_latency_ms": float(lat.mean()),
+            "avg_accuracy": float(acc.mean()),
+            "accuracy_loss": float(best_accuracy - acc.mean()),
+            "avg_cost_units": avg_cost,
+            "windows": {"t": wins, "p99_ms": p99s, "accuracy": accs,
+                        "violation_rate": vrate},
+        }

@@ -1,0 +1,110 @@
+"""Checkpointing: save/restore arbitrary pytrees (params + optimizer state)
+without external deps (no orbax in this container).
+
+Layout (one directory per step):
+    <dir>/step_000100/
+        manifest.json      tree structure + leaf dtypes/shapes + metadata
+        arrays.npz         leaf arrays keyed by flattened path
+
+Atomic via write-to-tmp + rename. ``latest_step``/``restore`` round-trip any
+params/opt pytree produced by this framework (dict/NamedTuple nesting).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save(directory: str, step: int, tree: Any,
+         metadata: Optional[Dict] = None) -> str:
+    """Save a pytree checkpoint; returns the checkpoint path."""
+    treedef = jax.tree_util.tree_structure(tree)
+    flat = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:09d}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": sorted(flat),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None
+            ) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten(like)
+    if sorted(flat_like) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_like)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+
+    def rebuild(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = arrays[key]
+        if list(arr.shape) != list(np.asarray(leaf).shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        return arr.astype(np.asarray(leaf).dtype)
+
+    tree = jax.tree_util.tree_map_with_path(rebuild, like)
+    return tree, manifest["metadata"]
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    """Keep only the newest ``keep`` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)

@@ -1,0 +1,85 @@
+"""Optimizers from scratch (no optax): Adam/AdamW + schedules + clipping.
+
+State is a params-shaped pytree, so any sharding PartitionSpec tree derived
+for the params applies verbatim to the optimizer moments (ZeRO-1-style when
+the params are sharded over the mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"   # "cosine" | "constant"
+
+
+def _schedule(cfg: AdamConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adam_update(cfg: AdamConfig, grads, state: AdamState, params
+                ) -> Tuple[Any, AdamState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}

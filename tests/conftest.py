@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make src/ importable without install; smoke tests must see ONE device
+# (the 512-device XLA flag is set only inside launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

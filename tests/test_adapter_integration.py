@@ -1,0 +1,75 @@
+"""End-to-end control-loop integration on the simulator (paper's evaluation
+harness at reduced scale) + the headline directional claims."""
+import numpy as np
+import pytest
+
+from repro.core.adapter import (ControllerConfig, InfAdapterController,
+                                MSPlusController, VPAPlusController)
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.profiles import paper_resnet_profiles
+from repro.data.traces import paper_bursty_trace, paper_nonbursty_trace
+from repro.sim.runner import run_experiment
+
+PROFILES = paper_resnet_profiles(noise=0.0)
+REF = 78.31
+
+
+def _run(controller_cls, trace, profiles=None, variant=None, **cfg_kw):
+    cfg = ControllerConfig(budget=20, beta=0.05, gamma=0.2, **cfg_kw)
+    if controller_cls is VPAPlusController:
+        c = VPAPlusController(PROFILES[variant], cfg)
+        profs = {variant: PROFILES[variant]}
+        warm = {variant: 8}
+    else:
+        c = controller_cls(PROFILES, MovingMaxForecaster(), cfg)
+        profs = PROFILES
+        warm = {"resnet18": 8}
+    return run_experiment(controller_cls.__name__, c, profs, trace,
+                          warm_start=warm, reference_accuracy=REF)
+
+
+@pytest.fixture(scope="module")
+def bursty_results():
+    trace = paper_bursty_trace(seconds=900)
+    return {
+        "inf": _run(InfAdapterController, trace),
+        "ms": _run(MSPlusController, trace),
+        "vpa152": _run(VPAPlusController, trace, variant="resnet152"),
+        "vpa18": _run(VPAPlusController, trace, variant="resnet18"),
+    }
+
+
+def test_infadapter_reduces_violations_vs_heavy_vpa(bursty_results):
+    """Headline claim: SLO violations reduced (up to 65%) vs VPA."""
+    inf = bursty_results["inf"].summary["violation_rate"]
+    vpa = bursty_results["vpa152"].summary["violation_rate"]
+    assert inf < vpa * 0.35
+
+
+def test_infadapter_less_accuracy_loss_than_ms(bursty_results):
+    assert (bursty_results["inf"].summary["accuracy_loss"]
+            < bursty_results["ms"].summary["accuracy_loss"])
+
+
+def test_vpa18_cheap_but_inaccurate(bursty_results):
+    s = bursty_results["vpa18"].summary
+    assert s["avg_cost_units"] < bursty_results["inf"].summary["avg_cost_units"]
+    assert s["accuracy_loss"] > 8.0
+
+
+def test_nonbursty_all_meet_slo():
+    trace = paper_nonbursty_trace(seconds=600)
+    r = _run(InfAdapterController, trace)
+    assert r.summary["violation_rate"] < 0.01
+
+
+def test_reactive_extension_strictly_better():
+    """Beyond-paper: reactive+queue-aware cuts violations at equal cost."""
+    trace = paper_bursty_trace(seconds=900)
+    faithful = _run(InfAdapterController, trace)
+    reactive = _run(InfAdapterController, trace, reactive=True,
+                    queue_aware=True)
+    assert (reactive.summary["violation_rate"]
+            <= faithful.summary["violation_rate"])
+    assert (reactive.summary["avg_cost_units"]
+            <= faithful.summary["avg_cost_units"] * 1.15)

@@ -1,0 +1,67 @@
+"""Roofline analysis utilities: HLO collective parsing, analytic models."""
+import numpy as np
+
+from repro.analysis import roofline as rl
+from repro.configs import get_config, get_shape
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ag = f32[16,1024]{1,0} all-gather(f32[1,1024]{1,0} %x), dimensions={0}
+  %ar = bf16[512]{0} all-reduce(bf16[512]{0} %y), to_apply=%add
+  %a2a = f32[8,64]{1,0} all-to-all(f32[8,64]{1,0} %z), dimensions={0}
+"""
+    total, per_kind = rl.collective_bytes(hlo)
+    assert per_kind["all-gather"] == 16 * 1024 * 4
+    assert per_kind["all-reduce"] == 512 * 2 * 2      # counted twice
+    assert per_kind["all-to-all"] == 8 * 64 * 4
+    assert total == sum(per_kind.values())
+
+
+def test_collective_bytes_async_pairs_not_double_counted():
+    hlo = """
+  %s = f32[1024]{0} all-reduce-start(f32[1024]{0} %x), to_apply=%add
+  %d = f32[1024]{0} all-reduce-done(f32[1024]{0} %s)
+"""
+    total, _ = rl.collective_bytes(hlo)
+    assert total == 1024 * 4 * 2  # one AR (x2), not two
+
+
+def test_analyze_dominant_term():
+    cost = {"flops": 197e12 * 0.001, "bytes accessed": 819e9 * 0.005}
+    rep = rl.analyze("a", "s", "16x16", 256, cost, "", 1e15)
+    assert rep.dominant == "memory"
+    assert abs(rep.compute_s - 0.001) < 1e-6
+    assert abs(rep.memory_s - 0.005) < 1e-6
+
+
+def test_model_flops_conventions():
+    cfg = get_config("tinyllama-1.1b")
+    tr = rl.model_flops(cfg, get_shape("train_4k"))
+    de = rl.model_flops(cfg, get_shape("decode_32k"))
+    n = cfg.active_param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+    assert abs(de - 2 * n * 128) / de < 1e-6
+
+
+def test_moe_active_flops_less_than_total():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+
+
+def test_analytic_hbm_decreases_with_microbatching():
+    cfg = get_config("deepseek-67b")
+    shape = get_shape("train_4k")
+    kw = dict(param_bytes_global=cfg.param_count() * 2.0, model_shard=16,
+              batch_shard=16, fsdp_shard=16, train=True)
+    m1 = rl.analytic_hbm_bytes(cfg, shape, microbatches=1, **kw)
+    m16 = rl.analytic_hbm_bytes(cfg, shape, microbatches=16, **kw)
+    assert m16 < m1 / 4
+
+
+def test_scan_corrections_zero_for_decode():
+    cfg = get_config("tinyllama-1.1b")
+    f, b, _ = rl.scan_corrections(cfg, get_shape("decode_32k"),
+                                  batch_shard=16, model_shard=16,
+                                  heads_sharded=True)
+    assert f == 0.0 and b == 0.0

@@ -1,0 +1,50 @@
+"""Checkpointing subsystem: round-trip, latest, prune, structure validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import adam_init
+
+
+def _params():
+    cfg = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        num_layers=2, d_model=32, d_ff=64, vocab_size=64)
+    m = build_model(cfg)
+    return m.init(jax.random.PRNGKey(0))
+
+
+def test_roundtrip(tmp_path):
+    params = _params()
+    opt = adam_init(params)
+    state = {"params": params, "opt": opt}
+    ckpt.save(str(tmp_path), 100, state, metadata={"loss": 1.5})
+    restored, meta = ckpt.restore(str(tmp_path), state)
+    assert meta["loss"] == 1.5
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path):
+    params = {"w": jnp.ones(3)}
+    for s in (1, 5, 9, 12):
+        ckpt.save(str(tmp_path), s, params)
+    assert ckpt.latest_step(str(tmp_path)) == 12
+    ckpt.prune(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 12
+    restored, _ = ckpt.restore(str(tmp_path), params, step=9)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"w": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"w": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "none"), {"w": jnp.ones(1)})

@@ -1,0 +1,45 @@
+"""Cocktail ensembling baseline (paper Table 1 comparison)."""
+import numpy as np
+
+from repro.core.adapter import ControllerConfig, InfAdapterController
+from repro.core.cocktail import (CocktailController, majority_vote_accuracy,
+                                 solve_cocktail)
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.profiles import paper_resnet_profiles
+from repro.data.traces import paper_nonbursty_trace
+from repro.sim.runner import run_experiment
+
+PROFILES = paper_resnet_profiles(noise=0.0)
+
+
+def test_majority_vote_bounds():
+    # independent 3x 80% voters: 89.6%; with rho=1 -> best single
+    assert abs(majority_vote_accuracy([80, 80, 80], rho=0.0) - 89.6) < 0.1
+    assert majority_vote_accuracy([80, 80, 80], rho=1.0) == 80.0
+    assert majority_vote_accuracy([75.0], rho=0.5) == 75.0
+    mid = majority_vote_accuracy([80, 80, 80], rho=0.6)
+    assert 80.0 < mid < 89.6
+
+
+def test_cocktail_every_member_sized_for_full_load():
+    a = solve_cocktail(PROFILES, 50.0, 30, 750.0)
+    assert a.feasible
+    for m, n in a.units.items():
+        assert PROFILES[m].throughput(n) >= 50.0
+
+
+def test_cocktail_cost_inefficiency_vs_infadapter():
+    """The paper's §6 argument: ensembling sends all requests to all models,
+    so at comparable accuracy Cocktail pays more resources than InfAdapter."""
+    trace = paper_nonbursty_trace(seconds=600)
+    cfg = ControllerConfig(budget=40, beta=0.05, gamma=0.2)
+    inf = InfAdapterController(PROFILES, MovingMaxForecaster(), cfg)
+    r_inf = run_experiment("inf", inf, PROFILES, trace,
+                           warm_start={"resnet18": 8}, reference_accuracy=78.31)
+    co = CocktailController(PROFILES, MovingMaxForecaster(), cfg)
+    r_co = run_experiment("cocktail", co, PROFILES, trace,
+                          warm_start={"resnet18": 8}, reference_accuracy=78.31)
+    assert (r_co.summary["avg_cost_units"]
+            > r_inf.summary["avg_cost_units"] * 1.1)
+    # ensembles can beat the best single model's accuracy (negative loss ok)
+    assert r_co.summary["avg_accuracy"] > 70.0

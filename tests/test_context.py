@@ -1,0 +1,41 @@
+"""Activation-sharding context: inert without a mesh; pins under one."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.context import (activation_sharding, batch_shard_size,
+                                    constrain, constrain_batch)
+
+
+def test_noop_without_context():
+    x = jnp.ones((8, 4))
+    assert constrain_batch(x) is x
+    assert batch_shard_size() == 1
+    y = constrain(x, "batch", None)
+    assert y is x
+
+
+def test_model_outputs_identical_with_singleton_mesh():
+    """With a 1x1 mesh the constraints exist but results are unchanged."""
+    from repro.configs import get_config, smoke_variant
+    from repro.models.model import LM
+    cfg = smoke_variant(get_config("granite-moe-3b-a800m"))
+    m = LM(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    base, _ = m.apply(p, {"tokens": toks}, train=False)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with activation_sharding(mesh, ("data",)):
+        pinned, _ = m.apply(p, {"tokens": toks}, train=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pinned),
+                               atol=1e-5)
+
+
+def test_indivisible_dims_left_alone():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with activation_sharding(mesh, ("data",)):
+        x = jnp.ones((7, 3))   # 7 % 1 == 0 -> constraint fine with 1 shard
+        y = constrain_batch(x)
+        assert y.shape == x.shape

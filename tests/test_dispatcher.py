@@ -1,0 +1,51 @@
+"""Weighted round-robin: quota-proportional dispatch (paper's dispatcher)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatcher import WeightedRoundRobinDispatcher
+
+
+def test_proportions_match_quotas():
+    d = WeightedRoundRobinDispatcher()
+    d.set_weights({"a": 30.0, "b": 60.0, "c": 10.0})
+    for _ in range(1000):
+        d.next_backend()
+    shares = d.realized_shares()
+    assert abs(shares["a"] - 0.3) < 0.02
+    assert abs(shares["b"] - 0.6) < 0.02
+    assert abs(shares["c"] - 0.1) < 0.02
+
+
+def test_smoothness_no_bursts():
+    """Smooth WRR: within any window of total-weight requests, each backend
+    gets floor/ceil of its proportional share (no starvation bursts)."""
+    d = WeightedRoundRobinDispatcher()
+    d.set_weights({"a": 2.0, "b": 1.0})
+    seq = [d.next_backend() for _ in range(30)]
+    for i in range(0, 30, 3):
+        win = seq[i:i + 3]
+        assert win.count("a") == 2 and win.count("b") == 1
+
+
+@given(weights=st.dictionaries(
+    st.sampled_from(["a", "b", "c", "d"]),
+    st.floats(0.5, 100.0), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_share_convergence_property(weights):
+    d = WeightedRoundRobinDispatcher()
+    d.set_weights(weights)
+    n = 2000
+    for _ in range(n):
+        d.next_backend()
+    total = sum(weights.values())
+    for m, w in weights.items():
+        assert abs(d.realized_shares().get(m, 0.0) - w / total) < 0.05
+
+
+def test_weight_update_mid_stream():
+    d = WeightedRoundRobinDispatcher()
+    d.set_weights({"a": 1.0})
+    assert d.next_backend() == "a"
+    d.set_weights({"b": 1.0})
+    assert d.next_backend() == "b"
+    assert d.next_backend() == "b"

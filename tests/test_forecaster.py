@@ -1,0 +1,48 @@
+"""LSTM forecaster (paper config) + baselines."""
+import numpy as np
+
+from repro.core.forecaster import (EnsembleMaxForecaster, LSTMForecaster,
+                                   MovingMaxForecaster, forecast_mae,
+                                   lstm_apply, lstm_init,
+                                   train_lstm_forecaster)
+from repro.data.traces import synthetic_twitter_trace
+
+
+def test_lstm_paper_architecture():
+    """25-unit LSTM + 1-unit dense (paper §5)."""
+    p = lstm_init(np.random.default_rng(0).bit_generator.seed_seq and
+                  __import__("jax").random.PRNGKey(0), hidden=25)
+    assert p["wh"].shape == (25, 100)
+    assert p["dense_w"].shape == (25, 1)
+    import jax.numpy as jnp
+    out = lstm_apply(p, jnp.ones((3, 50, 1)))
+    assert out.shape == (3,)
+
+
+def test_lstm_learns_constant_trace():
+    trace = np.full(4000, 30.0, np.float32)
+    fc, losses = train_lstm_forecaster(trace, steps=80, batch=16)
+    assert losses[-1] < losses[0]
+    pred = fc.predict(trace[:2000])
+    assert 15.0 < pred < 45.0
+
+
+def test_lstm_beats_moving_max_on_diurnal():
+    trace = synthetic_twitter_trace(seconds=3 * 3600, seed=5)
+    fc, _ = train_lstm_forecaster(trace[:2 * 3600], steps=150, batch=32)
+    test = trace[2 * 3600:]
+    lstm = forecast_mae(fc, test, stride=400)
+    mm = forecast_mae(MovingMaxForecaster(), test, stride=400)
+    assert lstm["mae"] < mm["mae"]
+
+
+def test_moving_max_headroom():
+    fc = MovingMaxForecaster(window=10, headroom=1.2)
+    assert fc.predict(np.array([10.0, 20.0, 15.0])) == 24.0
+
+
+def test_ensemble_takes_max():
+    a = MovingMaxForecaster(window=5, headroom=1.0)
+    b = MovingMaxForecaster(window=5, headroom=2.0)
+    e = EnsembleMaxForecaster(members=(a, b))
+    assert e.predict(np.array([10.0])) == 20.0

@@ -1,0 +1,61 @@
+"""Profiles: paper-calibrated ResNet relations + TPU roofline profiles."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.profiles import (fit_throughput, measured_resnet_points,
+                                 paper_resnet_profiles, roofline_profile,
+                                 roofline_decode_tokens_per_s,
+                                 variant_ladder_profiles)
+
+
+def test_paper_relations_hold():
+    p = paper_resnet_profiles(noise=0.0)
+    # Fig.1: R18@8 ~ R50@20 (within 10%)
+    assert abs(p["resnet18"].throughput(8) - p["resnet50"].throughput(20)) \
+        / p["resnet50"].throughput(20) < 0.10
+    # Fig.2 feasibility: {R50:2, R101:6, R152:6} sustains 75 RPS
+    cap = (p["resnet50"].throughput(2) + p["resnet101"].throughput(6)
+           + p["resnet152"].throughput(6))
+    assert cap >= 75.0
+    # MS's best single variant at B=14 for 75 RPS is R50
+    assert p["resnet50"].throughput(14) >= 75.0
+    assert p["resnet101"].throughput(14) < 75.0
+    assert p["resnet152"].throughput(14) < 75.0
+
+
+def test_latency_model_monotone():
+    p = paper_resnet_profiles(noise=0.0)["resnet152"]
+    lats = [p.p99_ms(n) for n in range(1, 20)]
+    assert all(a >= b for a, b in zip(lats, lats[1:]))
+    assert p.min_feasible_units(750.0) is not None
+    assert p.p99_ms(p.min_feasible_units(750.0)) <= 750.0
+
+
+def test_regression_fit():
+    fit = fit_throughput(measured_resnet_points("resnet18", noise=0.0))
+    assert fit.r_squared > 0.999
+    assert abs(fit.slope - 13.0) < 0.2
+
+
+def test_roofline_profile_monotone_in_chips():
+    cfg = get_config("tinyllama-1.1b")
+    prof = roofline_profile(cfg, accuracy=70.0)
+    assert prof.throughput(8) > prof.throughput(1)
+    assert prof.rt > 0
+
+
+def test_roofline_batching_helps_decode():
+    """TPU adaptation: decode throughput grows with batch (bandwidth-bound)."""
+    cfg = get_config("tinyllama-1.1b")
+    t1 = roofline_decode_tokens_per_s(cfg, 1, batch=1)
+    t32 = roofline_decode_tokens_per_s(cfg, 1, batch=32)
+    assert t32 > 4 * t1
+
+
+def test_variant_ladder_accuracy_monotone():
+    cfg = get_config("yi-6b")
+    ladder = variant_ladder_profiles(cfg)
+    profs = sorted(ladder.values(), key=lambda p: p.accuracy)
+    # deeper (more params) -> more accurate, slower
+    assert profs[0].th_slope >= profs[-1].th_slope * 0.9
+    assert len({p.accuracy for p in profs}) == len(profs)

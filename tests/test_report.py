@@ -1,0 +1,33 @@
+"""Markdown table generation from dry-run JSON reports."""
+import json
+import os
+
+from repro.analysis.report import dryrun_table, inject, roofline_table
+
+ROW = {
+    "arch": "yi-6b", "shape": "decode_32k", "mesh": "16x16", "chips": 256,
+    "compute_s": 0.001, "memory_s": 0.005, "collective_s": 0.0005,
+    "dominant": "memory", "usefulness": 0.4, "notes": "",
+    "compile_s": 3.0, "hbm_estimate_bytes": 2e9, "fits_v5e_16gb": True,
+    "sharding_fallbacks": ["x"], "skipped": False,
+}
+
+
+def test_tables_render():
+    rows = [ROW, dict(ROW, mesh="2x16x16"),
+            {"arch": "whisper-tiny", "shape": "long_500k", "skipped": True,
+             "reason": "enc-dec"}]
+    t1 = dryrun_table(rows)
+    assert "yi-6b" in t1 and "SKIP" in t1 and "fits" in t1
+    t2 = roofline_table(rows)
+    assert "**memory**" in t2 and "0.005" in t2
+
+
+def test_inject_idempotent(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text("before\n<!-- T -->\nafter")
+    inject(str(md), "T", "TABLE1")
+    inject(str(md), "T", "TABLE2")
+    text = md.read_text()
+    assert "TABLE2" in text and "TABLE1" not in text
+    assert text.count("<!-- T -->") == 1

@@ -1,0 +1,21 @@
+"""The paper's own ResNet variant family (InfAdapter backends)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.resnet import RESNET_SPECS, apply_resnet, init_resnet
+
+
+@pytest.mark.parametrize("name", ["resnet18", "resnet34", "resnet50"])
+def test_resnet_forward(name):
+    p = init_resnet(jax.random.PRNGKey(0), name, num_classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    y = jax.jit(lambda p, x: apply_resnet(p, name, x))(p, x)
+    assert y.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_accuracy_ladder_monotone():
+    accs = [RESNET_SPECS[n][2] for n in
+            ["resnet18", "resnet34", "resnet50", "resnet101", "resnet152"]]
+    assert accs == sorted(accs)

@@ -1,0 +1,107 @@
+"""Sharding policy: divisibility-aware specs + fallbacks (no devices needed —
+AbstractMesh carries only the axis geometry)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.steps import cache_shapes, params_shapes
+from repro.configs.shapes import get_shape
+from repro.sharding.policy import cache_specs, param_specs
+
+MESH = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+POD_MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _find(specs, path_fragment):
+    found = {}
+
+    def visit(path, sp):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if path_fragment in name:
+            found[name] = sp
+    jax.tree_util.tree_map_with_path(visit, specs)
+    return found
+
+
+def test_dense_tp_sharding_tinyllama():
+    cfg = get_config("tinyllama-1.1b")      # 32 heads, kv=4, d_ff 5632
+    specs, report = param_specs(cfg, params_shapes(cfg), MESH)
+    wq = list(_find(specs, "attn/wq").values())[0]
+    assert wq == P(None, None, "model")     # heads 32 % 16 == 0
+    wk = list(_find(specs, "attn/wk").values())[0]
+    assert wk == P(None, None, None)        # kv=4 !% 16 -> replicated
+    wi = list(_find(specs, "ffn/wi").values())[0]
+    assert wi == P(None, None, "model")     # d_ff 5632 % 16 == 0
+    emb = list(_find(specs, "embed/table").values())[0]
+    assert emb == P("model", None)          # padded vocab % 16 == 0
+    assert any("wk" in f for f in report.fallbacks)
+
+
+def test_gemma_heads_fallback():
+    cfg = get_config("gemma-2b")            # 8 heads < 16
+    specs, report = param_specs(cfg, params_shapes(cfg), MESH)
+    wq = list(_find(specs, "attn/wq").values())[0]
+    assert wq == P(None, None, None)
+    wi = list(_find(specs, "ffn/wi").values())[0]
+    assert wi == P(None, None, "model")     # FFN carries the TP instead
+
+
+def test_moe_expert_parallel_vs_dff_fallback():
+    qwen = get_config("qwen3-moe-235b-a22b")    # 128 experts % 16 == 0
+    specs, _ = param_specs(qwen, params_shapes(qwen), MESH)
+    wi = list(_find(specs, "ffn/wi").values())[0]
+    assert wi == P(None, "model", None, None)   # expert-parallel
+    gran = get_config("granite-moe-3b-a800m")   # 40 experts !% 16
+    specs, report = param_specs(gran, params_shapes(gran), MESH)
+    wi = list(_find(specs, "ffn/wi").values())[0]
+    assert wi == P(None, None, None, "model")   # d_ff fallback (512 % 16)
+    assert any("E=40" in f for f in report.fallbacks)
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("yi-6b")
+    specs, _ = param_specs(cfg, params_shapes(cfg), MESH, fsdp=True)
+    wq = list(_find(specs, "attn/wq").values())[0]
+    assert "data" in wq and "model" in wq
+
+
+def test_every_arch_every_leaf_gets_a_spec():
+    from repro.configs import ALL_ARCHS
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        params = params_shapes(cfg)
+        specs, _ = param_specs(cfg, params, MESH, fsdp=True)
+        def check(p, sp):
+            assert isinstance(sp, P)
+            assert len(sp) <= len(p.shape)
+            for ax, dim in zip(sp, p.shape):
+                if ax is not None:
+                    size = 16
+                    assert dim % size == 0, (arch, p.shape, sp)
+        jax.tree_util.tree_map(check, params, specs)
+
+
+def test_cache_specs_shard_batch_and_sequence():
+    cfg = get_config("tinyllama-1.1b")
+    shape = get_shape("decode_32k")
+    cache = cache_shapes(cfg, shape)
+    specs = cache_specs(cfg, cache, MESH, shape.global_batch)
+    assert specs["k"] == P(None, ("data",), None, "model", None)
+    # long_500k: batch 1 -> replicated batch
+    shape_l = get_shape("long_500k")
+    from repro.configs.shapes import adapt_config_for_shape
+    cfg_l, _ = adapt_config_for_shape(cfg, shape_l)
+    cache = cache_shapes(cfg_l, shape_l)
+    specs = cache_specs(cfg_l, cache, MESH, 1)
+    assert specs["k"][1] is None
+
+
+def test_multipod_batch_axes():
+    cfg = get_config("tinyllama-1.1b")
+    from repro.sharding.policy import batch_specs
+    from repro.launch.steps import batch_specs_for
+    shape = get_shape("train_4k")
+    b = batch_specs(cfg, batch_specs_for(cfg, shape), POD_MESH, 256)
+    assert b["tokens"] == P(("pod", "data"), None)

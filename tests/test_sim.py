@@ -1,0 +1,79 @@
+"""Discrete-event cluster sim: queueing physics + reconfiguration semantics."""
+import numpy as np
+
+from repro.core.profiles import paper_resnet_profiles
+from repro.sim.cluster import Backend, SimCluster
+
+PROFILES = paper_resnet_profiles(noise=0.0)
+
+
+def test_backend_capacity_matches_profile():
+    p = PROFILES["resnet50"]
+    b = Backend(p, units=8, ready_at=0.0)
+    # serve at the profiled rate for 10s: latencies stay bounded
+    lat = []
+    th = p.throughput(8)
+    for i in range(int(th * 10)):
+        t = i / th
+        done = b.serve(t)
+        lat.append(done - t)
+    assert np.percentile(np.array(lat) * 1000, 99) < p.p99_ms(8) * 1.5
+
+
+def test_backend_overload_queues():
+    p = PROFILES["resnet50"]
+    b = Backend(p, units=2, ready_at=0.0)
+    th = p.throughput(2)
+    lat = []
+    for i in range(int(th * 3)):
+        t = i / (th * 2.0)  # 2x overload
+        lat.append(b.serve(t) - t)
+    assert lat[-1] > lat[0]  # queue grows
+
+
+def test_new_variant_waits_for_readiness():
+    c = SimCluster(PROFILES)
+    c.apply_allocation(0.0, {"resnet152": 4})
+    assert c.backends["resnet152"].ready_at == PROFILES["resnet152"].rt
+    c.dispatch(1.0, "resnet152")
+    r = c.requests[-1]
+    assert r.completion >= PROFILES["resnet152"].rt
+
+
+def test_zero_downtime_switch():
+    """Old variant keeps serving until the replacement is ready."""
+    c = SimCluster(PROFILES)
+    c.apply_allocation(0.0, {"resnet18": 4})
+    c.backends["resnet18"].ready_at = 0.0
+    c.apply_allocation(100.0, {"resnet50": 6})
+    # resnet18 must retire only once resnet50 is ready
+    assert c.backends["resnet18"].retire_at >= 100.0 + PROFILES["resnet50"].rt - 1e-9
+    c.dispatch(101.0, "resnet50")      # still warming -> served by resnet18
+    assert c.requests[-1].backend == "resnet18"
+    t_ready = 100.0 + PROFILES["resnet50"].rt + 0.1
+    c.dispatch(t_ready, "resnet50")
+    assert c.requests[-1].backend == "resnet50"
+
+
+def test_resize_preserves_queue_and_readiness():
+    c = SimCluster(PROFILES)
+    c.apply_allocation(0.0, {"resnet50": 4})
+    b0 = c.backends["resnet50"]
+    c.apply_allocation(50.0, {"resnet50": 8})
+    b1 = c.backends["resnet50"]
+    assert b1.units == 8
+    assert b1.ready_at == b0.ready_at  # resize never un-warms
+
+
+def test_summary_metrics():
+    c = SimCluster(PROFILES)
+    c.apply_allocation(-PROFILES["resnet18"].rt, {"resnet18": 8})
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for _ in range(500):
+        t += rng.exponential(1 / 50.0)
+        c.dispatch(t, "resnet18")
+    s = c.summarize(750.0, 78.31)
+    assert s["n_requests"] == 500
+    assert s["violation_rate"] < 0.05
+    assert abs(s["avg_accuracy"] - 69.76) < 1e-6

@@ -1,0 +1,81 @@
+"""Solver correctness: Eq. 1 semantics, exact==bruteforce, paper's Fig. 2."""
+import numpy as np
+import pytest
+
+from repro.core.objective import assign_quotas, evaluate, loading_cost
+from repro.core.profiles import VariantProfile, fit_throughput, paper_resnet_profiles
+from repro.core.solver import (solve_bruteforce, solve_exact, solve_greedy,
+                               solve_single_variant)
+
+PROFILES = paper_resnet_profiles(noise=0.0)
+
+
+def test_regression_fit_r_squared_matches_paper():
+    """Paper Fig. 6: R^2 ~= 0.996 / 0.994 for ResNet18/50 profiles."""
+    from repro.core.profiles import measured_resnet_points
+    for name in ("resnet18", "resnet50"):
+        fit = fit_throughput(measured_resnet_points(name, noise=0.01))
+        assert fit.r_squared > 0.99
+
+
+def test_fig2_budget14_selects_multivariant_set():
+    """At B=14, λ=75: InfAdapter picks a multi-variant set including
+    ResNet152; MS+'s best single variant is ResNet50 (paper Fig. 2)."""
+    a = solve_exact(PROFILES, 75.0, 14, 750.0, beta=0.05, gamma=0.01)
+    active = a.active_variants()
+    assert len(active) >= 2
+    assert "resnet152" in active
+    ms = solve_single_variant(PROFILES, 75.0, 14, 750.0, beta=0.05, gamma=0.01)
+    assert ms.active_variants() == {"resnet50"}
+    assert a.aa > ms.aa  # InfAdapter's whole point
+
+
+def test_exact_matches_bruteforce():
+    for lam, budget in [(30, 8), (75, 14), (50, 10), (120, 20)]:
+        e = solve_exact(PROFILES, lam, budget, 750.0, beta=0.05, gamma=0.01)
+        b = solve_bruteforce(PROFILES, lam, budget, 750.0, beta=0.05, gamma=0.01)
+        assert abs(e.objective - b.objective) < 0.15, (lam, budget)
+
+
+def test_constraints_respected():
+    for lam, budget in [(40, 12), (90, 20)]:
+        for solver in (solve_exact, solve_greedy, solve_single_variant):
+            a = solver(PROFILES, lam, budget, 750.0)
+            assert a.total_units() <= budget
+            for m, n in a.units.items():
+                if n > 0:
+                    assert PROFILES[m].p99_ms(n) <= 750.0
+            if a.feasible:
+                cap = sum(PROFILES[m].throughput(n)
+                          for m, n in a.units.items() if n > 0)
+                assert cap + 1e-6 >= lam
+            for m, q in a.quotas.items():
+                assert q <= PROFILES[m].throughput(a.units[m]) + 1e-6
+
+
+def test_quota_waterfill_prefers_accuracy():
+    units = {"resnet18": 4, "resnet152": 10}
+    q = assign_quotas(PROFILES, units, 30.0)
+    # resnet152 (more accurate) takes as much as its capacity allows
+    assert q["resnet152"] == pytest.approx(
+        min(PROFILES["resnet152"].throughput(10), 30.0))
+
+
+def test_loading_cost_is_max_rt_of_cold_variants():
+    lc = loading_cost(PROFILES, ["resnet18", "resnet152"], {"resnet18"})
+    assert lc == PROFILES["resnet152"].rt
+    assert loading_cost(PROFILES, ["resnet18"], {"resnet18"}) == 0.0
+
+
+def test_infeasible_falls_back_to_best_effort():
+    a = solve_exact(PROFILES, 10_000.0, 4, 750.0)
+    assert not a.feasible
+    assert a.total_units() >= 1  # still provisions something
+
+
+def test_beta_tradeoff_direction():
+    """Appendix: larger β/α prioritizes cost over accuracy."""
+    lo = solve_exact(PROFILES, 60.0, 20, 750.0, beta=0.0125)
+    hi = solve_exact(PROFILES, 60.0, 20, 750.0, beta=0.2)
+    assert lo.aa >= hi.aa
+    assert lo.rc >= hi.rc

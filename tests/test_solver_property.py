@@ -1,0 +1,72 @@
+"""Hypothesis property tests over the solver's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.objective import evaluate
+from repro.core.profiles import VariantProfile
+from repro.core.solver import solve_bruteforce, solve_exact, solve_greedy
+
+
+@st.composite
+def profile_sets(draw):
+    n = draw(st.integers(2, 4))
+    out = {}
+    for i in range(n):
+        slope = draw(st.floats(1.0, 15.0))
+        intercept = draw(st.floats(0.0, 20.0))
+        acc = draw(st.floats(50.0, 99.0))
+        lat_base = draw(st.floats(10.0, 300.0))
+        lat_k = draw(st.floats(50.0, 600.0))
+        out[f"m{i}"] = VariantProfile(
+            name=f"m{i}", accuracy=acc, rt=draw(st.floats(1.0, 20.0)),
+            th_slope=slope, th_intercept=intercept,
+            lat_base_ms=lat_base, lat_k_ms=lat_k)
+    return out
+
+
+@given(profiles=profile_sets(), lam=st.floats(1.0, 120.0),
+       budget=st.integers(2, 10))
+@settings(max_examples=40, deadline=None)
+def test_solver_never_violates_constraints(profiles, lam, budget):
+    a = solve_exact(profiles, lam, budget, 750.0)
+    assert a.total_units() <= budget
+    for m, n in a.units.items():
+        if n > 0:
+            assert profiles[m].p99_ms(n) <= 750.0 + 1e-6
+    for m, q in a.quotas.items():
+        assert q <= profiles[m].throughput(a.units[m]) + 1e-6
+    assert sum(a.quotas.values()) <= lam + 1e-6
+
+
+@given(profiles=profile_sets(), lam=st.floats(5.0, 60.0),
+       budget=st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_exact_at_least_greedy(profiles, lam, budget):
+    """The exact DP must never be beaten by the greedy heuristic."""
+    e = solve_exact(profiles, lam, budget, 750.0)
+    g = solve_greedy(profiles, lam, budget, 750.0)
+    if e.feasible and g.feasible:
+        assert e.objective >= g.objective - 0.25  # DP load-discretization slack
+
+
+@given(profiles=profile_sets(), lam=st.floats(5.0, 60.0),
+       budget=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_exact_matches_bruteforce_property(profiles, lam, budget):
+    e = solve_exact(profiles, lam, budget, 750.0)
+    b = solve_bruteforce(profiles, lam, budget, 750.0)
+    assert e.feasible == b.feasible
+    if b.feasible:
+        assert e.objective >= b.objective - 0.3
+
+
+@given(profiles=profile_sets(), lam=st.floats(5.0, 80.0),
+       budget=st.integers(4, 12), beta=st.floats(0.01, 0.3))
+@settings(max_examples=25, deadline=None)
+def test_objective_monotone_in_budget(profiles, lam, budget, beta):
+    """More budget can never hurt the optimal objective."""
+    a1 = solve_exact(profiles, lam, budget, 750.0, beta=beta)
+    a2 = solve_exact(profiles, lam, budget + 2, 750.0, beta=beta)
+    if a1.feasible:
+        assert a2.feasible
+        assert a2.objective >= a1.objective - 1e-6

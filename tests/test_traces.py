@@ -1,0 +1,33 @@
+"""Trace generator: the paper's workload shapes."""
+import numpy as np
+
+from repro.data.traces import (arrivals_from_rate, paper_bursty_trace,
+                               paper_nonbursty_trace, synthetic_twitter_trace)
+
+
+def test_bursty_shape_matches_paper_fig5():
+    t = paper_bursty_trace(base=40, spike=95, noise=0.0)
+    assert len(t) == 1200
+    assert abs(t[:550].mean() - 40) < 2          # steady
+    assert t[650:780].max() > 90                 # spike
+    assert t[990:1000].mean() < t[700] * 0.5     # decayed
+    assert abs(t[1190] - 40) < 5                 # recovered
+
+
+def test_nonbursty_gentle():
+    t = paper_nonbursty_trace(noise=0.0)
+    assert t.max() / t.min() < 2.5
+
+
+def test_synthetic_statistics():
+    t = synthetic_twitter_trace(seconds=7200, seed=3)
+    assert t.min() > 0
+    hour_means = t.reshape(2, 3600).mean(axis=1)
+    assert (np.abs(np.diff(hour_means)) / hour_means[0] < 1.0).all()
+
+
+def test_arrivals_poisson_rate():
+    rate = np.full(200, 50.0, np.float32)
+    arr = arrivals_from_rate(rate, seed=0)
+    assert abs(len(arr) / 200 - 50.0) < 3.0
+    assert (np.diff(arr) >= 0).all()
