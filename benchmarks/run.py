@@ -8,6 +8,7 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   fig6_profile_fit      linear-regression profile R² (Fig. 6)
   fig7_beta_sweep       β sensitivity, cumulative metrics (Fig. 7/9/10)
   fig8_nonbursty        non-bursty trace comparison (Fig. 8)
+  engine_serving        continuous batching vs pump P99/throughput (DESIGN.md)
   forecaster            LSTM vs baselines MAE/under-rate (Fig. 5 top)
   solver_scalability    exact/greedy/bruteforce runtime + optimality gap (§7)
   kernels               Pallas kernel vs jnp-oracle wall time (interpret mode)
@@ -21,9 +22,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_figures, bench_forecaster, bench_kernels,
-                        bench_robustness, bench_roofline, bench_solver,
-                        bench_table1)
+from benchmarks import (bench_engine, bench_figures, bench_forecaster,
+                        bench_kernels, bench_robustness, bench_roofline,
+                        bench_solver, bench_table1)
 
 ALL = {
     "fig1_throughput": bench_figures.fig1_throughput,
@@ -33,6 +34,7 @@ ALL = {
     "fig5_bursty": bench_figures.fig5_bursty,
     "fig8_nonbursty": bench_figures.fig8_nonbursty,
     "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
+    "engine_serving": bench_engine.run,
     "table1_systems": bench_table1.run,
     "profile_robustness": bench_robustness.run,
     "forecaster": bench_forecaster.run,
@@ -47,8 +49,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args(argv)
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        sys.exit(f"unknown benchmark(s): {', '.join(unknown)} "
+                 f"(available: {', '.join(ALL)})")
 
     print("name,us_per_call,derived")
+    failed = []
     for name in names:
         fn = ALL[name]
         t0 = time.time()
@@ -56,12 +63,15 @@ def main(argv=None) -> None:
             rows = fn()
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            failed.append(name)
             continue
         wall_us = (time.time() - t0) * 1e6
         for rname, us, derived in rows:
             print(f"{name}.{rname},{us:.1f},{derived}")
         print(f"{name}.total,{wall_us:.1f},ok")
         sys.stdout.flush()
+    if failed:   # make benchmark crashes visible to CI
+        sys.exit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,17 @@
-"""End-to-end driver: serve REAL JAX models with batched requests behind the
-InfAdapter control loop (the serving analogue of "train a 100M model").
+"""End-to-end driver: serve REAL JAX models with continuous batching behind
+the InfAdapter control loop (the serving analogue of "train a 100M model").
 
 A three-variant tinyllama-family ladder (2/4/6 layers) is served by the
 in-process engine; the controller profiles each variant live (readiness time
 and measured throughput), then adapts the variant set as synthetic load rises
-and falls. Everything here executes real model code — prefill, KV-cache
-decode, micro-batching — on CPU.
+and falls — driving the engine purely through the shared ``ClusterAPI`` /
+``ServingAPI`` contract (``repro.serving.api``), the same interface the
+discrete-event simulator implements. Everything here executes real model
+code — prefill, slot-based continuous batching against the persistent KV
+ring buffer, jitted decode chunks — on CPU.
 
 Run:  PYTHONPATH=src python examples/serve_autoscale.py [--seconds 30]
+      [--mode continuous|pump]   (pump = legacy micro-batching baseline)
 """
 import argparse
 import time
@@ -18,7 +22,9 @@ from repro.configs import get_config, smoke_variant
 from repro.core.adapter import ControllerConfig, InfAdapterController
 from repro.core.forecaster import MovingMaxForecaster
 from repro.core.profiles import VariantProfile
-from repro.serving.engine import InProcessServingEngine, Request
+from repro.serving.api import ClusterAPI, ServingAPI
+from repro.serving.driver import rise_fall_load, run_serving_loop
+from repro.serving.engine import InProcessServingEngine
 
 
 def build_ladder():
@@ -57,11 +63,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--seconds", type=int, default=24)
     ap.add_argument("--interval", type=float, default=6.0)
+    ap.add_argument("--mode", choices=("continuous", "pump"),
+                    default="continuous")
     args = ap.parse_args()
 
     variants = build_ladder()
-    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16)
-    print("calibrating variants (live profiling)...")
+    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16,
+                                    mode=args.mode, max_new=8, decode_chunk=4)
+    # the whole control loop below sees the engine only through the shared
+    # serving contract — swap in a SimCluster and nothing else changes
+    assert isinstance(engine, ClusterAPI) and isinstance(engine, ServingAPI)
+    print(f"calibrating variants (live profiling), mode={args.mode}...")
     profiles = calibrate(engine, variants)
 
     slo_ms = 2000.0
@@ -71,38 +83,16 @@ def main():
     ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10),
                                 cfg)
 
-    rng = np.random.default_rng(0)
-    t_start = time.time()
-    rid = 0
-    next_ctrl = 0.0
     print(f"\nserving for {args.seconds}s with a rising-falling load...")
-    while True:
-        now = time.time() - t_start
-        if now > args.seconds:
-            break
-        if now >= next_ctrl:
-            ctrl.monitor.advance_to(now)
-            d = ctrl.step(now, engine)
-            active = {k: v for k, v in d.allocation.units.items() if v}
-            print(f"  t={now:5.1f}s predicted={d.predicted_load:5.1f} rps "
-                  f"-> {active}")
-            next_ctrl += args.interval
-        # load profile: ramp up then down
-        phase = now / args.seconds
-        lam = 4.0 + 28.0 * np.sin(np.pi * phase) ** 2
-        n_new = rng.poisson(lam * 0.25)  # pump granularity 0.25s
-        for _ in range(n_new):
-            ctrl.monitor.record(now, 1)
-            req = Request(rid=rid, tokens=rng.integers(
-                0, 256, size=16).astype(np.int64), max_new=8, arrival=time.time())
-            engine.submit(req, ctrl.dispatcher.next_backend())
-            rid += 1
-        engine.pump(now)
-        time.sleep(0.05)
-
+    run_serving_loop(engine, ctrl, seconds=args.seconds,
+                     interval=args.interval,
+                     load_fn=rise_fall_load(max(args.seconds, 1)))
     s = engine.summarize(slo_ms, best_accuracy=78.0)
-    print(f"\nserved {s['n_requests']} requests: "
-          f"viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
+    if not s:
+        print(f"\nno requests completed ({engine.rejected} rejected)")
+        return
+    print(f"\nserved {s['n_requests']} requests ({s.get('rejected', 0)} "
+          f"rejected): viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
           f"mean={s['mean_latency_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
 
 

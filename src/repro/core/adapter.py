@@ -9,13 +9,15 @@ Every ``interval_s`` (paper: 30 s) the adapter:
      paper patched into VPA is the default here),
   5. pushes quotas to the dispatcher.
 
-The cluster is abstract (``ClusterAPI``): the discrete-event simulator and the
-real JAX serving engine both implement it.
+The cluster is abstract — the shared ``ClusterAPI`` protocol lives in
+``repro.serving.api``; the discrete-event simulator (``SimCluster``) and the
+real JAX serving engine (``InProcessServingEngine``) both implement it, so
+every controller in this module drives either backend unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Protocol, Set
+from typing import Callable, Dict, List, Mapping, Optional, Set
 
 import numpy as np
 
@@ -24,15 +26,7 @@ from repro.core.monitoring import RateMonitor
 from repro.core.objective import Allocation, evaluate
 from repro.core.profiles import VariantProfile
 from repro.core.solver import SOLVERS
-
-
-class ClusterAPI(Protocol):
-    def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
-        """Reconfigure backends (create-then-remove; readiness delays apply)."""
-        ...
-
-    def loaded_variants(self, t: float) -> Set[str]:
-        ...
+from repro.serving.api import ClusterAPI  # noqa: F401  (re-export: public API)
 
 
 @dataclass
@@ -72,15 +66,21 @@ class InfAdapterController:
         self.decisions: List[Decision] = []
 
     def predict(self) -> float:
+        """Next-interval peak load λ̂ (requests/s) from the last 10 min of
+        per-second history — the paper's LSTM forecaster input window (§4.1,
+        Fig. 5 top); floored at ``min_load`` so Eq. 1 always has demand."""
         recent = self.monitor.history(600)
         lam = self.forecaster.predict(recent)
         return max(lam, self.cfg.min_load)
 
     def decide(self, t: float, cluster: ClusterAPI) -> Decision:
+        """One planning pass (no actuation): forecast λ for the next interval
+        (paper §4.1) and solve Eq. 1 — maximize α·AA − β·RC − γ·LC subject to
+        the latency SLO and budget — seeding LC with the cluster's currently
+        loaded variants."""
         lam = self.predict()
         if self.cfg.queue_aware:
-            backlog = getattr(cluster, "backlog", lambda t: 0.0)(t)
-            lam += backlog / self.cfg.interval_s   # drain within one interval
+            lam += cluster.backlog(t) / self.cfg.interval_s  # drain in one interval
         solver = SOLVERS[self.cfg.solver]
         alloc = solver(self.profiles, lam, self.cfg.budget, self.cfg.slo_ms,
                        alpha=self.cfg.alpha, beta=self.cfg.beta,
@@ -91,6 +91,9 @@ class InfAdapterController:
         return d
 
     def step(self, t: float, cluster: ClusterAPI) -> Decision:
+        """One full control iteration (paper Fig. 3, every ``interval_s``):
+        decide, enact on the cluster (create-then-remove reconfiguration),
+        and push the solver's per-variant quotas λ_m to the dispatcher."""
         d = self.decide(t, cluster)
         cluster.apply_allocation(t, d.allocation.units)
         if d.allocation.quotas:
@@ -107,7 +110,7 @@ class InfAdapterController:
         cap = sum(self.profiles[m].throughput(n)
                   for m, n in last.units.items() if n > 0)
         observed = self.monitor.current_rate(window=5) * 1.1
-        backlog = getattr(cluster, "backlog", lambda t: 0.0)(t)
+        backlog = cluster.backlog(t)
         if observed > cap or backlog > cap * 2.0:
             return self.step(t, cluster)
         return None

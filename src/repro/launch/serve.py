@@ -2,7 +2,8 @@
 
 CPU-sized by default (smoke-scale variants). On a real TPU deployment the
 same controller drives per-variant submeshes; resource units become chips
-(see DESIGN.md §3) and profiles come from `roofline_profile`.
+(see DESIGN.md §Continuous-batching serving engine) and profiles come from
+`roofline_profile`.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
@@ -19,7 +20,8 @@ from repro.configs import get_config, smoke_variant
 from repro.core.adapter import ControllerConfig, InfAdapterController
 from repro.core.forecaster import MovingMaxForecaster
 from repro.core.profiles import VariantProfile
-from repro.serving.engine import InProcessServingEngine, Request
+from repro.serving.driver import rise_fall_load, run_serving_loop
+from repro.serving.engine import InProcessServingEngine
 
 
 def build_ladder(arch: str, depths=(2, 4, 6), accs=(70.0, 75.0, 78.0)):
@@ -60,7 +62,8 @@ def main():
     args = ap.parse_args()
 
     variants = build_ladder(args.arch)
-    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16)
+    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16,
+                                    max_new=8, decode_chunk=4)
     print("calibrating variants...")
     profiles = calibrate(engine, variants)
     for n, p in profiles.items():
@@ -70,28 +73,13 @@ def main():
                            slo_ms=args.slo_ms, beta=args.beta, gamma=0.05,
                            reactive=True, queue_aware=True)
     ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10), cfg)
-    rng = np.random.default_rng(0)
-    t_start, rid, next_ctrl = time.time(), 0, 0.0
-    while True:
-        now = time.time() - t_start
-        if now > args.seconds:
-            break
-        if now >= next_ctrl:
-            ctrl.monitor.advance_to(now)
-            d = ctrl.step(now, engine)
-            print(f"t={now:5.1f}s λ̂={d.predicted_load:5.1f} -> "
-                  f"{ {k: v for k, v in d.allocation.units.items() if v} }")
-            next_ctrl += args.interval
-        lam = 4.0 + 28.0 * np.sin(np.pi * now / args.seconds) ** 2
-        for _ in range(rng.poisson(lam * 0.25)):
-            ctrl.monitor.record(now, 1)
-            engine.submit(Request(rid=rid, tokens=rng.integers(0, 256, 16),
-                                  max_new=8, arrival=time.time()),
-                          ctrl.dispatcher.next_backend())
-            rid += 1
-        engine.pump(now)
-        time.sleep(0.05)
+    run_serving_loop(engine, ctrl, seconds=args.seconds,
+                     interval=args.interval,
+                     load_fn=rise_fall_load(max(args.seconds, 1)))
     s = engine.summarize(args.slo_ms, max(p.accuracy for p in profiles.values()))
+    if not s:
+        print(f"\nno requests completed ({engine.rejected} rejected)")
+        return
     print(f"\n{s['n_requests']} requests: viol={s['violation_rate']:.1%} "
           f"p99={s['p99_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
 

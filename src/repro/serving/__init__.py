@@ -1,0 +1,9 @@
+"""Serving layer: the shared ClusterAPI contract and its real-execution
+implementation (see DESIGN.md §Continuous batching).
+
+Only the light-weight protocol module is imported eagerly — the real engine
+(``repro.serving.engine``) pulls in JAX and the model stack, which the
+numpy-only simulator path must not pay for.
+"""
+from repro.serving.api import (ClusterAPI, Request, ServingAPI,  # noqa: F401
+                               summarize_requests)

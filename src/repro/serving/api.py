@@ -1,0 +1,156 @@
+"""Shared cluster/serving interface — the contract between the InfAdapter
+control plane and any backend that executes requests.
+
+The paper (arXiv 2304.10892) separates the *Adapter* (forecaster + Eq. 1
+solver) from the cluster it reconfigures (§4, Fig. 3). This module pins that
+boundary down as two protocols so the discrete-event simulator
+(`repro.sim.cluster.SimCluster`) and the real-execution engine
+(`repro.serving.engine.InProcessServingEngine`) are interchangeable under the
+same controller, dispatcher, and experiment harness:
+
+  * ``ClusterAPI``  — control-plane surface: ``apply_allocation`` (the paper's
+    create-then-remove reconfiguration, §5), ``loaded_variants`` (feeds the
+    loading-cost LC term of Eq. 1), and ``backlog`` (queue depth, used by the
+    beyond-paper queue-aware / reactive controller modes).
+  * ``ServingAPI``  — data-plane surface on top of ``ClusterAPI``: request
+    submission plus the windowed metric summary both backends report.
+
+``summarize_requests`` is the single implementation of the paper's evaluation
+metrics (SLO-violation rate, P99, average accuracy drop vs the best variant,
+time-averaged cost — §6); both backends call it so the simulator and the real
+engine are scored identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (Dict, List, Mapping, Optional, Protocol, Sequence, Set,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One inference request travelling through a serving backend.
+
+    ``arrival``/``completion`` are seconds on whatever clock the backend uses
+    (wall clock for the real engine, simulated time for the DES) — only the
+    difference is ever interpreted.
+    """
+    rid: int
+    tokens: np.ndarray          # prompt (prompt_len,)
+    max_new: int
+    arrival: float
+    backend: str = ""
+    completion: float = 0.0
+    output: Optional[np.ndarray] = None
+    accuracy: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.completion - self.arrival) * 1000.0
+
+
+@runtime_checkable
+class ClusterAPI(Protocol):
+    """Control-plane interface the InfAdapter controller drives (paper §4)."""
+
+    def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
+        """Reconfigure backends to ``units`` (variant -> resource units).
+
+        Semantics follow the paper's zero-downtime patch (§5): new variants
+        warm up for their readiness time rt_m before taking traffic, and old
+        variants retire only after the replacements are ready
+        (create-then-remove)."""
+        ...
+
+    def loaded_variants(self, t: float) -> Set[str]:
+        """Variants currently loaded & ready — the LC term of Eq. 1 charges
+        only for variants *not* in this set."""
+        ...
+
+    def backlog(self, t: float) -> float:
+        """Queued-but-unserved work (requests). Feeds the queue-aware
+        controller extension (λ inflated by backlog/interval to drain)."""
+        ...
+
+
+@runtime_checkable
+class ServingAPI(ClusterAPI, Protocol):
+    """Data-plane surface: what the experiment harness needs beyond control."""
+
+    def submit(self, req: Request, backend: Optional[str]) -> bool:
+        """Enqueue a request on a backend's admission queue. Returns False if
+        the queue rejected it (backpressure)."""
+        ...
+
+    def step(self, now: float) -> int:
+        """Advance an asynchronous backend by one scheduling tick (admission
+        + one decode chunk on the real engine). Synchronous backends (the
+        discrete-event simulator serves at submit time) no-op and return 0.
+        Returns the number of requests completed by this call."""
+        ...
+
+    def drain(self, now: float) -> int:
+        """Serve everything still queued or in flight; no-op on synchronous
+        backends. Returns the number of requests completed by this call."""
+        ...
+
+    def summarize(self, slo_ms: float, best_accuracy: float) -> Dict:
+        ...
+
+
+def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
+                       accuracies: Sequence[float], *, slo_ms: float,
+                       best_accuracy: float,
+                       cost_samples: Optional[Sequence[Tuple[float, int]]] = None,
+                       window_s: float = 0.0) -> Dict:
+    """The paper's evaluation summary (§6), shared by sim and real engine.
+
+    Returns violation rate / P99 / mean latency / average accuracy and the
+    accuracy *loss* vs the most accurate variant; with ``cost_samples`` the
+    time-averaged provisioned units (the RC term integrated over time); with
+    ``window_s`` also per-window series (the paper's Fig. 5/8 time plots) and
+    ``violation_seconds`` (number of wall-clock seconds containing at least
+    one violation — the unit the paper reports its 65% reduction in).
+    """
+    if len(arrivals) == 0:
+        return {}
+    order = np.argsort(np.asarray(arrivals, float))
+    arr = np.asarray(arrivals, float)[order]
+    lat = np.asarray(latencies_ms, float)[order]
+    acc = np.asarray(accuracies, float)[order]
+    viol = lat > slo_ms
+    out: Dict = {
+        "n_requests": int(len(arr)),
+        "violation_rate": float(viol.mean()),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "mean_latency_ms": float(lat.mean()),
+        "avg_accuracy": float(acc.mean()),
+        "accuracy_loss": float(best_accuracy - acc.mean()),
+    }
+    if cost_samples is not None:
+        cost_t = np.array([c[0] for c in cost_samples], float)
+        cost_v = np.array([c[1] for c in cost_samples], float)
+        if len(cost_t) > 1:
+            out["avg_cost_units"] = float(
+                np.trapezoid(cost_v, cost_t) / max(cost_t[-1] - cost_t[0], 1e-9))
+        else:
+            out["avg_cost_units"] = float(cost_v.mean()) if len(cost_v) else 0.0
+    if window_s > 0:
+        out["violation_seconds"] = float(
+            len({int(a) for a, v in zip(arr, viol) if v}))
+        wins, p99s, accs, vrate = [], [], [], []
+        # anchor windows at the first arrival's window boundary — arrivals may
+        # be epoch wall-clock stamps, not trace-relative seconds
+        t0 = np.floor(arr.min() / window_s) * window_s
+        for w0 in np.arange(t0, arr.max(), window_s):
+            m = (arr >= w0) & (arr < w0 + window_s)
+            if m.sum() > 3:
+                wins.append(float(w0))
+                p99s.append(float(np.percentile(lat[m], 99)))
+                accs.append(float(acc[m].mean()))
+                vrate.append(float(viol[m].mean()))
+        out["windows"] = {"t": wins, "p99_ms": p99s, "accuracy": accs,
+                         "violation_rate": vrate}
+    return out

@@ -1,0 +1,70 @@
+"""Shared wall-clock serving loop for the real-execution drivers.
+
+``examples/serve_autoscale.py`` and ``repro.launch.serve`` both replay a
+synthetic load curve against an ``InProcessServingEngine`` behind the
+InfAdapter control loop; this module holds the one copy of that loop so the
+two drivers can't drift. Poisson arrivals are scaled by the *measured* tick
+duration, so offered load tracks λ(t) regardless of how fast the engine
+ticks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serving.api import Request, ServingAPI
+
+
+def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
+                     interval: float, load_fn: Callable[[float], float],
+                     seed: int = 0, prompt_len: int = 16, max_new: int = 8,
+                     vocab: int = 256, tick_sleep: float = 0.05,
+                     log: Optional[Callable[[str], None]] = print) -> int:
+    """Drive ``engine`` under ``ctrl`` for ``seconds`` of wall-clock time.
+
+    ``load_fn(now)`` gives the offered rate λ (req/s) at elapsed time
+    ``now``. The controller steps every ``interval`` seconds; the engine is
+    ticked (admission + one decode chunk) every ``tick_sleep``, and drained
+    before returning. Returns the number of requests submitted.
+    """
+    rng = np.random.default_rng(seed)
+    t_start = time.time()
+    rid = 0
+    next_ctrl = 0.0
+    last = 0.0
+    while True:
+        now = time.time() - t_start
+        if now > seconds:
+            break
+        if now >= next_ctrl:
+            ctrl.monitor.advance_to(now)
+            d = ctrl.step(now, engine)
+            if log is not None:
+                active = {k: v for k, v in d.allocation.units.items() if v}
+                log(f"  t={now:5.1f}s predicted={d.predicted_load:5.1f} rps "
+                    f"backlog={engine.backlog(now):3.0f} -> {active}")
+            next_ctrl += interval
+        lam = load_fn(now)
+        for _ in range(rng.poisson(lam * max(now - last, 1e-3))):
+            ctrl.monitor.record(now, 1)
+            engine.submit(
+                Request(rid=rid,
+                        tokens=rng.integers(0, vocab, prompt_len).astype(np.int64),
+                        max_new=max_new, arrival=time.time()),
+                ctrl.dispatcher.next_backend())
+            rid += 1
+        last = now
+        engine.step(now)   # one engine tick: admit into free slots + decode
+        time.sleep(tick_sleep)
+    engine.drain(seconds)  # finish whatever is still queued/in flight
+    return rid
+
+
+def rise_fall_load(seconds: float, lo: float = 4.0, hi: float = 32.0,
+                   ) -> Callable[[float], float]:
+    """The drivers' synthetic λ(t): a sin²-shaped ramp up then down."""
+    def load(now: float) -> float:
+        return lo + (hi - lo) * float(np.sin(np.pi * now / seconds) ** 2)
+    return load

@@ -1,21 +1,42 @@
 """In-process JAX serving engine — the real-execution counterpart of the
-discrete-event simulator. Implements the adapter's ClusterAPI so the same
-InfAdapter controller drives either.
+discrete-event simulator. Implements the shared ``ClusterAPI``/``ServingAPI``
+(see ``repro.serving.api``) so the same InfAdapter controller drives either.
 
-Each active variant gets a ``VariantBackend``: params + jitted prefill/decode
-with slot-based batching (requests are micro-batched up to ``max_batch`` per
-pump). Variant loading (init + jit warm-up) happens on first use — that IS
-the readiness time rt_m on this backend, measured rather than assumed.
+Two execution modes per ``VariantBackend``:
+
+  * ``"continuous"`` (default) — continuous batching over a persistent
+    slot-based batch: the KV cache is allocated once at ``(max_batch, C)``
+    and lives across requests; new requests join free slots at any decode
+    step and finished sequences retire immediately, so a long generation
+    never head-of-line-blocks a short one. The decode loop is jitted ONCE as
+    a ``jax.lax.scan`` over ``decode_chunk`` steps — no per-token Python
+    dispatch. Slot admission scatters a freshly prefilled cache into the
+    resident batch cache with a single jitted masked-gather (no recompiles:
+    every shape is fixed at warm-up).
+  * ``"pump"`` — the legacy micro-batching path (per-chunk Python decode
+    loop), kept as the baseline that ``benchmarks/bench_engine.py`` measures
+    continuous batching against.
+
+Admission control: the engine keeps a bounded FIFO queue *per variant*
+(backpressure — ``submit`` returns False and counts a rejection when the
+queue is full), so ``backlog(t)`` reports true queue depth to the
+queue-aware controller mode.
+
+Variant loading (init + jit warm-up of prefill, the decode chunk, and the
+slot-admission scatter) happens on first use — that IS the readiness time
+rt_m on this backend, measured rather than assumed.
 
 This engine is CPU-sized (smoke-scale variants) — it exists to run the
 end-to-end example and integration tests with actual model execution; the
-TPU-scale path is exercised by the dry-run.
+TPU-scale path is exercised by the dry-run. Set ``use_pallas=True`` to route
+decode attention through the ``flash_decode`` Pallas kernel (interpret mode
+off-TPU; see DESIGN.md).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Set, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Mapping, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,34 +44,30 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import build_model
+from repro.serving.api import Request, summarize_requests
 
+__all__ = ["Request", "VariantBackend", "InProcessServingEngine"]
 
-@dataclass
-class Request:
-    rid: int
-    tokens: np.ndarray          # prompt (prompt_len,)
-    max_new: int
-    arrival: float
-    backend: str = ""
-    completion: float = 0.0
-    output: Optional[np.ndarray] = None
-    accuracy: float = 0.0
-
-    @property
-    def latency_ms(self) -> float:
-        return (self.completion - self.arrival) * 1000.0
+# Batch axis of each cache leaf (k/v/conv/ssd carry a leading layer axis).
+_CACHE_BATCH_AXIS = {"pos": 0, "k": 1, "v": 1, "conv": 1, "ssd": 1, "enc": 0}
 
 
 class VariantBackend:
+    """One loaded model variant: params + jitted prefill/decode + slot state."""
+
     def __init__(self, name: str, cfg: ModelConfig, accuracy: float,
                  max_batch: int = 8, prompt_len: int = 32, max_new: int = 16,
-                 seed: int = 0):
+                 seed: int = 0, decode_chunk: int = 4,
+                 use_pallas: bool = False):
         self.name = name
+        if use_pallas and not cfg.use_pallas:
+            cfg = cfg.replace(use_pallas=True)
         self.cfg = cfg
         self.accuracy = accuracy
         self.max_batch = max_batch
         self.prompt_len = prompt_len
         self.max_new = max_new
+        self.decode_chunk = max(1, min(decode_chunk, max_new))
         self.model = build_model(cfg)
         self.units = 1
         t0 = time.time()
@@ -58,14 +75,64 @@ class VariantBackend:
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_len=prompt_len + max_new))
         self._decode = jax.jit(self.model.decode_step)
-        # warm-up compile at the fixed batch shape (part of readiness)
+        self._decode_chunk = jax.jit(self._decode_chunk_fn)
+        self._admit_merge = jax.jit(self._admit_merge_fn)
+
+        # --- persistent slot state (continuous batching) ---
         toks = jnp.zeros((max_batch, prompt_len), jnp.int32)
-        lg, cache = self._prefill(self.params, {"tokens": toks})
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        self.cache = cache                               # resident batch cache
+        self.cur_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_remaining = np.zeros((max_batch,), np.int64)
+        self.slot_tokens: List[List[int]] = [[] for _ in range(max_batch)]
+
+        # warm-up compile of every jitted entry point (part of readiness)
         self._decode(self.params, cache, jnp.zeros((max_batch,), jnp.int32))
+        self._decode_chunk(self.params, self.cache, self.cur_tok)
+        self._admit_merge(
+            self.cache, cache, self.cur_tok, self.cur_tok,
+            jnp.zeros((max_batch,), jnp.int32),
+            jnp.zeros((max_batch,), bool))
+        self.slot_req = [None] * max_batch               # warm-up left no state
         self.readiness_s = time.time() - t0
 
+    # ------------------------------------------------------------- jitted fns
+    def _decode_chunk_fn(self, params, cache, tok):
+        """``decode_chunk`` greedy decode steps as one traced scan.
+
+        Returns (next feed token (B,), cache, emitted tokens (chunk, B))."""
+        def body(carry, _):
+            t, c = carry
+            logits, c = self.model.decode_step(params, c, t)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, c), nxt
+
+        (tok, cache), toks = jax.lax.scan(
+            body, (tok, cache), None, length=self.decode_chunk)
+        return tok, cache, toks
+
+    @staticmethod
+    def _admit_merge_fn(cache, new_cache, cur_tok, new_tok, src, mask):
+        """Scatter prefilled rows into the resident batch cache.
+
+        ``src[i]`` is the row of ``new_cache`` destined for slot ``i``;
+        ``mask[i]`` selects which slots actually receive it. Fixed shapes —
+        compiles once regardless of how many requests join."""
+        out = {}
+        for key, old in cache.items():
+            ax = _CACHE_BATCH_AXIS[key]
+            nv = jnp.take(new_cache[key], src, axis=ax)
+            m = mask.reshape((1,) * ax + (-1,) + (1,) * (old.ndim - ax - 1))
+            out[key] = jnp.where(m, nv, old)
+        tok = jnp.where(mask, jnp.take(new_tok, src), cur_tok)
+        return out, tok
+
+    # -------------------------------------------------------- pump-mode path
     def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
-        """prompts: (b, prompt_len) padded to max_batch internally."""
+        """Legacy pump path: per-token Python decode loop over a micro-batch.
+
+        prompts: (b, prompt_len), padded to max_batch internally."""
         b = prompts.shape[0]
         pad = self.max_batch - b
         toks = jnp.asarray(np.pad(prompts, ((0, pad), (0, 0))))
@@ -79,22 +146,126 @@ class VariantBackend:
         out = jnp.stack(outs, axis=1)
         return np.asarray(out[:b])
 
+    # ------------------------------------------------- continuous-batch path
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def active_slots(self) -> int:
+        return self.max_batch - len(self.free_slots)
+
+    def admit(self, reqs: List[Request], now: float) -> List[Request]:
+        """Prefill ``reqs`` (≤ free slots) and join them to the batch.
+
+        A request's token budget is ``min(r.max_new, self.max_new)`` — the
+        KV ring buffer is provisioned for prompt_len + max_new tokens, so
+        longer asks are truncated (``r.output`` carries the served length;
+        the request object itself is never mutated). Requests whose budget
+        is 1 complete at admission (their token is the prefill argmax).
+        Returns requests finished here."""
+        free = self.free_slots
+        assert len(reqs) <= len(free)
+        if not reqs:
+            return []
+        n = len(reqs)
+        prompts = np.zeros((self.max_batch, self.prompt_len), np.int64)
+        for j, r in enumerate(reqs):
+            prompts[j, :len(r.tokens)] = r.tokens[:self.prompt_len]
+        logits, new_cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(prompts)})
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        src = np.zeros((self.max_batch,), np.int32)
+        mask = np.zeros((self.max_batch,), bool)
+        for j, slot in enumerate(free[:n]):
+            src[slot], mask[slot] = j, True
+        self.cache, self.cur_tok = self._admit_merge(
+            self.cache, new_cache, self.cur_tok, first,
+            jnp.asarray(src), jnp.asarray(mask))
+        first_np = np.asarray(first)
+        finished = []
+        for j, slot in enumerate(free[:n]):
+            r = reqs[j]
+            tok0 = int(first_np[j])
+            budget = min(r.max_new, self.max_new)
+            if budget <= 1:
+                self._finish(r, [tok0], now)
+                finished.append(r)
+                continue
+            self.slot_req[slot] = r
+            self.slot_remaining[slot] = budget - 1
+            self.slot_tokens[slot] = [tok0]
+        return finished
+
+    def decode_step_batch(self, now: float) -> List[Request]:
+        """One jitted chunk of decode steps; retire finished slots."""
+        if self.active_slots == 0:
+            return []
+        self.cur_tok, self.cache, toks = self._decode_chunk(
+            self.params, self.cache, self.cur_tok)
+        toks = np.asarray(toks)                          # (chunk, B)
+        finished = []
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            take = min(int(self.slot_remaining[slot]), toks.shape[0])
+            self.slot_tokens[slot].extend(int(t) for t in toks[:take, slot])
+            self.slot_remaining[slot] -= take
+            if self.slot_remaining[slot] <= 0:
+                self._finish(r, self.slot_tokens[slot], now)
+                finished.append(r)
+                self.slot_req[slot] = None
+                self.slot_tokens[slot] = []
+        return finished
+
+    def _finish(self, r: Request, tokens: List[int], now: float) -> None:
+        r.output = np.asarray(tokens[:min(r.max_new, self.max_new)], np.int64)
+        r.completion = time.time()
+        r.accuracy = self.accuracy
+
+    def drain_slots(self, now: float) -> List[Request]:
+        """Run decode chunks until every in-flight sequence completes
+        (connection draining before retirement — create-then-remove)."""
+        done: List[Request] = []
+        steps = 0
+        max_steps = self.max_new // self.decode_chunk + 2
+        while self.active_slots and steps < max_steps:
+            done.extend(self.decode_step_batch(now))
+            steps += 1
+        return done
+
 
 class InProcessServingEngine:
-    """ClusterAPI + request execution on real models."""
+    """``ServingAPI`` on real models (continuous batching or legacy pump).
+
+    Parameters mirror the paper's serving setup: ``variants`` maps name ->
+    (ModelConfig, accuracy%); ``apply_allocation`` loads/retires variants
+    with measured readiness; per-variant admission queues are bounded at
+    ``queue_cap`` requests (backpressure).
+    """
 
     def __init__(self, variants: Mapping[str, Tuple[ModelConfig, float]],
-                 max_batch: int = 8, prompt_len: int = 32):
+                 max_batch: int = 8, prompt_len: int = 32,
+                 mode: str = "continuous", max_new: int = 16,
+                 decode_chunk: int = 4, queue_cap: int = 256,
+                 use_pallas: bool = False):
+        assert mode in ("continuous", "pump"), mode
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
         self.prompt_len = prompt_len
+        self.mode = mode
+        self.max_new = max_new
+        self.decode_chunk = decode_chunk
+        self.queue_cap = queue_cap
+        self.use_pallas = use_pallas
         self.backends: Dict[str, VariantBackend] = {}
         self.units: Dict[str, int] = {}
-        self.queue: List[Request] = []
+        self.queues: Dict[str, Deque[Request]] = {}
         self.done: List[Request] = []
+        self.rejected: int = 0
         self.cost_log: List[Tuple[float, int]] = []
 
-    # ---- ClusterAPI ----
+    # ------------------------------------------------------------ ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
         target = {m: n for m, n in units.items() if n > 0}
         for m, n in target.items():
@@ -102,61 +273,148 @@ class InProcessServingEngine:
                 cfg, acc = self.variant_defs[m]
                 self.backends[m] = VariantBackend(
                     m, cfg, acc, max_batch=self.max_batch,
-                    prompt_len=self.prompt_len)
+                    prompt_len=self.prompt_len, max_new=self.max_new,
+                    decode_chunk=self.decode_chunk,
+                    use_pallas=self.use_pallas)
+                self.queues.setdefault(m, deque())
             self.backends[m].units = n
         for m in list(self.backends):
             if m not in target:
-                del self.backends[m]
+                b = self.backends.pop(m)
+                # connection draining: finish in-flight work; waiting requests
+                # stay queued and are rebalanced onto survivors at the next
+                # tick — an accepted request is never dropped by a switch
+                self.done.extend(b.drain_slots(t))
+        self._rebalance_queues()
         self.units = dict(target)
         self.cost_log.append((t, sum(target.values())))
+
+    def _rebalance_queues(self) -> None:
+        """Move requests queued on retired variants to the least-loaded live
+        ones. Accepted work is never dropped, so a switch may transiently
+        push a survivor's queue past ``queue_cap``; only *new* submissions
+        are bounded (backpressure). If an allocation empties the cluster,
+        orphans stay queued (visible via ``backlog``/``summarize['pending']``)
+        and are served once the next allocation loads a variant."""
+        if not self.backends:
+            return                       # keep orphans until a variant loads
+        dead = [m for m in self.queues if m not in self.backends]
+        for m in dead:
+            for r in self.queues.pop(m):
+                tgt = min(self.backends,
+                          key=lambda n: len(self.queues.setdefault(n, deque())))
+                r.backend = tgt
+                self.queues.setdefault(tgt, deque()).append(r)
 
     def loaded_variants(self, t: float) -> Set[str]:
         return set(self.backends)
 
     def backlog(self, t: float) -> float:
-        return float(len(self.queue))
+        """True admission-queue depth (waiting, not yet in a slot)."""
+        return float(sum(len(q) for q in self.queues.values()))
 
-    # ---- serving ----
-    def submit(self, req: Request, backend: Optional[str]) -> None:
-        req.backend = backend or ""
-        self.queue.append(req)
+    def in_flight(self) -> int:
+        return sum(b.active_slots for b in self.backends.values())
+
+    # ---------------------------------------------------------------- serving
+    def submit(self, req: Request, backend: Optional[str]) -> bool:
+        """Enqueue on ``backend``'s admission queue (or the least-loaded live
+        one). Returns False — backpressure — when the queue is full."""
+        if not self.backends:
+            self.rejected += 1
+            return False
+        name = backend if backend in self.backends else \
+            min(self.queues, key=lambda m: len(self.queues[m])) \
+            if self.queues else min(self.backends)
+        q = self.queues.setdefault(name, deque())
+        if len(q) >= self.queue_cap:
+            self.rejected += 1
+            return False
+        req.backend = name
+        q.append(req)
+        return True
+
+    def step(self, now: float) -> int:
+        """ONE engine tick (continuous mode): each backend admits waiting
+        requests into free slots, then runs one jitted decode chunk.
+        Non-blocking — the real-time loops in ``examples/`` and
+        ``benchmarks/bench_engine.py`` call this between arrival batches."""
+        if self.mode != "continuous":
+            return self._pump_legacy(now)
+        return self._tick(now)
 
     def pump(self, now: float) -> int:
-        """Serve queued requests in micro-batches. Returns #served."""
-        if not self.queue or not self.backends:
-            return 0
+        """Serve everything currently queued; returns #completed.
+
+        Blocking convenience wrapper: in continuous mode it ticks until the
+        queues and slots are empty; in pump mode it drains every queue in
+        micro-batches (the legacy path)."""
+        if self.mode == "continuous":
+            return self.drain(now)
+        return self._pump_legacy(now)
+
+    def _tick(self, now: float) -> int:
+        self._rebalance_queues()
+        done_before = len(self.done)
+        for name, b in self.backends.items():
+            q = self.queues.get(name, deque())
+            joiners = [q.popleft() for _ in range(min(len(q),
+                                                      len(b.free_slots)))]
+            self.done.extend(b.admit(joiners, now))
+            self.done.extend(b.decode_step_batch(now))
+        return len(self.done) - done_before
+
+    def drain(self, now: float, max_ticks: int = 10_000) -> int:
+        """Tick until every queue and slot is empty."""
+        if self.mode != "continuous":
+            return self._pump_legacy(now)
         served = 0
-        by_backend: Dict[str, List[Request]] = {}
-        for r in self.queue:
-            name = r.backend if r.backend in self.backends else \
-                min(self.backends)
-            by_backend.setdefault(name, []).append(r)
-        self.queue.clear()
-        for name, reqs in by_backend.items():
+        for _ in range(max_ticks):
+            if not self.backends or (self.backlog(now) == 0
+                                     and self.in_flight() == 0):
+                break
+            served += self._tick(now)
+        return served
+
+    def _pump_legacy(self, now: float) -> int:
+        self._rebalance_queues()
+        served = 0
+        for name in list(self.queues):
+            q = self.queues[name]
+            if not q or name not in self.backends:
+                continue
             b = self.backends[name]
+            reqs = list(q)
+            q.clear()
             for i in range(0, len(reqs), b.max_batch):
                 chunk = reqs[i:i + b.max_batch]
-                prompts = np.stack([r.tokens for r in chunk])
-                out = b.generate(prompts, max_new=max(r.max_new for r in chunk))
+                prompts = np.stack([
+                    np.pad(r.tokens[:self.prompt_len],
+                           (0, max(0, self.prompt_len - len(r.tokens))))
+                    for r in chunk])
+                gen = min(max(r.max_new for r in chunk), self.max_new)
+                out = b.generate(prompts, max_new=gen)
                 tdone = time.time()
                 for j, r in enumerate(chunk):
-                    r.output = out[j, :r.max_new]
+                    r.output = out[j, :min(r.max_new, self.max_new)]
                     r.completion = tdone
                     r.accuracy = b.accuracy
                     self.done.append(r)
                     served += 1
         return served
 
+    # ---------------------------------------------------------------- metrics
     def summarize(self, slo_ms: float, best_accuracy: float) -> Dict:
-        if not self.done:
-            return {}
-        lat = np.array([r.latency_ms for r in self.done])
-        acc = np.array([r.accuracy for r in self.done])
-        return {
-            "n_requests": len(self.done),
-            "violation_rate": float((lat > slo_ms).mean()),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "mean_latency_ms": float(lat.mean()),
-            "avg_accuracy": float(acc.mean()),
-            "accuracy_loss": float(best_accuracy - acc.mean()),
-        }
+        out = summarize_requests(
+            [r.arrival for r in self.done],
+            [r.latency_ms for r in self.done],
+            [r.accuracy for r in self.done],
+            slo_ms=slo_ms, best_accuracy=best_accuracy,
+            cost_samples=self.cost_log)
+        if out:
+            out["rejected"] = self.rejected
+            # accepted but not yet served (queued + in flight) — nonzero when
+            # summarizing mid-run or after an allocation emptied the cluster
+            out["pending"] = int(sum(len(q) for q in self.queues.values())
+                                 + self.in_flight())
+        return out

@@ -27,6 +27,7 @@ from typing import Dict, List, Mapping, Optional, Set
 import numpy as np
 
 from repro.core.profiles import VariantProfile
+from repro.serving.api import Request, summarize_requests
 
 RESIZE_DELAY_S = 1.0
 # Profiled th(n) is the *SLO-sustained* rate (the paper measures throughput at
@@ -93,7 +94,10 @@ class ServedRequest:
 
 
 class SimCluster:
-    """Implements the adapter's ClusterAPI + request serving."""
+    """Discrete-event implementation of the shared ``ClusterAPI``/
+    ``ServingAPI`` (``repro.serving.api``) — the same contract the real
+    ``InProcessServingEngine`` implements, so controllers and the experiment
+    harness drive either interchangeably."""
 
     def __init__(self, profiles: Mapping[str, VariantProfile]):
         self.profiles = dict(profiles)
@@ -138,6 +142,20 @@ class SimCluster:
         return total
 
     # ---------------------------------------------------------------- serving
+    def submit(self, req: Request, backend: Optional[str]) -> bool:
+        """ServingAPI parity with the real engine: a simulated request needs
+        only its arrival time — prompt tokens don't affect queueing."""
+        self.dispatch(req.arrival, backend or None)
+        return True
+
+    def step(self, now: float) -> int:
+        """No-op: the DES serves synchronously at submit time."""
+        return 0
+
+    def drain(self, now: float) -> int:
+        """No-op: nothing is ever left in flight between submits."""
+        return 0
+
     def _purge(self, t: float) -> None:
         for m in [m for m, b in self.backends.items() if b.retire_at <= t]:
             del self.backends[m]
@@ -183,38 +201,10 @@ class SimCluster:
     # ---------------------------------------------------------------- metrics
     def summarize(self, slo_ms: float, best_accuracy: float,
                   window_s: float = 10.0) -> Dict:
-        reqs = sorted(self.requests, key=lambda r: r.arrival)
-        if not reqs:
-            return {}
-        lat = np.array([r.latency_ms for r in reqs])
-        acc = np.array([r.accuracy for r in reqs])
-        arr = np.array([r.arrival for r in reqs])
-        viol = lat > slo_ms
-        t_end = arr.max()
-        wins, p99s, accs, vrate = [], [], [], []
-        for w0 in np.arange(0, t_end, window_s):
-            m = (arr >= w0) & (arr < w0 + window_s)
-            if m.sum() > 3:
-                wins.append(float(w0))
-                p99s.append(float(np.percentile(lat[m], 99)))
-                accs.append(float(acc[m].mean()))
-                vrate.append(float(viol[m].mean()))
-        cost_t = np.array([c[0] for c in self.cost_samples], float)
-        cost_v = np.array([c[1] for c in self.cost_samples], float)
-        if len(cost_t) > 1:
-            avg_cost = float(np.trapezoid(cost_v, cost_t)
-                             / max(cost_t[-1] - cost_t[0], 1e-9))
-        else:
-            avg_cost = float(cost_v.mean()) if len(cost_v) else 0.0
-        return {
-            "n_requests": len(reqs),
-            "violation_rate": float(viol.mean()),
-            "violation_seconds": float(len({int(a) for a, v in zip(arr, viol) if v})),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "mean_latency_ms": float(lat.mean()),
-            "avg_accuracy": float(acc.mean()),
-            "accuracy_loss": float(best_accuracy - acc.mean()),
-            "avg_cost_units": avg_cost,
-            "windows": {"t": wins, "p99_ms": p99s, "accuracy": accs,
-                        "violation_rate": vrate},
-        }
+        """Paper evaluation summary (§6) via the shared metric helper."""
+        return summarize_requests(
+            [r.arrival for r in self.requests],
+            [r.latency_ms for r in self.requests],
+            [r.accuracy for r in self.requests],
+            slo_ms=slo_ms, best_accuracy=best_accuracy,
+            cost_samples=self.cost_samples, window_s=window_s)

@@ -1,8 +1,19 @@
 """Experiment runner: replay a workload trace against a controller + cluster.
 
-Reproduces the paper's evaluation harness: Poisson arrivals from a per-second
-rate trace, the controller stepping every 30 s, the dispatcher load-balancing
-by quota, and the simulator measuring windowed P99 / accuracy / cost.
+Reproduces the paper's evaluation harness (§6): Poisson arrivals from a
+per-second rate trace (the Twitter-trace methodology of Fig. 5/8), the
+controller stepping every 30 s, the dispatcher load-balancing by the solver's
+quotas λ_m, and the cluster measuring windowed P99 / accuracy / cost.
+
+The cluster is any ``ServingAPI`` implementation (``repro.serving.api``) —
+pass ``cluster=`` to replay against something other than a fresh
+``SimCluster``. Asynchronous backends (the real engine) are ticked after
+each submission and drained at the end; note their latencies are wall-clock
+while arrival stamps are simulated, so absolute latency numbers are only
+meaningful on the simulator — the real engine is normally driven in
+wall-clock time by ``examples/serve_autoscale.py`` instead. Ensemble
+(fanout) controllers additionally need the DES's ``dispatch_fanout`` and
+are rejected with a clear error on other backends.
 """
 from __future__ import annotations
 
@@ -13,7 +24,10 @@ import numpy as np
 
 from repro.core.profiles import VariantProfile
 from repro.data.traces import arrivals_from_rate
+from repro.serving.api import Request
 from repro.sim.cluster import SimCluster
+
+_NO_TOKENS = np.zeros((0,), np.int64)   # sim requests carry no prompt
 
 
 @dataclass
@@ -34,8 +48,16 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
                    interval_s: float = 30.0, seed: int = 0,
                    warm_start: Optional[Mapping[str, int]] = None,
                    reference_accuracy: Optional[float] = None,
+                   cluster=None,
                    ) -> ExperimentResult:
-    cluster = SimCluster(profiles)
+    """Replay ``rate_trace`` (requests/s per second) and score the controller.
+
+    Faithful to the paper's setup: ``interval_s=30`` s control period,
+    ``slo_ms=750`` ms latency SLO, accuracy loss reported against the most
+    accurate variant (Table 1). ``warm_start`` pre-loads variants as the
+    paper's experiments do so t=0 isn't an artificial cold start.
+    """
+    cluster = cluster if cluster is not None else SimCluster(profiles)
     best_acc = reference_accuracy if reference_accuracy is not None \
         else max(p.accuracy for p in profiles.values())
     arrivals = arrivals_from_rate(rate_trace, seed=seed)
@@ -55,7 +77,7 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
     react_s = getattr(getattr(controller, "cfg", None), "reactive_check_s", 5.0)
     next_ctrl = interval_s
     next_react = react_s
-    for a in arrivals:
+    for rid, a in enumerate(arrivals):
         while a >= next_ctrl:
             controller.monitor.advance_to(next_ctrl)
             controller.step(next_ctrl, cluster)
@@ -67,15 +89,29 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
             next_react += react_s
         controller.monitor.record(a, 1)
         if hasattr(controller, "fanout_backends"):
-            # Cocktail-style ensembling: every member serves every request
+            # Cocktail-style ensembling: every member serves every request.
+            # Fanout needs the DES's dispatch_fanout (latency = slowest
+            # member) — not part of the ServingAPI protocol, so fail clearly
+            # rather than mid-replay on an arbitrary AttributeError.
+            if not hasattr(cluster, "dispatch_fanout"):
+                raise TypeError(
+                    f"controller {type(controller).__name__} requires fanout "
+                    f"dispatch, which {type(cluster).__name__} does not "
+                    "support; use SimCluster for ensemble controllers")
             members = controller.fanout_backends()
             acc = controller.decisions[-1].allocation.aa \
                 if controller.decisions else 0.0
             cluster.dispatch_fanout(a, members, acc)
         else:
             backend = controller.dispatcher.next_backend()
-            cluster.dispatch(a, backend)
+            # Rejected submissions (backpressure on the real engine) are
+            # counted by that backend's summary ("rejected"); they are not
+            # scored as served requests. SimCluster never rejects.
+            cluster.submit(Request(rid=rid, tokens=_NO_TOKENS, max_new=1,
+                                   arrival=a), backend)
+            cluster.step(a)       # no-op on synchronous backends
 
+    cluster.drain(arrivals[-1] if len(arrivals) else 0.0)
     summary = cluster.summarize(slo_ms, best_acc)
     return ExperimentResult(name=name, summary=summary,
                             decisions=list(getattr(controller, "decisions", [])))

@@ -7,6 +7,14 @@ from repro.sharding.context import (activation_sharding, batch_shard_size,
                                     constrain, constrain_batch)
 
 
+def _make_mesh(sizes, names):
+    """jax.make_mesh across versions: axis_types only exists on newer jax."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(sizes, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(sizes))
+    return jax.make_mesh(sizes, names)
+
+
 def test_noop_without_context():
     x = jnp.ones((8, 4))
     assert constrain_batch(x) is x
@@ -24,8 +32,7 @@ def test_model_outputs_identical_with_singleton_mesh():
     p = m.init(jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
     base, _ = m.apply(p, {"tokens": toks}, train=False)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh((1, 1), ("data", "model"))
     with activation_sharding(mesh, ("data",)):
         pinned, _ = m.apply(p, {"tokens": toks}, train=False)
     np.testing.assert_allclose(np.asarray(base), np.asarray(pinned),
@@ -33,8 +40,7 @@ def test_model_outputs_identical_with_singleton_mesh():
 
 
 def test_indivisible_dims_left_alone():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh((1, 1), ("data", "model"))
     with activation_sharding(mesh, ("data",)):
         x = jnp.ones((7, 3))   # 7 % 1 == 0 -> constraint fine with 1 shard
         y = constrain_batch(x)

@@ -1,5 +1,8 @@
 """Weighted round-robin: quota-proportional dispatch (paper's dispatcher)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dispatcher import WeightedRoundRobinDispatcher

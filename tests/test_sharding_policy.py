@@ -10,8 +10,17 @@ from repro.launch.steps import cache_shapes, params_shapes
 from repro.configs.shapes import get_shape
 from repro.sharding.policy import cache_specs, param_specs
 
-MESH = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: 0.4.x takes ((name, size), ...);
+    newer releases take (sizes, names)."""
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+POD_MESH = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _find(specs, path_fragment):

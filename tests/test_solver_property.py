@@ -1,5 +1,8 @@
 """Hypothesis property tests over the solver's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.objective import evaluate
