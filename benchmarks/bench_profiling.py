@@ -1,0 +1,105 @@
+"""Profiling subsystem benchmark: how wrong is each profile source?
+
+For a smoke-scale two-variant ladder, measures (real engine, saturating
+open-loop sweep) the ground-truth throughput at each allocation point and
+reports, per variant, the median relative error of each profile source
+against those measurements:
+
+  * ``measured``  — the ``EngineProfiler`` regression fit itself (pure fit
+    residual: how much the linear model th(n)=a·n+b loses on real points);
+  * ``roofline``  — the analytic TPU roofline, cross-calibrated by
+    ``roofline_scale_factor`` from the *other* variant (leave-one-out, so
+    the calibration never sees the variant it predicts);
+  * ``paper-calibrated`` — the paper's ResNet constants, checked the same
+    way against their own synthetic measurement points (fit error under
+    the paper's 1% measurement noise).
+
+Also round-trips the measured store through ``reports/profiles/`` as a
+persistence smoke check. Wall-clock real execution, ~15–30 s.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only profiling
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+POINTS = (1, 2, 4)
+REQUESTS_PER_POINT = 24
+WARMUP = 6
+STORE_PATH = "reports/profiles/bench_profiling.json"
+
+
+def _variants():
+    from repro.configs import get_config, smoke_variant
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=128)
+    return {
+        "prof-2L": (base.replace(num_layers=2, name="prof-2L"), 70.0),
+        "prof-3L": (base.replace(num_layers=3, name="prof-3L"), 75.0),
+    }
+
+
+def _median_rel_err(profile, points) -> float:
+    errs = [abs(profile.throughput(n) - th) / max(th, 1e-9)
+            for n, th in points]
+    return float(np.median(errs))
+
+
+def run() -> List[Tuple[str, float, str]]:
+    from repro.core.profiles import (fit_throughput, measured_resnet_points,
+                                     paper_resnet_profiles)
+    from repro.profiling.calibrate import (calibrated_roofline_profile,
+                                           roofline_scale_factor)
+    from repro.profiling.measure import EngineProfiler
+    from repro.profiling.store import ProfileStore
+    from repro.serving.engine import InProcessServingEngine
+
+    variants = _variants()
+    cfgs = {name: cfg for name, (cfg, _) in variants.items()}
+    eng = InProcessServingEngine(variants, max_batch=max(POINTS),
+                                 prompt_len=8, max_new=8, decode_chunk=4)
+    profiler = EngineProfiler(eng, points=POINTS,
+                              requests_per_point=REQUESTS_PER_POINT,
+                              warmup=WARMUP)
+    store = ProfileStore(STORE_PATH)
+    measurements = profiler.profile_all(store=store)
+
+    rows: List[Tuple[str, float, str]] = []
+    for name, m in measurements.items():
+        truth = [(p.units, p.throughput_rps) for p in m.points]
+        # measured source: the fit's own residual against its points
+        err_meas = _median_rel_err(m.profile, truth)
+        rows.append((f"measured_{name}", err_meas * 1e6,
+                     f"relerr={err_meas:.3f} r2={m.th_fit.r_squared:.3f}"))
+        # roofline source: leave-one-out cross-calibration
+        others = {k: v for k, v in measurements.items() if k != name}
+        scale = roofline_scale_factor(others, cfgs)
+        roof = calibrated_roofline_profile(cfgs[name], m.profile.accuracy,
+                                           scale=scale)
+        err_roof = _median_rel_err(roof, truth)
+        rows.append((f"roofline_{name}", err_roof * 1e6,
+                     f"relerr={err_roof:.3f} scale={scale:.2e}"))
+
+    # paper-calibrated source: fit error against its own noisy measurements
+    paper = paper_resnet_profiles(noise=0.01, seed=0)
+    for name in ("resnet18", "resnet152"):
+        pts = measured_resnet_points(name, noise=0.01, seed=0)
+        err = _median_rel_err(paper[name], pts)
+        fit = fit_throughput(pts)
+        rows.append((f"paper_{name}", err * 1e6,
+                     f"relerr={err:.4f} r2={fit.r_squared:.4f}"))
+
+    # persistence smoke: save -> load -> identical profiles
+    path = store.save()
+    loaded = ProfileStore.load(path)
+    ok = all(loaded.get(n) == measurements[n].profile for n in measurements)
+    rows.append(("store_roundtrip", float(len(loaded)),
+                 f"identical={ok} path={path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,152 @@
+"""End-to-end measured-profiling demo (the paper's §5 Profiler, live):
+
+  1. PROFILE   — sweep a real three-variant ladder on the in-process engine
+                 across the paper's allocation points; regression-fit
+                 th(n) = a·n + b and p(n) = base + k/n from measurements.
+  2. PERSIST   — register everything in the versioned profile store
+                 (reports/profiles/), together with cross-calibrated
+                 roofline profiles for a TPU-scale ladder the CPU cannot
+                 run; save, reload, and serve from the *loaded* store.
+  3. SERVE     — run the InfAdapter control loop against the engine using
+                 the measured profiles (units -> concurrency enforced, so
+                 profiled capacity is live capacity).
+  4. DRIFT     — slow the engine down (decode chunk cut 4 -> 1 plus
+                 simulated host contention stalling every decode chunk)
+                 and serve again: the drift detector flags the stale
+                 profile.
+  5. RECAL     — targeted re-profile of only the drifted variant; the
+                 store is patched, the controller's profile swapped, and
+                 the Eq. 1 solver's allocation shifts.
+
+Run:  PYTHONPATH=src python examples/profile_and_serve.py [--seconds 12]
+"""
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.adapter import ControllerConfig, InfAdapterController
+from repro.core.forecaster import MovingMaxForecaster
+from repro.profiling.calibrate import profile_unrunnable
+from repro.profiling.drift import DriftDetector, OnlineRecalibrator
+from repro.profiling.measure import EngineProfiler
+from repro.profiling.store import DEFAULT_STORE_DIR, ProfileStore
+from repro.serving.api import Request
+from repro.serving.driver import rise_fall_load, run_serving_loop
+from repro.serving.engine import InProcessServingEngine
+
+SLO_MS = 2000.0
+
+
+def build_ladder():
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=128, vocab_size=256)
+    return {
+        "tiny-2L": (base.replace(num_layers=2, name="tiny-2L"), 70.0),
+        "tiny-4L": (base.replace(num_layers=4, name="tiny-4L"), 75.0),
+        "tiny-6L": (base.replace(num_layers=6, name="tiny-6L"), 78.0),
+    }
+
+
+def make_engine(variants, decode_chunk):
+    return InProcessServingEngine(variants, max_batch=8, prompt_len=16,
+                                  max_new=8, decode_chunk=decode_chunk,
+                                  enforce_units=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=int, default=12)
+    ap.add_argument("--interval", type=float, default=4.0)
+    args = ap.parse_args()
+
+    variants = build_ladder()
+    engine = make_engine(variants, decode_chunk=4)
+
+    # -- 1. PROFILE: measured sweep over the paper's allocation points -------
+    print("== profiling variants from engine measurements ==")
+    profiler = EngineProfiler(engine, points=(1, 2, 4, 8),
+                              requests_per_point=16, warmup=4)
+    store = ProfileStore(os.path.join(DEFAULT_STORE_DIR, "demo.json"))
+    measurements = profiler.profile_all(store=store)
+    for name, m in measurements.items():
+        print(f"  {name}: th(n)={m.th_fit.slope:.1f}n{m.th_fit.intercept:+.1f} "
+              f"rps (R2={m.th_fit.r_squared:.3f})  "
+              f"p(n)={m.lat_base_ms:.1f}+{m.lat_k_ms:.1f}/n ms  "
+              f"rt={m.readiness_s:.2f}s")
+
+    # -- 2. PERSIST: + cross-calibrated roofline for an unrunnable ladder ----
+    big = get_config("tinyllama-1.1b")
+    profile_unrunnable(
+        [big.replace(name="tinyllama-full")], [82.0], measurements,
+        {n: variants[n][0] for n in variants}, store=store)
+    path = store.save()
+    loaded = ProfileStore.load(path)
+    print(f"== store saved+reloaded: {path} ({len(loaded)} profiles) ==")
+    for n in loaded.names():
+        e = loaded.entry(n)
+        print(f"  {n}: provenance={e.provenance}")
+
+    # -- 3. SERVE with MEASURED profiles (not inline constants) --------------
+    measured = {n: loaded.get(n) for n in variants}   # engine-servable subset
+    cfg = ControllerConfig(interval_s=args.interval, budget=8, slo_ms=SLO_MS,
+                           beta=0.05, gamma=0.05, queue_aware=True)
+    ctrl = InfAdapterController(measured, MovingMaxForecaster(window=10), cfg)
+    print(f"\n== serving {args.seconds}s with measured profiles ==")
+    run_serving_loop(engine, ctrl, seconds=args.seconds,
+                     interval=args.interval,
+                     load_fn=rise_fall_load(args.seconds, lo=4.0, hi=24.0))
+    s = engine.summarize(SLO_MS, best_accuracy=78.0)
+    if s:
+        print(f"served {s['n_requests']}: viol={s['violation_rate']:.1%} "
+              f"p99={s['p99_ms']:.0f}ms queue~{s.get('mean_queue_ms', 0):.0f}ms "
+              f"service~{s.get('mean_service_ms', 0):.0f}ms")
+
+    # -- 4. DRIFT: cut the decode chunk + simulate host contention -----------
+    print("\n== injecting slowdown (decode_chunk 4 -> 1, +10ms contention "
+          "per chunk) ==")
+    slow = make_engine(variants, decode_chunk=1)
+    detector = DriftDetector(loaded, tolerance=0.35, min_requests=8)
+    last = ctrl.decisions[-1].allocation.units if ctrl.decisions else {}
+    units = {m: n for m, n in last.items() if n > 0} or {"tiny-2L": 2}
+    slow.apply_allocation(0.0, units)
+    for b in slow.backends.values():        # a noisy neighbour stealing CPU
+        b._decode_chunk = (lambda orig: lambda p, c, t:
+                           (time.sleep(0.010), orig(p, c, t))[1])(b._decode_chunk)
+    rng = np.random.default_rng(0)
+    for i in range(24):
+        name = list(units)[i % len(units)]
+        slow.submit(Request(rid=i, tokens=rng.integers(0, 256, 16).astype(np.int64),
+                            max_new=8, arrival=time.time()), name)
+        slow.step(0.0)
+    slow.drain(0.0)
+    detector.observe_engine(slow)
+    reports = detector.check_all(units)
+    for rep in reports:
+        flag = "DRIFTED" if rep.drifted else "ok"
+        print(f"  {rep.variant}: {flag} service_ratio={rep.service_ratio:.2f} "
+              f"({rep.reason or 'within band'})")
+
+    # -- 5. RECAL: re-profile drifted variants, allocation shifts ------------
+    slow_profiler = EngineProfiler(slow, points=(1, 2, 4),
+                                   requests_per_point=10, warmup=3)
+    recal = OnlineRecalibrator(slow_profiler, loaded, controller=ctrl,
+                               detector=detector)
+    drifted = [r.variant for r in reports if r.drifted]
+    lam = ctrl.decisions[-1].predicted_load if ctrl.decisions else 16.0
+    before = ctrl.decide(0.0, slow).allocation.units
+    for name in drifted:
+        m = recal.recalibrate(name)
+        print(f"  recalibrated {name}: th(1) "
+              f"{measured[name].throughput(1):.0f} -> "
+              f"{m.profile.throughput(1):.0f} rps")
+    after = ctrl.decide(0.0, slow).allocation.units
+    print(f"\n== allocation for lam={lam:.0f} rps: {before} -> {after} ==")
+    loaded.save()
+    print(f"store updated: {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,14 +14,13 @@ Run:  PYTHONPATH=src python examples/serve_autoscale.py [--seconds 30]
       [--mode continuous|pump]   (pump = legacy micro-batching baseline)
 """
 import argparse
-import time
-
-import numpy as np
+import os
 
 from repro.configs import get_config, smoke_variant
 from repro.core.adapter import ControllerConfig, InfAdapterController
 from repro.core.forecaster import MovingMaxForecaster
-from repro.core.profiles import VariantProfile
+from repro.profiling.measure import EngineProfiler
+from repro.profiling.store import DEFAULT_STORE_DIR, ProfileStore
 from repro.serving.api import ClusterAPI, ServingAPI
 from repro.serving.driver import rise_fall_load, run_serving_loop
 from repro.serving.engine import InProcessServingEngine
@@ -37,26 +36,21 @@ def build_ladder():
     }
 
 
-def calibrate(engine, variants, reps=3):
-    """Measure per-variant throughput (generate-RPS) + readiness live."""
-    profiles = {}
-    for name in variants:
-        engine.apply_allocation(0.0, {name: 1})
-        b = engine.backends[name]
-        prompts = np.ones((b.max_batch, b.prompt_len), np.int64)
-        t0 = time.time()
-        for _ in range(reps):
-            b.generate(prompts, max_new=8)
-        per_req = (time.time() - t0) / (reps * b.max_batch)
-        rps = 1.0 / per_req
-        profiles[name] = VariantProfile(
-            name=name, accuracy=variants[name][1], rt=b.readiness_s,
-            th_slope=rps, th_intercept=0.0, lat_base_ms=per_req * 1000,
-            lat_k_ms=per_req * 1000 * b.max_batch, max_units=4)
-        print(f"  {name}: {rps:6.1f} req/s per unit, readiness "
-              f"{b.readiness_s:.2f}s, p(1)~{profiles[name].p99_ms(1):.0f} ms")
-    engine.apply_allocation(0.0, {})
-    return profiles
+def calibrate(engine, variants):
+    """Measured profiles via the profiling subsystem: the ``EngineProfiler``
+    sweeps each variant across allocation points, the results persist in the
+    profile store, and the controller loads from the *store* — no inline
+    profile constants (see DESIGN.md §Profiling)."""
+    profiler = EngineProfiler(engine, points=(1, 2, 4),
+                              requests_per_point=12, warmup=3, max_units=4)
+    store = ProfileStore(os.path.join(DEFAULT_STORE_DIR, "serve_autoscale.json"))
+    measurements = profiler.profile_all(store=store)
+    for name, m in measurements.items():
+        print(f"  {name}: th(n)={m.th_fit.slope:.1f}n{m.th_fit.intercept:+.1f} "
+              f"req/s (R2={m.th_fit.r_squared:.2f}), readiness "
+              f"{m.readiness_s:.2f}s, p(1)~{m.profile.p99_ms(1):.0f} ms")
+    store.save()
+    return ProfileStore.load(store.path).profiles()
 
 
 def main():

@@ -1,7 +1,8 @@
-"""Generate the §Dry-run and §Roofline markdown tables in EXPERIMENTS.md from
-reports/dryrun/*.json.
+"""Generate the §Dry-run, §Roofline, and §Profiles markdown tables in
+EXPERIMENTS.md from reports/dryrun/*.json and reports/profiles/*.json.
 
 Usage: PYTHONPATH=src python -m repro.analysis.report [--dir reports/dryrun]
+           [--profiles-dir reports/profiles]
 """
 from __future__ import annotations
 
@@ -68,6 +69,32 @@ def roofline_table(rows) -> str:
     return "\n".join(out)
 
 
+def profiles_table(profiles_dir: str) -> str:
+    """One row per stored variant profile across every store JSON in the
+    directory: provenance, fitted curves, confidence — the §Profiles audit
+    table (which numbers the solver is trusting, and why)."""
+    out = ["| store | variant | provenance | th(n) rps | R² | p(n) ms | "
+           "rt s | acc |",
+           "|---|---|---|---|---|---|---|---|"]
+    from repro.profiling.store import ProfileStore
+    for f in sorted(glob.glob(os.path.join(profiles_dir, "*.json"))):
+        try:
+            store = ProfileStore.load(f)
+        except (ValueError, KeyError, json.JSONDecodeError):
+            out.append(f"| {os.path.basename(f)} | — | UNREADABLE | | | | | |")
+            continue
+        for name in store.names():
+            e = store.entry(name)
+            p = e.profile
+            r2 = f"{e.fit.r_squared:.3f}" if e.fit is not None else "—"
+            out.append(
+                f"| {os.path.basename(f)} | {name} | {e.provenance} | "
+                f"{p.th_slope:.1f}·n{p.th_intercept:+.1f} | {r2} | "
+                f"{p.lat_base_ms:.1f}+{p.lat_k_ms:.1f}/n | {p.rt:.2f} | "
+                f"{p.accuracy:.1f} |")
+    return "\n".join(out)
+
+
 def inject(md_path: str, marker: str, table: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -87,11 +114,13 @@ def inject(md_path: str, marker: str, table: str) -> None:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--profiles-dir", default="reports/profiles")
     ap.add_argument("--md", default="EXPERIMENTS.md")
     args = ap.parse_args()
     rows = load(args.dir)
     inject(args.md, "DRYRUN_TABLE", dryrun_table(rows))
     inject(args.md, "ROOFLINE_TABLE", roofline_table(rows))
+    inject(args.md, "PROFILES_TABLE", profiles_table(args.profiles_dir))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

@@ -65,6 +65,14 @@ class InfAdapterController:
         self.monitor = RateMonitor()
         self.decisions: List[Decision] = []
 
+    def update_profiles(self, updates: Mapping[str, VariantProfile]) -> None:
+        """Online recalibration hook (``repro.profiling.drift``): swap in
+        re-measured profiles between control intervals. The next ``decide``
+        solves Eq. 1 against the refreshed th_m(n)/p_m(n) curves — the paper
+        treats profiles as static inputs; keeping them honest against the
+        live engine is the drift-recalibration extension."""
+        self.profiles.update(updates)
+
     def predict(self) -> float:
         """Next-interval peak load λ̂ (requests/s) from the last 10 min of
         per-second history — the paper's LSTM forecaster input window (§4.1,

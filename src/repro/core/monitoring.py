@@ -32,7 +32,6 @@ class RateMonitor:
     def advance_to(self, t: float) -> None:
         """Flush empty seconds up to time t."""
         self.record(t, 0)
-        self._current -= 0
 
     def history(self, seconds: int = 600) -> np.ndarray:
         """Per-second rates for the trailing window (excludes current bucket)."""

@@ -5,13 +5,25 @@ at a handful of allocations (1, 2, 4, 8, 16 cores) and a *linear regression*
 ``th_m(n) = a·n + b`` predicts throughput at any allocation; processing
 latency is modeled as ``p_m(n) = base + k / n``.
 
-Two profile sources:
-  * ``paper_resnet_profiles()`` — the paper's ResNet-18/34/50/101/152 family,
-    calibrated so every relation the paper reports holds (Fig. 1/2; see
-    EXPERIMENTS.md §Paper-validation for the checked claims).
-  * ``roofline_profile(cfg, ...)`` — TPU adaptation: throughput of an LLM
-    variant on n chips derived from the analytic roofline (bf16 197 TFLOP/s,
-    819 GB/s HBM per chip), used by the TPU serving path.
+Three profile sources, distinguished by *provenance* in the profile store
+(``repro.profiling.store.ProfileStore``):
+  * ``paper-calibrated`` — ``paper_resnet_profiles()``: the paper's
+    ResNet-18/34/50/101/152 family, calibrated so every relation the paper
+    reports holds (Fig. 1/2; see EXPERIMENTS.md §Paper-validation for the
+    checked claims).
+  * ``roofline`` — ``roofline_profile(cfg, ...)``: TPU adaptation —
+    throughput of an LLM variant on n chips derived from the analytic
+    roofline (bf16 197 TFLOP/s, 819 GB/s HBM per chip), used by the TPU
+    serving path and cross-calibrated against measured smoke-scale variants
+    by ``repro.profiling.calibrate``.
+  * ``measured`` — ``repro.profiling.measure.EngineProfiler``: profiles
+    regression-fitted from actual ``InProcessServingEngine`` measurements,
+    the subsystem this module's fit machinery feeds.
+
+``paper_resnet_profiles``/``variant_ladder_profiles`` accept an optional
+``store`` (duck-typed ``ProfileStore``) and register what they build, so
+examples and controllers load profiles from one persistent place instead of
+constructing constants inline.
 """
 from __future__ import annotations
 
@@ -114,8 +126,11 @@ def measured_resnet_points(name: str, noise: float = 0.0,
 
 
 def paper_resnet_profiles(noise: float = 0.01, seed: int = 0,
-                          ) -> Dict[str, VariantProfile]:
-    """The paper's five-variant family with regression-fitted throughput."""
+                          store=None) -> Dict[str, VariantProfile]:
+    """The paper's five-variant family with regression-fitted throughput.
+
+    With ``store`` (a ``repro.profiling.store.ProfileStore``) every profile
+    is registered under provenance ``"paper-calibrated"`` with its fit."""
     out = {}
     for name, (a, b, lb, lk, acc, rt) in _RESNET_TRUTH.items():
         fit = fit_throughput(measured_resnet_points(name, noise, seed))
@@ -123,6 +138,8 @@ def paper_resnet_profiles(noise: float = 0.01, seed: int = 0,
             name=name, accuracy=acc, rt=rt,
             th_slope=fit.slope, th_intercept=fit.intercept,
             lat_base_ms=lb, lat_k_ms=lk)
+        if store is not None:
+            store.register(out[name], "paper-calibrated", fit=fit)
     return out
 
 
@@ -167,10 +184,13 @@ def roofline_profile(cfg: ModelConfig, accuracy: float, *,
 
 def variant_ladder_profiles(base: ModelConfig, *, fractions=(0.25, 0.5, 0.75, 1.0),
                             acc_max: float = 80.0, acc_span: float = 12.0,
-                            ) -> Dict[str, VariantProfile]:
+                            store=None) -> Dict[str, VariantProfile]:
     """Depth-scaled variant family for an assigned arch + scaling-law accuracy
     proxy acc(N) = acc_max - acc_span · (N/N_full)^(-0.28) + acc_span
-    (documented proxy — monotone in N with diminishing returns)."""
+    (documented proxy — monotone in N with diminishing returns).
+
+    With ``store`` every profile is registered under provenance
+    ``"roofline"`` (analytic, not measured)."""
     out = {}
     n_full = base.param_count()
     for f in fractions:
@@ -180,4 +200,7 @@ def variant_ladder_profiles(base: ModelConfig, *, fractions=(0.25, 0.5, 0.75, 1.
         acc = acc_max - acc_span * (ratio ** -0.28 - 1.0) - acc_span * 0.0
         acc = float(np.clip(acc, 1.0, 99.9))
         out[cfg.name] = roofline_profile(cfg, acc)
+        if store is not None:
+            store.register(out[cfg.name], "roofline",
+                           meta={"base": base.name, "fraction": f})
     return out

@@ -1,0 +1,14 @@
+"""Measured profiling subsystem: engine-driven variant profiles, a
+persistent profile store, and online drift recalibration (paper §5's
+Profiler as a first-class component; see DESIGN.md §Profiling).
+
+Import layout mirrors ``repro.serving``: the store and drift machinery are
+numpy-only; the offline profiler (``measure``) pulls in the JAX engine only
+when used, so simulator-only paths stay light.
+"""
+from repro.profiling.store import (DEFAULT_STORE_DIR,  # noqa: F401
+                                   DEFAULT_STORE_PATH, PROVENANCES,
+                                   SCHEMA_VERSION, ProfileStore,
+                                   StoredProfile)
+from repro.profiling.drift import (DriftDetector, DriftReport,  # noqa: F401
+                                   OnlineRecalibrator)

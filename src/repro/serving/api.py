@@ -35,13 +35,18 @@ class Request:
 
     ``arrival``/``completion`` are seconds on whatever clock the backend uses
     (wall clock for the real engine, simulated time for the DES) — only the
-    difference is ever interpreted.
+    difference is ever interpreted. ``service_start`` is stamped when the
+    request leaves the admission queue and begins execution (prefill on the
+    real engine, server grab in the DES), splitting end-to-end latency into
+    queue wait and *processing* latency — the quantity the paper's profiler
+    fits as p_m(n) (§5) and the profiling subsystem measures.
     """
     rid: int
     tokens: np.ndarray          # prompt (prompt_len,)
     max_new: int
     arrival: float
     backend: str = ""
+    service_start: float = 0.0  # 0.0 = never entered service
     completion: float = 0.0
     output: Optional[np.ndarray] = None
     accuracy: float = 0.0
@@ -49,6 +54,22 @@ class Request:
     @property
     def latency_ms(self) -> float:
         return (self.completion - self.arrival) * 1000.0
+
+    @property
+    def queue_wait_ms(self) -> float:
+        """Admission-queue wait (arrival → service start)."""
+        if self.service_start <= 0.0:
+            return 0.0
+        return max(self.service_start - self.arrival, 0.0) * 1000.0
+
+    @property
+    def service_ms(self) -> float:
+        """Processing latency p_m(n): service start → completion, excluding
+        queue wait. Falls back to end-to-end latency when the backend did
+        not stamp ``service_start``."""
+        if self.service_start <= 0.0:
+            return self.latency_ms
+        return max(self.completion - self.service_start, 0.0) * 1000.0
 
 
 @runtime_checkable
@@ -104,7 +125,9 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
                        accuracies: Sequence[float], *, slo_ms: float,
                        best_accuracy: float,
                        cost_samples: Optional[Sequence[Tuple[float, int]]] = None,
-                       window_s: float = 0.0) -> Dict:
+                       window_s: float = 0.0,
+                       queue_ms: Optional[Sequence[float]] = None,
+                       service_ms: Optional[Sequence[float]] = None) -> Dict:
     """The paper's evaluation summary (§6), shared by sim and real engine.
 
     Returns violation rate / P99 / mean latency / average accuracy and the
@@ -112,7 +135,10 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
     time-averaged provisioned units (the RC term integrated over time); with
     ``window_s`` also per-window series (the paper's Fig. 5/8 time plots) and
     ``violation_seconds`` (number of wall-clock seconds containing at least
-    one violation — the unit the paper reports its 65% reduction in).
+    one violation — the unit the paper reports its 65% reduction in). With
+    ``queue_ms``/``service_ms`` (the queue-wait / processing-latency split of
+    each request, paper §5) also mean/P99 of each component — the processing
+    side is what profile fits p_m(n) are checked against.
     """
     if len(arrivals) == 0:
         return {}
@@ -129,6 +155,14 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
         "avg_accuracy": float(acc.mean()),
         "accuracy_loss": float(best_accuracy - acc.mean()),
     }
+    if queue_ms is not None and len(queue_ms):
+        q = np.asarray(queue_ms, float)
+        out["mean_queue_ms"] = float(q.mean())
+        out["p99_queue_ms"] = float(np.percentile(q, 99))
+    if service_ms is not None and len(service_ms):
+        s = np.asarray(service_ms, float)
+        out["mean_service_ms"] = float(s.mean())
+        out["p99_service_ms"] = float(np.percentile(s, 99))
     if cost_samples is not None:
         cost_t = np.array([c[0] for c in cost_samples], float)
         cost_v = np.array([c[1] for c in cost_samples], float)

@@ -70,6 +70,8 @@ class VariantBackend:
         self.decode_chunk = max(1, min(decode_chunk, max_new))
         self.model = build_model(cfg)
         self.units = 1
+        self.slot_cap: Optional[int] = None   # units -> concurrency (enforced
+        # only when the engine runs with enforce_units; see free_slots)
         t0 = time.time()
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self._prefill = jax.jit(
@@ -149,11 +151,20 @@ class VariantBackend:
     # ------------------------------------------------- continuous-batch path
     @property
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        """Slots open for admission. With ``slot_cap`` set (the engine's
+        ``enforce_units`` mode), allocation units bound live concurrency the
+        same way the profiler's allocation sweep does — so measured th(n)
+        describes the serving behaviour at allocation n, not just the
+        profiling run."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if self.slot_cap is not None:
+            allow = min(self.slot_cap, self.max_batch) - self.active_slots
+            return free[:max(allow, 0)]
+        return free
 
     @property
     def active_slots(self) -> int:
-        return self.max_batch - len(self.free_slots)
+        return sum(1 for r in self.slot_req if r is not None)
 
     def admit(self, reqs: List[Request], now: float) -> List[Request]:
         """Prefill ``reqs`` (≤ free slots) and join them to the batch.
@@ -168,6 +179,9 @@ class VariantBackend:
         assert len(reqs) <= len(free)
         if not reqs:
             return []
+        t_service = time.time()
+        for r in reqs:                   # service (= prefill + decode) begins
+            r.service_start = t_service  # here; everything before is queue wait
         n = len(reqs)
         prompts = np.zeros((self.max_batch, self.prompt_len), np.int64)
         for j, r in enumerate(reqs):
@@ -248,7 +262,7 @@ class InProcessServingEngine:
                  max_batch: int = 8, prompt_len: int = 32,
                  mode: str = "continuous", max_new: int = 16,
                  decode_chunk: int = 4, queue_cap: int = 256,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, enforce_units: bool = False):
         assert mode in ("continuous", "pump"), mode
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
@@ -258,6 +272,13 @@ class InProcessServingEngine:
         self.decode_chunk = decode_chunk
         self.queue_cap = queue_cap
         self.use_pallas = use_pallas
+        # enforce_units: an allocation of n units caps the variant at n
+        # concurrent slots — the same units -> concurrency mapping the
+        # profiling subsystem measures th(n) under, so measured profiles
+        # describe live capacity exactly (off by default: PR-1 semantics,
+        # where units are cost bookkeeping and batching always uses the
+        # full slot budget)
+        self.enforce_units = enforce_units
         self.backends: Dict[str, VariantBackend] = {}
         self.units: Dict[str, int] = {}
         self.queues: Dict[str, Deque[Request]] = {}
@@ -278,6 +299,7 @@ class InProcessServingEngine:
                     use_pallas=self.use_pallas)
                 self.queues.setdefault(m, deque())
             self.backends[m].units = n
+            self.backends[m].slot_cap = n if self.enforce_units else None
         for m in list(self.backends):
             if m not in target:
                 b = self.backends.pop(m)
@@ -388,6 +410,9 @@ class InProcessServingEngine:
             q.clear()
             for i in range(0, len(reqs), b.max_batch):
                 chunk = reqs[i:i + b.max_batch]
+                t_service = time.time()
+                for r in chunk:
+                    r.service_start = t_service
                 prompts = np.stack([
                     np.pad(r.tokens[:self.prompt_len],
                            (0, max(0, self.prompt_len - len(r.tokens))))
@@ -410,7 +435,9 @@ class InProcessServingEngine:
             [r.latency_ms for r in self.done],
             [r.accuracy for r in self.done],
             slo_ms=slo_ms, best_accuracy=best_accuracy,
-            cost_samples=self.cost_log)
+            cost_samples=self.cost_log,
+            queue_ms=[r.queue_wait_ms for r in self.done],
+            service_ms=[r.service_ms for r in self.done])
         if out:
             out["rejected"] = self.rejected
             # accepted but not yet served (queued + in flight) — nonzero when

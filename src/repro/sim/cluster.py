@@ -73,12 +73,16 @@ class Backend:
     def queue_delay(self, t: float) -> float:
         return max(self.server_free[0] - t, 0.0)
 
-    def serve(self, arrival: float) -> float:
+    def serve_timed(self, arrival: float) -> tuple:
+        """Grab a server; returns (service_start, completion)."""
         free = heapq.heappop(self.server_free)
         start = max(arrival, free, self.ready_at)
         done = start + self.service_s
         heapq.heappush(self.server_free, done)
-        return done
+        return start, done
+
+    def serve(self, arrival: float) -> float:
+        return self.serve_timed(arrival)[1]
 
 
 @dataclass
@@ -87,10 +91,23 @@ class ServedRequest:
     completion: float
     backend: str
     accuracy: float
+    service_start: float = 0.0   # 0.0 = dropped/never served
 
     @property
     def latency_ms(self) -> float:
         return (self.completion - self.arrival) * 1000.0
+
+    @property
+    def queue_wait_ms(self) -> float:
+        if self.service_start <= 0.0:
+            return 0.0
+        return max(self.service_start - self.arrival, 0.0) * 1000.0
+
+    @property
+    def service_ms(self) -> float:
+        if self.service_start <= 0.0:
+            return self.latency_ms
+        return max(self.completion - self.service_start, 0.0) * 1000.0
 
 
 class SimCluster:
@@ -175,9 +192,10 @@ class SimCluster:
             name = min(pool, key=lambda m: pool[m].queue_delay(arrival))
             b = pool[name]
             backend_name = name
-        done = b.serve(arrival)
+        start, done = b.serve_timed(arrival)
         self.requests.append(ServedRequest(arrival, done, backend_name,
-                                           b.profile.accuracy))
+                                           b.profile.accuracy,
+                                           service_start=start))
 
     def dispatch_fanout(self, arrival: float, backend_names, accuracy: float
                         ) -> None:
@@ -186,17 +204,20 @@ class SimCluster:
         self._purge(arrival)
         done = arrival + 10.0
         served = False
+        start = 0.0
         for name in backend_names:
             b = self.backends.get(name)
             if b is None or b.retire_at <= arrival:
                 continue
-            done = max(done if served else arrival, b.serve(arrival))
+            s, d = b.serve_timed(arrival)
+            done = max(done if served else arrival, d)
+            start = min(start, s) if served else s   # earliest member start
             served = True
         if not served:
             self.dispatch(arrival, None)
             return
         self.requests.append(ServedRequest(arrival, done, "+".join(backend_names),
-                                           accuracy))
+                                           accuracy, service_start=start))
 
     # ---------------------------------------------------------------- metrics
     def summarize(self, slo_ms: float, best_accuracy: float,
@@ -207,4 +228,6 @@ class SimCluster:
             [r.latency_ms for r in self.requests],
             [r.accuracy for r in self.requests],
             slo_ms=slo_ms, best_accuracy=best_accuracy,
-            cost_samples=self.cost_samples, window_s=window_s)
+            cost_samples=self.cost_samples, window_s=window_s,
+            queue_ms=[r.queue_wait_ms for r in self.requests],
+            service_ms=[r.service_ms for r in self.requests])

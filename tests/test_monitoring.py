@@ -1,0 +1,46 @@
+"""RateMonitor: per-second bucketing, idle-gap flushing, windowed rates."""
+import numpy as np
+
+from repro.core.monitoring import RateMonitor
+
+
+def test_bucket_flush_across_idle_gap():
+    """advance_to across an idle gap must emit one zero bucket per silent
+    second, so windowed history reflects the lull instead of compacting it."""
+    mon = RateMonitor()
+    mon.record(0.2, 3)
+    mon.record(0.9, 2)
+    mon.advance_to(10.5)              # seconds 1..9 were silent
+    h = mon.history(600)
+    assert len(h) == 10               # buckets 0..9 closed; bucket 10 pending
+    assert h[0] == 5.0
+    assert np.all(h[1:] == 0.0)
+    # arrivals after the gap land in the right bucket
+    mon.record(10.7, 4)
+    mon.advance_to(12.0)
+    h = mon.history(600)
+    assert len(h) == 12
+    assert h[10] == 4.0 and h[11] == 0.0
+
+
+def test_advance_is_idempotent_and_keeps_current_bucket():
+    mon = RateMonitor()
+    mon.record(0.0, 1)
+    mon.record(5.0, 2)                # flushes 0..4
+    mon.advance_to(5.9)               # same bucket: no new history
+    mon.advance_to(5.99)
+    assert len(mon.history(600)) == 5
+    mon.advance_to(6.0)               # closes bucket 5 with its 2 arrivals
+    h = mon.history(600)
+    assert len(h) == 6 and h[5] == 2.0
+
+
+def test_current_rate_windows():
+    mon = RateMonitor()
+    for t in range(10):
+        mon.record(float(t), 6)
+    mon.advance_to(10.0)
+    assert mon.current_rate(window=5) == 6.0
+    assert mon.current_rate(window=10) == 6.0
+    mon.advance_to(20.0)              # 10 idle seconds dilute the window
+    assert mon.current_rate(window=5) == 0.0

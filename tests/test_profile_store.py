@@ -1,0 +1,73 @@
+"""Profile store: JSON round-trip fidelity, provenance rules, versioning."""
+import json
+
+import pytest
+
+from repro.core.profiles import (fit_throughput, measured_resnet_points,
+                                 paper_resnet_profiles, VariantProfile)
+from repro.profiling.store import (PROVENANCES, SCHEMA_VERSION, ProfileStore)
+
+
+def _profile(name="v0"):
+    return VariantProfile(name=name, accuracy=71.3, rt=3.25,
+                          th_slope=12.125, th_intercept=1.75,
+                          lat_base_ms=25.5, lat_k_ms=110.0, max_units=32)
+
+
+def test_roundtrip_identical(tmp_path):
+    """save -> load reproduces bit-identical VariantProfile dataclasses."""
+    store = ProfileStore(str(tmp_path / "s.json"))
+    fit = fit_throughput(measured_resnet_points("resnet18", noise=0.02))
+    store.register(_profile(), "measured", fit=fit, meta={"note": "t"})
+    store.register(_profile("v1"), "roofline")
+    path = store.save()
+    loaded = ProfileStore.load(path)
+    assert loaded.names() == ["v0", "v1"]
+    assert loaded.get("v0") == _profile()          # exact dataclass equality
+    assert loaded.get("v1") == _profile("v1")
+    e = loaded.entry("v0")
+    assert e.provenance == "measured"
+    assert e.meta == {"note": "t"}
+    assert e.updated_at == store.entry("v0").updated_at
+    assert e.fit.slope == fit.slope and e.fit.r_squared == fit.r_squared
+    assert e.fit.points == fit.points
+    # a second round-trip is a fixed point
+    p2 = loaded.save(str(tmp_path / "s2.json"))
+    assert ProfileStore.load(p2).get("v0") == _profile()
+
+
+def test_provenance_validation_and_supersede():
+    store = ProfileStore()
+    with pytest.raises(ValueError):
+        store.register(_profile(), "guessed")
+    assert set(PROVENANCES) == {"measured", "roofline", "paper-calibrated"}
+    store.register(_profile(), "paper-calibrated")
+    e = store.register(_profile(), "measured")     # re-measurement overwrites
+    assert e.meta["superseded"] == "paper-calibrated"
+    assert store.entry("v0").provenance == "measured"
+
+
+def test_schema_version_enforced(tmp_path):
+    store = ProfileStore(str(tmp_path / "s.json"))
+    store.register(_profile(), "measured")
+    path = store.save()
+    doc = json.load(open(path))
+    assert doc["schema_version"] == SCHEMA_VERSION
+    doc["schema_version"] = SCHEMA_VERSION + 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="schema_version"):
+        ProfileStore.load(str(bad))
+
+
+def test_paper_profiles_register(tmp_path):
+    """paper_resnet_profiles registers into a store under paper-calibrated
+    provenance, and the store round-trips the whole family."""
+    store = ProfileStore(str(tmp_path / "resnet.json"))
+    profs = paper_resnet_profiles(noise=0.01, seed=0, store=store)
+    assert len(store) == 5
+    loaded = ProfileStore.load(store.save())
+    for name, p in profs.items():
+        assert loaded.get(name) == p
+        assert loaded.entry(name).provenance == "paper-calibrated"
+        assert loaded.entry(name).fit is not None

@@ -37,6 +37,34 @@ def test_regression_fit():
     assert abs(fit.slope - 13.0) < 0.2
 
 
+def test_regression_fit_r2_bounded_under_noise():
+    """R² stays a valid confidence signal in [0, 1] at any noise level."""
+    for name in ("resnet18", "resnet50", "resnet152"):
+        for noise in (0.0, 0.02, 0.1, 0.5):
+            for seed in range(5):
+                fit = fit_throughput(
+                    measured_resnet_points(name, noise=noise, seed=seed))
+                assert 0.0 <= fit.r_squared <= 1.0
+    # and it degrades monotonically-ish: heavy noise can't look perfect
+    noisy = [fit_throughput(measured_resnet_points("resnet18", noise=0.5,
+                                                   seed=s)).r_squared
+             for s in range(8)]
+    assert min(noisy) < 0.999
+
+
+def test_regression_fit_slope_recovery():
+    """Clean data recovers every family's calibrated (slope, intercept);
+    mild measurement noise keeps the slope within a sane band."""
+    from repro.core.profiles import _RESNET_TRUTH
+    for name, (a, b, *_rest) in _RESNET_TRUTH.items():
+        fit = fit_throughput(measured_resnet_points(name, noise=0.0))
+        assert abs(fit.slope - a) < 1e-6
+        assert abs(fit.intercept - b) < 1e-6
+        assert fit.points == measured_resnet_points(name, noise=0.0)
+        noisy = fit_throughput(measured_resnet_points(name, noise=0.02, seed=3))
+        assert abs(noisy.slope - a) / a < 0.25
+
+
 def test_roofline_profile_monotone_in_chips():
     cfg = get_config("tinyllama-1.1b")
     prof = roofline_profile(cfg, accuracy=70.0)
@@ -53,8 +81,11 @@ def test_roofline_batching_helps_decode():
 
 
 def test_variant_ladder_accuracy_monotone():
+    from repro.profiling.store import ProfileStore
     cfg = get_config("yi-6b")
-    ladder = variant_ladder_profiles(cfg)
+    store = ProfileStore()
+    ladder = variant_ladder_profiles(cfg, store=store)
+    assert all(store.entry(n).provenance == "roofline" for n in ladder)
     profs = sorted(ladder.values(), key=lambda p: p.accuracy)
     # deeper (more params) -> more accurate, slower
     assert profs[0].th_slope >= profs[-1].th_slope * 0.9

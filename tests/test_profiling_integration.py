@@ -1,0 +1,178 @@
+"""Profiling subsystem end to end against the real engine: measured sweep,
+store persistence, queue/service split, drift detection on an injected
+slowdown, and the recalibrated profile shifting the solver's allocation."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.adapter import ControllerConfig, InfAdapterController
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.solver import solve_exact
+from repro.profiling.calibrate import (calibrated_roofline_profile,
+                                       roofline_scale_factor)
+from repro.profiling.drift import DriftDetector, OnlineRecalibrator
+from repro.profiling.measure import EngineProfiler, fit_latency
+from repro.profiling.store import ProfileStore
+from repro.serving.api import Request
+from repro.serving.engine import InProcessServingEngine
+
+MAX_NEW = 8
+PROMPT = 8
+
+
+def _variants():
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=128)
+    return {"small": (base.replace(num_layers=2, name="small"), 70.0)}
+
+
+def _engine(**kw):
+    return InProcessServingEngine(_variants(), max_batch=4, prompt_len=PROMPT,
+                                  max_new=MAX_NEW, decode_chunk=4,
+                                  enforce_units=True, **kw)
+
+
+def _submit(eng, n, rng, backend="small"):
+    for i in range(n):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, 128, PROMPT).astype(np.int64),
+                           max_new=MAX_NEW, arrival=time.time()), backend)
+    eng.drain(0.0)
+
+
+def _slow_down(backend, stall_s=0.02):
+    """Inject drift: every decode chunk stalls, as under host contention."""
+    orig = backend._decode_chunk
+    backend._decode_chunk = lambda p, c, t: (time.sleep(stall_s),
+                                             orig(p, c, t))[1]
+
+
+@pytest.fixture(scope="module")
+def profiled():
+    """One measured sweep shared by the tests in this module (it's the
+    expensive part: real prefill/decode at three allocation points)."""
+    eng = _engine()
+    profiler = EngineProfiler(eng, points=(1, 2, 4), requests_per_point=10,
+                              warmup=3, max_units=8)
+    return eng, profiler, profiler.profile_variant("small")
+
+
+def test_measured_profile_shape(profiled):
+    _, _, m = profiled
+    assert [p.units for p in m.points] == [1, 2, 4]
+    assert m.readiness_s > 0.0                    # actual jit warm-up time
+    assert m.profile.rt == m.readiness_s
+    # continuous batching amortizes prefill+chunk cost: capacity grows with
+    # the allocation's concurrency
+    assert m.points[-1].throughput_rps > m.points[0].throughput_rps
+    assert 0.0 <= m.confidence <= 1.0
+    assert 0.0 <= m.th_fit.r_squared <= 1.0
+    for p in m.points:
+        assert p.n_requests >= 10     # whole completion batches are counted
+        assert p.mean_service_ms > 0.0
+        # profiler admits directly into free slots: queue wait is negligible
+        # next to service (the split is the point of the measurement)
+        assert p.mean_queue_ms < p.mean_service_ms
+
+
+def test_queue_service_split_in_serving(profiled):
+    """Live serving stamps the split; components add up to end-to-end."""
+    eng, _, _ = profiled
+    eng.apply_allocation(0.0, {"small": 2})
+    _submit(eng, 12, np.random.default_rng(0))
+    assert len(eng.done) >= 12
+    for r in eng.done:
+        assert r.service_start > 0.0
+        # components recompose end-to-end latency (float slack: the three
+        # epoch-second differences each carry ~1e-7 s of rounding)
+        assert abs(r.queue_wait_ms + r.service_ms - r.latency_ms) < 1e-2
+    s = eng.summarize(slo_ms=60_000, best_accuracy=70.0)
+    assert s["mean_service_ms"] > 0.0
+    assert s["mean_queue_ms"] >= 0.0
+    assert s["p99_service_ms"] <= s["p99_ms"] + 1e-9
+
+
+def test_store_roundtrip_measured(profiled, tmp_path):
+    _, _, m = profiled
+    store = ProfileStore(str(tmp_path / "m.json"))
+    store.register(m.profile, "measured", fit=m.th_fit,
+                   meta={"confidence": m.confidence})
+    loaded = ProfileStore.load(store.save())
+    assert loaded.get("small") == m.profile
+    assert loaded.entry("small").provenance == "measured"
+
+
+def test_roofline_cross_calibration(profiled):
+    """The calibrated roofline reproduces a measured variant's slope by
+    construction (single-reference calibration) and scales latency
+    inversely."""
+    _, _, m = profiled
+    cfgs = {n: c for n, (c, _) in _variants().items()}
+    scale = roofline_scale_factor({"small": m}, cfgs)
+    assert scale > 0.0
+    cal = calibrated_roofline_profile(cfgs["small"], 70.0, scale=scale)
+    raw = calibrated_roofline_profile(cfgs["small"], 70.0, scale=1.0)
+    assert np.isclose(cal.th_slope, m.th_fit.slope, rtol=1e-6)
+    assert np.isclose(cal.lat_k_ms * scale, raw.lat_k_ms, rtol=1e-6)
+
+
+def test_drift_flagged_and_recalibration_shifts_allocation(profiled, tmp_path):
+    """The acceptance scenario: healthy engine within band; slowed engine
+    flagged; targeted re-profile patches store + controller and the Eq. 1
+    solver provisions more units for the same load."""
+    _, _, m = profiled
+    store = ProfileStore(str(tmp_path / "d.json"))
+    store.register(m.profile, "measured", fit=m.th_fit, meta=m.store_meta())
+
+    eng = _engine()
+    eng.apply_allocation(0.0, {"small": 2})
+    # tolerance 1.0 -> band [0.5, 2.0]: wide enough that scheduler noise
+    # between two separately-built backends can't trip it, narrow enough
+    # that the injected ~10x stall lands far outside
+    detector = DriftDetector(store, tolerance=1.0, min_requests=8)
+    rng = np.random.default_rng(1)
+    _submit(eng, 12, rng)
+    detector.observe_engine(eng)
+    healthy = detector.check("small", units=2)
+    assert not healthy.drifted, healthy.reason
+    assert healthy.n_obs >= 8
+
+    # inject the slowdown mid-flight on the live backend
+    _slow_down(eng.backends["small"], stall_s=0.03)
+    _submit(eng, 12, rng)
+    detector.observe_engine(eng)
+    drifted = detector.check("small", units=2)
+    assert drifted.drifted
+    assert drifted.service_ratio > 2.0
+
+    # targeted re-profile of just this variant, store + controller patched
+    profiler = EngineProfiler(eng, requests_per_point=8, warmup=2, max_units=8)
+    ctrl = InfAdapterController(store.profiles(), MovingMaxForecaster(window=5),
+                               ControllerConfig(budget=8, slo_ms=10_000.0))
+    recal = OnlineRecalibrator(profiler, store, controller=ctrl,
+                               detector=detector, points=(1, 2),
+                               requests_per_point=6)
+    m2 = recal.recalibrate("small")
+    assert m2.profile.throughput(1) < 0.8 * m.profile.throughput(1)
+    assert ctrl.profiles["small"] == m2.profile          # live patch
+    assert store.entry("small").meta["recalibrated"] is True
+    assert detector.check("small", 2).reason.startswith("insufficient")
+
+    lam = 0.8 * m.profile.throughput(1)
+    before = solve_exact({"small": m.profile}, lam, 8, 10_000.0)
+    after = solve_exact({"small": m2.profile}, lam, 8, 10_000.0)
+    assert after.total_units() > before.total_units()
+
+
+def test_fit_latency_degenerate_and_hyperbolic():
+    base, k, r2 = fit_latency([(1, 130.0), (2, 80.0), (4, 55.0)])
+    # exact hyperbola 30 + 100/n
+    assert abs(base - 30.0) < 1e-6 and abs(k - 100.0) < 1e-6
+    assert r2 > 0.999
+    # flat data: constant model, perfect fit, never a negative k
+    base, k, r2 = fit_latency([(1, 50.0), (2, 50.0), (4, 50.0)])
+    assert base == 50.0 and k == 0.0 and r2 == 1.0
+    # rising-in-n data degrades to the constant model (k clamped at 0)
+    base, k, _ = fit_latency([(1, 40.0), (2, 50.0), (4, 60.0)])
+    assert k == 0.0 and base == 50.0
