@@ -9,6 +9,7 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   fig7_beta_sweep       β sensitivity, cumulative metrics (Fig. 7/9/10)
   fig8_nonbursty        non-bursty trace comparison (Fig. 8)
   engine_serving        continuous batching vs pump P99/throughput (DESIGN.md)
+  cluster_fabric        replica scaling, routing policy, failure recovery
   profiling             measured vs roofline vs paper-calibrated profile error
   forecaster            LSTM vs baselines MAE/under-rate (Fig. 5 top)
   solver_scalability    exact/greedy/bruteforce runtime + optimality gap (§7)
@@ -23,9 +24,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_engine, bench_figures, bench_forecaster,
-                        bench_kernels, bench_profiling, bench_robustness,
-                        bench_roofline, bench_solver, bench_table1)
+from benchmarks import (bench_cluster, bench_engine, bench_figures,
+                        bench_forecaster, bench_kernels, bench_profiling,
+                        bench_robustness, bench_roofline, bench_solver,
+                        bench_table1)
 
 ALL = {
     "fig1_throughput": bench_figures.fig1_throughput,
@@ -36,6 +38,7 @@ ALL = {
     "fig8_nonbursty": bench_figures.fig8_nonbursty,
     "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
     "engine_serving": bench_engine.run,
+    "cluster_fabric": bench_cluster.run,
     "profiling": bench_profiling.run,
     "table1_systems": bench_table1.run,
     "profile_robustness": bench_robustness.run,

@@ -10,12 +10,20 @@ discrete-event simulator implements. Everything here executes real model
 code — prefill, slot-based continuous batching against the persistent KV
 ring buffer, jitted decode chunks — on CPU.
 
+Cluster-fabric demo flags: ``--replicas``/``--nodes`` shard each variant
+into single-unit replicas placed across that many nodes
+(``repro.cluster.ReplicaFabric`` behind the same ``ServingAPI``), and
+``--fail-node-at T`` crashes node0 T seconds in (recovering at T+8) so the
+retry + controller-re-placement path runs on real models.
+
 Run:  PYTHONPATH=src python examples/serve_autoscale.py [--seconds 30]
       [--mode continuous|pump]   (pump = legacy micro-batching baseline)
+      [--replicas 3 --nodes 3 --fail-node-at 12]
 """
 import argparse
 import os
 
+from repro.cluster import FaultSchedule, make_nodes, node_crash, node_recover
 from repro.configs import get_config, smoke_variant
 from repro.core.adapter import ControllerConfig, InfAdapterController
 from repro.core.forecaster import MovingMaxForecaster
@@ -59,28 +67,67 @@ def main():
     ap.add_argument("--interval", type=float, default=6.0)
     ap.add_argument("--mode", choices=("continuous", "pump"),
                     default="continuous")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="shard variants into single-unit replicas across "
+                         "the node set (0 = legacy monolithic backends)")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="node count for the replica fabric "
+                         "(default: --replicas)")
+    ap.add_argument("--fail-node-at", type=float, default=None,
+                    help="crash node0 this many seconds in (recovers 8 s "
+                         "later) — exercises retry + re-placement")
     args = ap.parse_args()
 
     variants = build_ladder()
-    engine = InProcessServingEngine(variants, max_batch=8, prompt_len=16,
-                                    mode=args.mode, max_new=8, decode_chunk=4)
+    fabric_on = (args.replicas > 0 or args.nodes > 0
+                 or args.fail_node_at is not None)
+    budget = max(args.replicas, 2) if fabric_on else 3
+    engine_kw = dict(max_batch=8, prompt_len=16, mode=args.mode, max_new=8,
+                     decode_chunk=4)
+    if fabric_on:
+        n_nodes = args.nodes or max(args.replicas, 2)
+        # room for create-then-remove surge and for re-placement after a
+        # node crash
+        node_cap = max(2, -(-2 * budget // n_nodes))
+        print(f"cluster fabric: {n_nodes} nodes × {node_cap} units, "
+              f"replica_size=1 (budget {budget})")
+        engine = InProcessServingEngine(
+            variants, nodes=make_nodes(n_nodes, node_cap), replica_size=1,
+            placement="spread", **engine_kw)
+        # the profiler needs the legacy variant-keyed layout; profile on a
+        # separate monolithic engine, serve on the fabric (offline
+        # profiling, sharded serving)
+        prof_engine = InProcessServingEngine(variants, **engine_kw)
+    else:
+        engine = InProcessServingEngine(variants, **engine_kw)
+        prof_engine = engine
     # the whole control loop below sees the engine only through the shared
     # serving contract — swap in a SimCluster and nothing else changes
     assert isinstance(engine, ClusterAPI) and isinstance(engine, ServingAPI)
     print(f"calibrating variants (live profiling), mode={args.mode}...")
-    profiles = calibrate(engine, variants)
+    profiles = calibrate(prof_engine, variants)
+    if prof_engine is not engine:
+        # free the calibration engine's params/KV state before serving
+        prof_engine.apply_allocation(0.0, {})
+        del prof_engine
 
     slo_ms = 2000.0
-    cfg = ControllerConfig(interval_s=args.interval, budget=3, slo_ms=slo_ms,
-                           beta=0.05, gamma=0.05, reactive=True,
-                           queue_aware=True)
+    cfg = ControllerConfig(interval_s=args.interval, budget=budget,
+                           slo_ms=slo_ms, beta=0.05, gamma=0.05,
+                           reactive=True, queue_aware=True)
     ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10),
                                 cfg)
 
+    faults = None
+    if args.fail_node_at is not None:
+        faults = FaultSchedule([
+            node_crash(args.fail_node_at, "node0"),
+            node_recover(args.fail_node_at + 8.0, "node0")])
     print(f"\nserving for {args.seconds}s with a rising-falling load...")
     run_serving_loop(engine, ctrl, seconds=args.seconds,
                      interval=args.interval,
-                     load_fn=rise_fall_load(max(args.seconds, 1)))
+                     load_fn=rise_fall_load(max(args.seconds, 1)),
+                     faults=faults)
     s = engine.summarize(slo_ms, best_accuracy=78.0)
     if not s:
         print(f"\nno requests completed ({engine.rejected} rejected)")

@@ -1,8 +1,10 @@
-"""Generate the §Dry-run, §Roofline, and §Profiles markdown tables in
-EXPERIMENTS.md from reports/dryrun/*.json and reports/profiles/*.json.
+"""Generate the §Dry-run, §Roofline, §Profiles, and §Cluster-fabric markdown
+tables in EXPERIMENTS.md from reports/dryrun/*.json, reports/profiles/*.json,
+and reports/cluster/*.json (the latter written by
+``benchmarks/bench_cluster.py``).
 
 Usage: PYTHONPATH=src python -m repro.analysis.report [--dir reports/dryrun]
-           [--profiles-dir reports/profiles]
+           [--profiles-dir reports/profiles] [--cluster-dir reports/cluster]
 """
 from __future__ import annotations
 
@@ -95,6 +97,46 @@ def profiles_table(profiles_dir: str) -> str:
     return "\n".join(out)
 
 
+def _cluster_rows(cluster_dir: str, study: str):
+    path = os.path.join(cluster_dir, f"{study}.json")
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            return json.load(f).get("rows", [])
+    except (ValueError, json.JSONDecodeError):
+        return []
+
+
+def cluster_scaling_table(cluster_dir: str) -> str:
+    """Replica scaling + routing policy (§Cluster fabric): throughput/P99 vs
+    replica count at fixed load, and two-level vs WRR-only routing."""
+    out = ["| study | config | offered rps | achieved rps | p99 ms | viol |",
+           "|---|---|---|---|---|---|"]
+    for d in _cluster_rows(cluster_dir, "replica_scaling"):
+        out.append(f"| scaling | {d['replicas']}×{d['units_per_replica']}u "
+                   f"| {d['offered_rps']:.0f} | {d['achieved_rps']:.1f} | "
+                   f"{d['p99_ms']:.0f} | {d['violation_rate']:.3f} |")
+    for d in _cluster_rows(cluster_dir, "routing_policy"):
+        kind = "two-level" if d["two_level"] else "WRR-only"
+        out.append(f"| routing | {d['router']} ({kind}) | "
+                   f"{d['offered_rps']:.0f} | — | {d['p99_ms']:.0f} | "
+                   f"{d['violation_rate']:.3f} |")
+    return "\n".join(out)
+
+
+def cluster_failure_table(cluster_dir: str) -> str:
+    """Failure-recovery phases (§Cluster fabric): violation rate and P99
+    before, during, and after a node crash, per scenario."""
+    out = ["| scenario | phase | viol | p99 ms | n |",
+           "|---|---|---|---|---|"]
+    for d in _cluster_rows(cluster_dir, "failure_recovery"):
+        out.append(f"| {d['scenario']} | {d['phase']} | "
+                   f"{d['violation_rate']:.3f} | {d['p99_ms']:.0f} | "
+                   f"{d['n']} |")
+    return "\n".join(out)
+
+
 def inject(md_path: str, marker: str, table: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -115,12 +157,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="reports/dryrun")
     ap.add_argument("--profiles-dir", default="reports/profiles")
+    ap.add_argument("--cluster-dir", default="reports/cluster")
     ap.add_argument("--md", default="EXPERIMENTS.md")
     args = ap.parse_args()
     rows = load(args.dir)
     inject(args.md, "DRYRUN_TABLE", dryrun_table(rows))
     inject(args.md, "ROOFLINE_TABLE", roofline_table(rows))
     inject(args.md, "PROFILES_TABLE", profiles_table(args.profiles_dir))
+    inject(args.md, "CLUSTER_SCALING_TABLE",
+           cluster_scaling_table(args.cluster_dir))
+    inject(args.md, "CLUSTER_FAILURE_TABLE",
+           cluster_failure_table(args.cluster_dir))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

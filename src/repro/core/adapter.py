@@ -111,12 +111,21 @@ class InfAdapterController:
     def maybe_react(self, t: float, cluster: ClusterAPI) -> Optional[Decision]:
         """Beyond-paper: between intervals, if the observed short-window rate
         exceeds the last decision's provisioned capacity, re-solve immediately
-        (MArk-style reactive scaling on top of the proactive loop)."""
+        (MArk-style reactive scaling on top of the proactive loop).
+
+        Replica-fabric clusters report ``capacity_factor`` — the fraction of
+        the target allocation actually live (node crashes, placement
+        shortfall). Provisioned capacity is discounted by it, so losing a
+        node triggers a re-solve (and thereby re-placement) at the next
+        reactive check instead of waiting out the control interval."""
         if not self.cfg.reactive or not self.decisions:
             return None
         last = self.decisions[-1].allocation
         cap = sum(self.profiles[m].throughput(n)
                   for m, n in last.units.items() if n > 0)
+        cap_fn = getattr(cluster, "capacity_factor", None)
+        if cap_fn is not None:
+            cap *= cap_fn(t)
         observed = self.monitor.current_rate(window=5) * 1.1
         backlog = cluster.backlog(t)
         if observed > cap or backlog > cap * 2.0:

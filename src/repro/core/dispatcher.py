@@ -50,3 +50,13 @@ class WeightedRoundRobinDispatcher:
     def realized_shares(self) -> Dict[str, float]:
         tot = sum(self.dispatched.values())
         return {m: c / tot for m, c in self.dispatched.items()} if tot else {}
+
+    def reset(self) -> None:
+        """Zero the dispatch counters (and the smooth-WRR phase) so
+        ``realized_shares`` reflects only the run that follows — the
+        experiment harness calls this at the start of every replay, so a
+        reused dispatcher never reports shares polluted by a previous
+        trace. Weights are kept: convergence-to-quota restarts cleanly
+        (property-tested in tests/test_dispatcher.py)."""
+        self.dispatched = {m: 0 for m in self._weights}
+        self._current = {m: 0.0 for m in self._weights}

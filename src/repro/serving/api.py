@@ -10,10 +10,15 @@ same controller, dispatcher, and experiment harness:
 
   * ``ClusterAPI``  — control-plane surface: ``apply_allocation`` (the paper's
     create-then-remove reconfiguration, §5), ``loaded_variants`` (feeds the
-    loading-cost LC term of Eq. 1), and ``backlog`` (queue depth, used by the
-    beyond-paper queue-aware / reactive controller modes).
+    loading-cost LC term of Eq. 1), and ``backlog`` (queued-not-in-service
+    depth, used by the beyond-paper queue-aware / reactive controller modes).
   * ``ServingAPI``  — data-plane surface on top of ``ClusterAPI``: request
     submission plus the windowed metric summary both backends report.
+
+Both backends also accept ``nodes=`` to mount the replica-level cluster
+fabric (``repro.cluster``: placement across nodes, two-level routing via a
+``RoutingAPI`` replica picker, fault injection) while staying conformant to
+these same protocols — controllers never see replicas, only variants.
 
 ``summarize_requests`` is the single implementation of the paper's evaluation
 metrics (SLO-violation rate, P99, average accuracy drop vs the best variant,
@@ -91,8 +96,13 @@ class ClusterAPI(Protocol):
         ...
 
     def backlog(self, t: float) -> float:
-        """Queued-but-unserved work (requests). Feeds the queue-aware
-        controller extension (λ inflated by backlog/interval to drain)."""
+        """Requests **queued but not yet in service** — admitted work still
+        waiting for a server/slot; requests being processed are excluded.
+        Both backends share this definition: the engine reports admission-
+        queue depth (in-slot requests are in service), the simulator counts
+        whole service times of per-server work beyond the request currently
+        occupying each server. Feeds the queue-aware controller extension
+        (λ inflated by backlog/interval to drain within one interval)."""
         ...
 
 

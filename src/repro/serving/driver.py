@@ -21,13 +21,17 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
                      interval: float, load_fn: Callable[[float], float],
                      seed: int = 0, prompt_len: int = 16, max_new: int = 8,
                      vocab: int = 256, tick_sleep: float = 0.05,
+                     faults=None,
                      log: Optional[Callable[[str], None]] = print) -> int:
     """Drive ``engine`` under ``ctrl`` for ``seconds`` of wall-clock time.
 
     ``load_fn(now)`` gives the offered rate λ (req/s) at elapsed time
     ``now``. The controller steps every ``interval`` seconds; the engine is
     ticked (admission + one decode chunk) every ``tick_sleep``, and drained
-    before returning. Returns the number of requests submitted.
+    before returning. ``faults`` (a ``repro.cluster.faults.FaultSchedule``
+    with event times in elapsed seconds) is injected into fabric-backed
+    engines as wall-clock time passes. Returns the number of requests
+    submitted.
     """
     rng = np.random.default_rng(seed)
     t_start = time.time()
@@ -38,6 +42,10 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
         now = time.time() - t_start
         if now > seconds:
             break
+        if faults is not None and faults.next_t() <= now:
+            for ev in faults.apply_due(now, engine):
+                if log is not None:
+                    log(f"  t={now:5.1f}s FAULT {ev.kind} {ev.target}")
         if now >= next_ctrl:
             ctrl.monitor.advance_to(now)
             d = ctrl.step(now, engine)

@@ -26,6 +26,19 @@ Variant loading (init + jit warm-up of prefill, the decode chunk, and the
 slot-admission scatter) happens on first use — that IS the readiness time
 rt_m on this backend, measured rather than assumed.
 
+Replica sharding (``nodes=``): the engine mounts the shared
+``repro.cluster.ReplicaFabric`` and an allocation of n units materializes as
+multiple ``VariantBackend`` *instances* per variant ("variant#i" replicas),
+each with its own slots, KV cache, and bounded admission queue, placed on
+nodes by the configured policy. ``submit`` routes two-level: the caller's
+dispatcher picks the variant (solver-quota WRR), the engine's ``RoutingAPI``
+picks the replica (power-of-two-choices least-outstanding by default).
+``inject_fault`` supports node crashes (in-flight and queued requests of
+killed replicas are re-submitted to survivors — retry semantics, latency
+keeps the original arrival) and replica slow-downs (decode stretched by the
+slow factor). The legacy single-backend-per-variant layout is untouched when
+``nodes`` is omitted.
+
 This engine is CPU-sized (smoke-scale variants) — it exists to run the
 end-to-end example and integration tests with actual model execution; the
 TPU-scale path is exercised by the dry-run. Set ``use_pallas=True`` to route
@@ -36,12 +49,16 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, Dict, List, Mapping, Optional, Set, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.faults import FaultEvent
+from repro.cluster.placement import Node
+from repro.cluster.replicas import ReplicaFabric
+from repro.cluster.router import ReplicaView, make_router
 from repro.configs.base import ModelConfig
 from repro.models.model import build_model
 from repro.serving.api import Request, summarize_requests
@@ -72,6 +89,7 @@ class VariantBackend:
         self.units = 1
         self.slot_cap: Optional[int] = None   # units -> concurrency (enforced
         # only when the engine runs with enforce_units; see free_slots)
+        self.slow_factor = 1.0   # straggler fault: decode stretched by this
         t0 = time.time()
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self._prefill = jax.jit(
@@ -215,9 +233,13 @@ class VariantBackend:
         """One jitted chunk of decode steps; retire finished slots."""
         if self.active_slots == 0:
             return []
+        t0 = time.time()
         self.cur_tok, self.cache, toks = self._decode_chunk(
             self.params, self.cache, self.cur_tok)
         toks = np.asarray(toks)                          # (chunk, B)
+        if self.slow_factor > 1.0:
+            # injected straggler: effective chunk time scales by slow_factor
+            time.sleep((time.time() - t0) * (self.slow_factor - 1.0))
         finished = []
         for slot, r in enumerate(self.slot_req):
             if r is None:
@@ -262,7 +284,9 @@ class InProcessServingEngine:
                  max_batch: int = 8, prompt_len: int = 32,
                  mode: str = "continuous", max_new: int = 16,
                  decode_chunk: int = 4, queue_cap: int = 256,
-                 use_pallas: bool = False, enforce_units: bool = False):
+                 use_pallas: bool = False, enforce_units: bool = False,
+                 nodes: Optional[Sequence[Node]] = None,
+                 placement="first-fit", router="p2c", replica_size: int = 1):
         assert mode in ("continuous", "pump"), mode
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
@@ -285,10 +309,25 @@ class InProcessServingEngine:
         self.done: List[Request] = []
         self.rejected: int = 0
         self.cost_log: List[Tuple[float, int]] = []
+        # replica sharding (cluster fabric): backends keyed by replica rid
+        # ("variant#i") instead of variant name; ``nodes=None`` keeps the
+        # legacy one-backend-per-variant layout byte-for-byte.
+        self.fabric: Optional[ReplicaFabric] = None
+        self.router = None
+        if nodes is not None:
+            # loading is synchronous on this engine (construction blocks for
+            # the measured jit warm-up), so fabric readiness is immediate
+            self.fabric = ReplicaFabric(nodes, policy=placement,
+                                        replica_size=replica_size,
+                                        rt_fn=lambda m: 0.0)
+            self.router = make_router(router)
 
     # ------------------------------------------------------------ ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
         target = {m: n for m, n in units.items() if n > 0}
+        if self.fabric is not None:
+            self._apply_fabric(t, target)
+            return
         for m, n in target.items():
             if m not in self.backends:
                 cfg, acc = self.variant_defs[m]
@@ -311,8 +350,36 @@ class InProcessServingEngine:
         self.units = dict(target)
         self.cost_log.append((t, sum(target.values())))
 
+    def _apply_fabric(self, t: float, target: Mapping[str, int]) -> None:
+        """Replica-granular create-then-remove: the fabric diffs the target
+        replica multiset, new replicas become whole ``VariantBackend``
+        instances (ready on construction — the warm-up blocks here, which IS
+        rt_m), surplus replicas drain their slots and requeue waiters."""
+        tr = self.fabric.apply(t, target)
+        for rep in tr.created:
+            cfg, acc = self.variant_defs[rep.variant]
+            b = VariantBackend(rep.variant, cfg, acc, max_batch=self.max_batch,
+                               prompt_len=self.prompt_len,
+                               max_new=self.max_new,
+                               decode_chunk=self.decode_chunk,
+                               use_pallas=self.use_pallas)
+            b.units = rep.units
+            b.slot_cap = min(rep.units, self.max_batch) \
+                if self.enforce_units else None
+            b.slow_factor = rep.slow_factor
+            rep.handle = b
+            self.backends[rep.rid] = b
+            self.queues.setdefault(rep.rid, deque())
+        for rep in self.fabric.purge(t):     # switch_t == t: loads blocked
+            b = self.backends.pop(rep.rid, None)
+            if b is not None and not rep.crashed:
+                self.done.extend(b.drain_slots(t))
+        self._rebalance_queues()
+        self.units = dict(target)
+        self.cost_log.append((t, self.fabric.provisioned_units()))
+
     def _rebalance_queues(self) -> None:
-        """Move requests queued on retired variants to the least-loaded live
+        """Move requests queued on retired backends to the least-loaded live
         ones. Accepted work is never dropped, so a switch may transiently
         push a survivor's queue past ``queue_cap``; only *new* submissions
         are bounded (backpressure). If an allocation empties the cluster,
@@ -329,25 +396,84 @@ class InProcessServingEngine:
                 self.queues.setdefault(tgt, deque()).append(r)
 
     def loaded_variants(self, t: float) -> Set[str]:
+        if self.fabric is not None:
+            return set(self.fabric.variants_ready(t))
         return set(self.backends)
 
     def backlog(self, t: float) -> float:
-        """True admission-queue depth (waiting, not yet in a slot)."""
+        """Queued-but-not-in-service depth (requests waiting for a slot) —
+        the shared ``ClusterAPI.backlog`` semantics; in-slot requests are in
+        service and excluded."""
         return float(sum(len(q) for q in self.queues.values()))
+
+    def capacity_factor(self, t: float) -> float:
+        """Fraction of the target allocation actually live (1.0 without a
+        fabric). Lets reactive controllers see crashes immediately."""
+        return self.fabric.capacity_factor(t) if self.fabric is not None else 1.0
+
+    def mark_warm(self, variants: Optional[Sequence[str]] = None,
+                  t: float = 0.0) -> None:
+        """Harness parity with the simulator: engine backends are ready the
+        moment construction returns, so warm start is a no-op."""
 
     def in_flight(self) -> int:
         return sum(b.active_slots for b in self.backends.values())
 
+    # ----------------------------------------------------------------- faults
+    def inject_fault(self, now: float, event: FaultEvent) -> None:
+        """Apply one ``repro.cluster.faults`` event (fabric mode only)."""
+        if self.fabric is None:
+            raise RuntimeError("fault injection requires the replica fabric "
+                               "(construct the engine with nodes=)")
+        if event.kind == "node_crash":
+            self._crash_node(now, event.target)
+        elif event.kind == "node_recover":
+            self.fabric.recover_node(now, event.target)
+        elif event.kind in ("replica_slowdown", "replica_restore"):
+            factor = event.factor if event.kind == "replica_slowdown" else 1.0
+            if self.fabric.slow_replica(now, event.target, factor):
+                rep = self.fabric.replicas[event.target]
+                if rep.handle is not None:
+                    rep.handle.slow_factor = rep.slow_factor
+
+    def _crash_node(self, now: float, node_id: str) -> None:
+        """Kill every replica on the node NOW (no drain): their in-flight
+        and queued requests are re-submitted to survivors — retry semantics;
+        latency keeps the original arrival stamp, so the failure's SLO cost
+        is measured, not hidden."""
+        killed = self.fabric.crash_node(now, node_id)
+        orphans: List[Tuple[str, Request]] = []
+        for rep in killed:
+            b = self.backends.pop(rep.rid, None)
+            orphans.extend((rep.variant, r)
+                           for r in self.queues.pop(rep.rid, deque()))
+            if b is not None:
+                orphans.extend((rep.variant, r)
+                               for r in b.slot_req if r is not None)
+        self.fabric.purge(now)
+        for variant, r in orphans:
+            r.service_start = 0.0        # retry starts from the queue again
+            # retry keeps the dispatcher's variant choice: surviving replicas
+            # of the same variant absorb first; _route_replica spills to the
+            # whole cluster only if none are left. Full/empty: counts rejected
+            self.submit(r, variant)
+
     # ---------------------------------------------------------------- serving
     def submit(self, req: Request, backend: Optional[str]) -> bool:
-        """Enqueue on ``backend``'s admission queue (or the least-loaded live
-        one). Returns False — backpressure — when the queue is full."""
+        """Enqueue on an admission queue. Legacy: ``backend`` names the
+        variant's single backend. Fabric mode: two-level routing — the
+        caller's dispatcher already picked the variant; the ``RoutingAPI``
+        picks the replica among it (power-of-two-choices least-outstanding
+        by default). Returns False — backpressure — when the queue is full."""
         if not self.backends:
             self.rejected += 1
             return False
-        name = backend if backend in self.backends else \
-            min(self.queues, key=lambda m: len(self.queues[m])) \
-            if self.queues else min(self.backends)
+        if self.fabric is not None:
+            name = self._route_replica(req, backend)
+        else:
+            name = backend if backend in self.backends else \
+                min(self.queues, key=lambda m: len(self.queues[m])) \
+                if self.queues else min(self.backends)
         q = self.queues.setdefault(name, deque())
         if len(q) >= self.queue_cap:
             self.rejected += 1
@@ -355,6 +481,20 @@ class InProcessServingEngine:
         req.backend = name
         q.append(req)
         return True
+
+    def _route_replica(self, req: Request, variant: Optional[str]) -> str:
+        """Level 2 of two-level routing: pick the replica rid. Outstanding =
+        queued + in-slot requests, normalized by replica units so bigger
+        replicas absorb proportionally more."""
+        rids = [rid for rid, b in self.backends.items()
+                if variant is not None and b.name == variant]
+        if not rids:                     # unknown/retired variant: all live
+            rids = list(self.backends)
+        views = [ReplicaView(
+            rid,
+            len(self.queues.get(rid, ())) + self.backends[rid].active_slots,
+            self.backends[rid].units) for rid in rids]
+        return self.router.pick(views)
 
     def step(self, now: float) -> int:
         """ONE engine tick (continuous mode): each backend admits waiting

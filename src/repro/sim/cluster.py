@@ -17,15 +17,31 @@ Reconfiguration semantics (paper §5, incl. their zero-downtime VPA patch):
     which is exactly the transient-SLO-violation dynamic the paper reports);
   * an old variant retires only once every newly created backend is ready
     (create-then-remove).
+
+Replica fabric mode (``nodes=``): instead of one monolithic backend per
+variant, the allocation materializes as a **placement of replicas across
+nodes** via ``repro.cluster.ReplicaFabric`` — each replica is its own
+c-server queue (true per-replica queues/servers), requests are routed
+two-level (the dispatcher's variant choice, then a ``RoutingAPI`` replica
+pick — power-of-two-choices least-outstanding by default), reconfiguration
+is rolling create-then-remove at replica granularity, and faults
+(``inject_fault``) kill nodes or degrade replicas. A node crash affects
+dispatches from the crash instant forward; requests the DES already
+scheduled keep their computed completions (synchronous-serve limitation,
+noted in DESIGN.md §Cluster fabric).
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Set
+from typing import Dict, List, Mapping, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.cluster.faults import FaultEvent
+from repro.cluster.placement import Node
+from repro.cluster.replicas import Replica, ReplicaFabric
+from repro.cluster.router import ReplicaView, RoutingAPI, make_router
 from repro.core.profiles import VariantProfile
 from repro.serving.api import Request, summarize_requests
 
@@ -42,6 +58,7 @@ class Backend:
     units: int
     ready_at: float
     retire_at: float = float("inf")
+    slow_factor: float = 1.0     # heterogeneity / straggler multiplier
     server_free: List[float] = field(default_factory=list)   # heap
 
     def __post_init__(self):
@@ -57,8 +74,9 @@ class Backend:
     def resized(self, n: int, t: float) -> "Backend":
         """Live resize: inherit the in-flight server queue; extra servers come
         online after RESIZE_DELAY_S; shrink keeps the earliest-free servers."""
-        nb = Backend(self.profile, n, ready_at=self.ready_at)  # resize never
-        # un-warms a loading backend nor stalls a ready one
+        nb = Backend(self.profile, n, ready_at=self.ready_at,
+                     slow_factor=self.slow_factor)  # resize never un-warms a
+        # loading backend nor stalls a ready one
         c_new = len(nb.server_free)
         inherited = sorted(self.server_free)[:c_new]
         while len(inherited) < c_new:
@@ -73,11 +91,29 @@ class Backend:
     def queue_delay(self, t: float) -> float:
         return max(self.server_free[0] - t, 0.0)
 
+    @property
+    def effective_service_s(self) -> float:
+        return self.service_s * self.slow_factor
+
+    def outstanding(self, t: float) -> float:
+        """Outstanding requests (queued + in service, fractional) — the
+        router's least-outstanding signal."""
+        s = max(self.effective_service_s, 1e-9)
+        return sum(max(f - t, 0.0) for f in self.server_free) / s
+
+    def queued(self, t: float) -> float:
+        """Queued-not-in-service requests (the ``ClusterAPI.backlog``
+        semantics): per server, whole service times of work beyond the
+        request currently in service."""
+        s = max(self.effective_service_s, 1e-9)
+        return float(sum(int((f - t) / s - 1e-9)
+                         for f in self.server_free if f - t > s))
+
     def serve_timed(self, arrival: float) -> tuple:
         """Grab a server; returns (service_start, completion)."""
         free = heapq.heappop(self.server_free)
         start = max(arrival, free, self.ready_at)
-        done = start + self.service_s
+        done = start + self.effective_service_s
         heapq.heappush(self.server_free, done)
         return start, done
 
@@ -114,16 +150,37 @@ class SimCluster:
     """Discrete-event implementation of the shared ``ClusterAPI``/
     ``ServingAPI`` (``repro.serving.api``) — the same contract the real
     ``InProcessServingEngine`` implements, so controllers and the experiment
-    harness drive either interchangeably."""
+    harness drive either interchangeably.
 
-    def __init__(self, profiles: Mapping[str, VariantProfile]):
+    Without ``nodes`` the cluster is the paper's setup: one backend per
+    variant. With ``nodes`` the replica fabric activates (see module
+    docstring): ``placement`` picks the policy (``"first-fit"``/``"spread"``
+    or a ``PlacementPolicy``), ``router`` the replica-level routing
+    (``"p2c"``/``"least"``/``"rr"``/``"random"`` or a ``RoutingAPI``), and
+    ``replica_size`` the max units per replica.
+    """
+
+    def __init__(self, profiles: Mapping[str, VariantProfile],
+                 nodes: Optional[Sequence[Node]] = None,
+                 placement="first-fit", router="p2c",
+                 replica_size: int = 4):
         self.profiles = dict(profiles)
         self.backends: Dict[str, Backend] = {}
         self.requests: List[ServedRequest] = []
         self.cost_samples: List[tuple] = []    # (t, provisioned units)
+        self.fabric: Optional[ReplicaFabric] = None
+        self.router: Optional[RoutingAPI] = None
+        if nodes is not None:
+            self.fabric = ReplicaFabric(
+                nodes, policy=placement, replica_size=replica_size,
+                rt_fn=lambda m: self.profiles[m].rt)
+            self.router = make_router(router)
 
     # ------------------------------------------------------------- ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
+        if self.fabric is not None:
+            self._apply_fabric(t, units)
+            return
         target = {m: n for m, n in units.items() if n > 0}
         new_ready = [t]
         for m, n in target.items():
@@ -145,18 +202,72 @@ class SimCluster:
             (t, sum(b.units for b in self.backends.values()
                     if b.retire_at == float("inf"))))
 
+    def _apply_fabric(self, t: float, units: Mapping[str, int]) -> None:
+        self.fabric.purge(t)
+        tr = self.fabric.apply(t, units)
+        for rep in tr.created:
+            self._attach_handle(rep)
+        for rep in tr.retired:
+            rep.handle.retire_at = rep.retire_at
+        self.cost_samples.append((t, self.fabric.provisioned_units()))
+
+    def _attach_handle(self, rep: Replica) -> None:
+        b = Backend(self.profiles[rep.variant], rep.units,
+                    ready_at=rep.ready_at, slow_factor=rep.slow_factor)
+        rep.handle = b
+
     def loaded_variants(self, t: float) -> Set[str]:
+        if self.fabric is not None:
+            return set(self.fabric.variants_ready(t))
         return {m for m, b in self.backends.items() if b.ready(t)}
 
     def backlog(self, t: float) -> float:
-        """Requests queued beyond the in-service set (for queue-aware mode)."""
-        total = 0.0
-        for b in self.backends.values():
-            if b.retire_at <= t:
-                continue
-            waiting = sum(max(f - t, 0.0) for f in b.server_free)
-            total += waiting / max(b.service_s, 1e-9)
-        return total
+        """Queued-not-in-service requests (shared ``ClusterAPI`` semantics:
+        admitted work not yet being processed — see ``serving/api.py``)."""
+        if self.fabric is not None:
+            return sum(r.handle.queued(t) for r in self.fabric.replicas.values()
+                       if r.live(t))
+        return sum(b.queued(t) for b in self.backends.values()
+                   if b.retire_at > t)
+
+    def capacity_factor(self, t: float) -> float:
+        """Fraction of the target allocation actually live (1.0 without a
+        fabric — monolithic backends don't fail)."""
+        return self.fabric.capacity_factor(t) if self.fabric is not None else 1.0
+
+    def mark_warm(self, variants: Optional[Sequence[str]] = None,
+                  t: float = 0.0) -> None:
+        """Force readiness at ``t`` (experiment-harness warm start; call
+        before traffic — it also clears the warm-up hold on each server)."""
+        def warm(b: Backend) -> None:
+            b.ready_at = min(b.ready_at, t)
+            b.server_free = [min(f, t) for f in b.server_free]
+            heapq.heapify(b.server_free)
+        if self.fabric is not None:
+            self.fabric.mark_ready(t, variants)
+            for r in self.fabric.replicas.values():
+                if variants is None or r.variant in variants:
+                    warm(r.handle)
+            return
+        for m, b in self.backends.items():
+            if variants is None or m in variants:
+                warm(b)
+
+    # ----------------------------------------------------------------- faults
+    def inject_fault(self, t: float, event: FaultEvent) -> None:
+        """Apply one ``repro.cluster.faults`` event (fabric mode only)."""
+        if self.fabric is None:
+            raise RuntimeError("fault injection requires the replica fabric "
+                               "(construct SimCluster with nodes=)")
+        if event.kind == "node_crash":
+            self.fabric.crash_node(t, event.target)
+        elif event.kind == "node_recover":
+            self.fabric.recover_node(t, event.target)
+        elif event.kind in ("replica_slowdown", "replica_restore"):
+            factor = event.factor if event.kind == "replica_slowdown" else 1.0
+            if self.fabric.slow_replica(t, event.target, factor):
+                rep = self.fabric.replicas[event.target]
+                rep.handle.slow_factor = rep.slow_factor
 
     # ---------------------------------------------------------------- serving
     def submit(self, req: Request, backend: Optional[str]) -> bool:
@@ -178,6 +289,9 @@ class SimCluster:
             del self.backends[m]
 
     def dispatch(self, arrival: float, backend_name: Optional[str]) -> None:
+        if self.fabric is not None:
+            self._dispatch_fabric(arrival, backend_name)
+            return
         self._purge(arrival)
         candidates = {m: b for m, b in self.backends.items()
                       if b.retire_at > arrival}
@@ -197,10 +311,50 @@ class SimCluster:
                                            b.profile.accuracy,
                                            service_start=start))
 
+    # ----------------------------------------------------- two-level routing
+    def _pick_replica(self, variant: str, arrival: float) -> Optional[Replica]:
+        """Level 2 of two-level routing: the ``RoutingAPI`` picks among the
+        variant's ready replicas (fall back to warming ones — service then
+        waits for readiness, the same spill the monolithic sim models)."""
+        reps = self.fabric.ready_replicas(variant, arrival) or \
+            [r for r in self.fabric.group(variant) if r.live(arrival)]
+        if not reps:
+            return None
+        views = [ReplicaView(r.rid, r.handle.outstanding(arrival), r.units)
+                 for r in reps]
+        rid = self.router.pick(views)
+        return self.fabric.replicas[rid]
+
+    def _dispatch_fabric(self, arrival: float,
+                         backend_name: Optional[str]) -> None:
+        self.fabric.purge(arrival)
+        live = [r for r in self.fabric.replicas.values() if r.live(arrival)]
+        if not live:
+            self.requests.append(ServedRequest(arrival, arrival + 10.0,
+                                               "none", 0.0))
+            return
+        variant = backend_name
+        ready = [r for r in live if r.ready(arrival)]
+        if variant is None or not any(r.variant == variant for r in ready):
+            # dispatcher quota points at a warming/retired/unknown variant:
+            # spill to the ready variant whose best replica frees first
+            # (legacy fallback — the transient-overload dynamic of §5)
+            pool = ready or live
+            variant = min(pool,
+                          key=lambda r: r.handle.queue_delay(arrival)).variant
+        rep = self._pick_replica(variant, arrival)
+        start, done = rep.handle.serve_timed(arrival)
+        self.requests.append(ServedRequest(
+            arrival, done, rep.rid, self.profiles[rep.variant].accuracy,
+            service_start=start))
+
     def dispatch_fanout(self, arrival: float, backend_names, accuracy: float
                         ) -> None:
         """Cocktail-style ensembling: the request runs on EVERY member;
         latency is the slowest member (majority vote needs all of them)."""
+        if self.fabric is not None:
+            self._dispatch_fanout_fabric(arrival, backend_names, accuracy)
+            return
         self._purge(arrival)
         done = arrival + 10.0
         served = False
@@ -217,6 +371,28 @@ class SimCluster:
             self.dispatch(arrival, None)
             return
         self.requests.append(ServedRequest(arrival, done, "+".join(backend_names),
+                                           accuracy, service_start=start))
+
+    def _dispatch_fanout_fabric(self, arrival: float, backend_names,
+                                accuracy: float) -> None:
+        self.fabric.purge(arrival)
+        done = arrival + 10.0
+        served = False
+        start = 0.0
+        members = []
+        for name in backend_names:
+            rep = self._pick_replica(name, arrival)
+            if rep is None:
+                continue
+            s, d = rep.handle.serve_timed(arrival)
+            done = max(done if served else arrival, d)
+            start = min(start, s) if served else s
+            served = True
+            members.append(rep.rid)
+        if not served:
+            self.dispatch(arrival, None)
+            return
+        self.requests.append(ServedRequest(arrival, done, "+".join(members),
                                            accuracy, service_start=start))
 
     # ---------------------------------------------------------------- metrics

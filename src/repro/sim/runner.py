@@ -48,7 +48,7 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
                    interval_s: float = 30.0, seed: int = 0,
                    warm_start: Optional[Mapping[str, int]] = None,
                    reference_accuracy: Optional[float] = None,
-                   cluster=None,
+                   cluster=None, faults=None,
                    ) -> ExperimentResult:
     """Replay ``rate_trace`` (requests/s per second) and score the controller.
 
@@ -56,11 +56,22 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
     ``slo_ms=750`` ms latency SLO, accuracy loss reported against the most
     accurate variant (Table 1). ``warm_start`` pre-loads variants as the
     paper's experiments do so t=0 isn't an artificial cold start.
+
+    ``faults`` (a ``repro.cluster.faults.FaultSchedule``) injects failure
+    events into fabric-backed clusters as simulated time passes, interleaved
+    in time order with controller steps — the end-to-end failure-scenario
+    harness.
     """
     cluster = cluster if cluster is not None else SimCluster(profiles)
     best_acc = reference_accuracy if reference_accuracy is not None \
         else max(p.accuracy for p in profiles.values())
     arrivals = arrivals_from_rate(rate_trace, seed=seed)
+
+    # realized_shares must reflect THIS replay only — a reused controller's
+    # dispatcher carries counts (and WRR phase) from previous runs
+    dispatcher = getattr(controller, "dispatcher", None)
+    if dispatcher is not None:
+        dispatcher.reset()
 
     # Seed the monitor with one flushed pre-trace second of the initial rate so
     # the first decision sees a real load estimate (not the min-load floor).
@@ -69,20 +80,28 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
     if warm_start:
         cluster.apply_allocation(-max(profiles[m].rt for m in warm_start),
                                  warm_start)
-        # mark as instantly ready
-        for m in warm_start:
-            cluster.backends[m].ready_at = 0.0
+        # mark as instantly ready (replica-fabric clusters expose mark_warm;
+        # plain backends keep the legacy direct poke)
+        if hasattr(cluster, "mark_warm"):
+            cluster.mark_warm(list(warm_start))
+        else:
+            for m in warm_start:
+                cluster.backends[m].ready_at = 0.0
     controller.step(0.0, cluster)
 
     react_s = getattr(getattr(controller, "cfg", None), "reactive_check_s", 5.0)
     next_ctrl = interval_s
     next_react = react_s
     for rid, a in enumerate(arrivals):
+        while faults is not None and faults.next_t() <= min(a, next_ctrl):
+            faults.apply_due(faults.next_t(), cluster)
         while a >= next_ctrl:
             controller.monitor.advance_to(next_ctrl)
             controller.step(next_ctrl, cluster)
             next_ctrl += interval_s
             next_react = next_ctrl - interval_s + react_s
+            if faults is not None and faults.next_t() <= min(a, next_ctrl):
+                faults.apply_due(faults.next_t(), cluster)
         if a >= next_react and hasattr(controller, "maybe_react"):
             controller.monitor.advance_to(next_react)
             controller.maybe_react(next_react, cluster)

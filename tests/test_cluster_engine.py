@@ -1,0 +1,126 @@
+"""Replica sharding on the real engine: multiple VariantBackend instances
+per variant behind the fabric, two-level routing, and node-crash recovery
+with retry semantics — all through the shared ServingAPI."""
+import time
+
+import numpy as np
+
+from repro.cluster import make_nodes, node_crash, replica_slowdown
+from repro.configs import get_config, smoke_variant
+from repro.serving.api import ClusterAPI, Request, ServingAPI
+from repro.serving.engine import InProcessServingEngine
+
+MAX_NEW = 6
+
+
+def _variants(n=1):
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=128)
+    out = {"small": (base.replace(num_layers=2, name="small"), 70.0)}
+    if n > 1:
+        out["big"] = (base.replace(num_layers=3, name="big"), 75.0)
+    return out
+
+def _reqs(n, rng, prompt_len=8):
+    return [Request(rid=i, tokens=rng.integers(0, 128, prompt_len),
+                    max_new=MAX_NEW, arrival=time.time()) for i in range(n)]
+
+
+def _engine(n_variants=1, n_nodes=2, node_cap=2, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_new", MAX_NEW)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("placement", "spread")
+    return InProcessServingEngine(_variants(n_variants),
+                                  nodes=make_nodes(n_nodes, node_cap),
+                                  replica_size=1, **kw)
+
+
+def test_allocation_materializes_as_engine_replicas():
+    eng = _engine()
+    assert isinstance(eng, ClusterAPI) and isinstance(eng, ServingAPI)
+    eng.apply_allocation(0.0, {"small": 2})
+    assert sorted(eng.backends) == ["small#0", "small#1"]
+    # spread placement: one replica per node
+    assert {r.node_id for r in eng.fabric.replicas.values()} == \
+        {"node0", "node1"}
+    assert eng.loaded_variants(0.0) == {"small"}
+    rng = np.random.default_rng(0)
+    for r in _reqs(8, rng):
+        assert eng.submit(r, "small")
+    eng.drain(0.0)
+    assert len(eng.done) == 8
+    assert {r.rid for r in eng.done} == set(range(8))     # exactly once
+    served_by = {r.backend for r in eng.done}
+    assert served_by == {"small#0", "small#1"}            # both replicas used
+    assert eng.in_flight() == 0 and eng.backlog(0.0) == 0
+
+
+def test_two_level_routing_respects_variant_choice():
+    eng = _engine(n_variants=2, n_nodes=2, node_cap=2)
+    eng.apply_allocation(0.0, {"small": 2, "big": 2})
+    rng = np.random.default_rng(1)
+    reqs = _reqs(6, rng)
+    for r in reqs[:3]:
+        eng.submit(r, "small")
+    for r in reqs[3:]:
+        eng.submit(r, "big")
+    eng.step(0.0)                    # work spread across all four replicas
+    # crash retry keeps variant affinity: orphans of small#x must land on
+    # the surviving small replica, not spill onto big (and vice versa)
+    now = time.time()
+    eng.inject_fault(now, node_crash(now, "node0"))
+    eng.drain(0.0)
+    accs = {r.rid: r.accuracy for r in eng.done}
+    assert all(accs[i] == 70.0 for i in range(3))     # small replicas only
+    assert all(accs[i] == 75.0 for i in range(3, 6))  # big replicas only
+
+
+def test_replica_reconfig_scale_down_drains():
+    eng = _engine()
+    eng.apply_allocation(0.0, {"small": 2})
+    rng = np.random.default_rng(2)
+    for r in _reqs(4, rng):
+        eng.submit(r, "small")
+    eng.step(0.0)                    # both replicas now hold work
+    eng.apply_allocation(1.0, {"small": 1})
+    assert len(eng.backends) == 1
+    assert eng.fabric.provisioned_units() == 1
+    eng.drain(1.0)
+    assert len(eng.done) == 4        # drained + requeued, nothing lost
+
+
+def test_node_crash_retries_on_survivor():
+    eng = _engine(queue_cap=64)
+    eng.apply_allocation(0.0, {"small": 2})
+    rng = np.random.default_rng(3)
+    for r in _reqs(10, rng):
+        assert eng.submit(r, "small")
+    eng.step(0.0)                    # work in flight on both replicas
+    now = time.time()
+    eng.inject_fault(now, node_crash(now, "node0"))
+    assert sorted(eng.backends) == ["small#1"]
+    assert eng.fabric.capacity_factor(now) == 0.5
+    eng.drain(0.0)
+    # retry semantics: every accepted request completes exactly once
+    assert {r.rid for r in eng.done} == set(range(10))
+    assert eng.rejected == 0
+    # controller-driven re-placement restores capacity on the live node set
+    eng.apply_allocation(now + 1.0, {"small": 2})
+    assert eng.fabric.capacity_factor(now + 1.0) == 1.0
+    assert all(r.node_id == "node1"
+               for r in eng.fabric.replicas.values())
+
+
+def test_replica_slowdown_fault_stretches_decode():
+    eng = _engine()
+    eng.apply_allocation(0.0, {"small": 2})
+    eng.inject_fault(0.0, replica_slowdown(0.0, "small#0", 3.0))
+    assert eng.backends["small#0"].slow_factor == 3.0
+    assert eng.backends["small#1"].slow_factor == 1.0
+    rng = np.random.default_rng(4)
+    for r in _reqs(4, rng):
+        eng.submit(r, "small")
+    eng.drain(0.0)
+    assert len(eng.done) == 4        # still correct, just slower

@@ -1,0 +1,311 @@
+"""Cluster fabric: placement policies, rolling replica reconfiguration,
+two-level routing balance, backlog semantics, and end-to-end failure
+scenarios on the discrete-event backend."""
+import numpy as np
+import pytest
+
+from repro.cluster import (FaultSchedule, FirstFitPlacement, Node,
+                           PlacementError, ReplicaSpec, SpreadPlacement,
+                           make_nodes, node_crash, node_recover,
+                           replica_restore, replica_sizes, replica_slowdown)
+from repro.core.adapter import ControllerConfig, InfAdapterController
+from repro.core.forecaster import MovingMaxForecaster
+from repro.core.profiles import VariantProfile, paper_resnet_profiles
+from repro.serving.api import ClusterAPI, ServingAPI
+from repro.sim.cluster import SimCluster
+from repro.sim.runner import run_experiment
+
+PROFILES = paper_resnet_profiles(noise=0.0)
+
+
+# --------------------------------------------------------------- placement
+def test_replica_sizes_even_split():
+    assert replica_sizes(8, 2) == [2, 2, 2, 2]
+    assert replica_sizes(5, 2) == [2, 2, 1]
+    assert replica_sizes(3, 8) == [3]
+    assert replica_sizes(0, 2) == []
+    # total is always preserved
+    for units in range(1, 30):
+        for r in range(1, 9):
+            assert sum(replica_sizes(units, r)) == units
+
+
+def test_first_fit_packs_spread_spreads():
+    nodes = make_nodes(3, 4)
+    specs = [ReplicaSpec("m", i, 2) for i in range(3)]
+    pl = FirstFitPlacement().place(nodes, specs, {})
+    assert pl.feasible
+    assert sorted(s.node_id for s in pl.placed) == ["node0", "node0", "node1"]
+    specs = [ReplicaSpec("m", i, 2) for i in range(3)]
+    pl = SpreadPlacement().place(nodes, specs, {})
+    assert sorted(s.node_id for s in pl.placed) == ["node0", "node1", "node2"]
+
+
+def test_placement_respects_existing_usage_and_dead_nodes():
+    nodes = make_nodes(2, 4)
+    nodes[0].alive = False
+    pl = SpreadPlacement().place(nodes, [ReplicaSpec("m", 0, 4)],
+                                 {"node1": 2})
+    # node0 dead, node1 half full -> repair shrinks to the free 2 units
+    assert pl.placed[0].node_id == "node1"
+    assert pl.placed[0].units == 2
+    assert pl.shortfall == {"m": 2}
+
+
+def test_placement_strict_rejects_infeasible():
+    nodes = make_nodes(1, 2)
+    with pytest.raises(PlacementError):
+        FirstFitPlacement().place(nodes, [ReplicaSpec("m", 0, 4)], {},
+                                  strict=True)
+
+
+def test_placement_repair_records_shortfall_when_full():
+    nodes = make_nodes(1, 2)
+    pl = FirstFitPlacement().place(nodes, [ReplicaSpec("m", 0, 2),
+                                           ReplicaSpec("m", 1, 2)], {})
+    assert len(pl.placed) == 1
+    assert pl.shortfall == {"m": 2}
+
+
+# ------------------------------------------------- rolling reconfiguration
+def _fabric_cluster(**kw):
+    kw.setdefault("nodes", make_nodes(4, 8))
+    kw.setdefault("replica_size", 2)
+    kw.setdefault("placement", "spread")
+    return SimCluster(PROFILES, **kw)
+
+
+def test_fabric_materializes_allocation_as_replicas():
+    c = _fabric_cluster()
+    c.apply_allocation(0.0, {"resnet50": 8})
+    reps = c.fabric.group("resnet50")
+    assert len(reps) == 4 and all(r.units == 2 for r in reps)
+    assert len({r.node_id for r in reps}) == 4          # spread
+    # warming: ready only after rt
+    assert c.loaded_variants(0.0) == set()
+    assert c.loaded_variants(PROFILES["resnet50"].rt + 0.1) == {"resnet50"}
+
+
+def test_fabric_conforms_to_shared_protocols():
+    c = _fabric_cluster()
+    assert isinstance(c, ClusterAPI) and isinstance(c, ServingAPI)
+
+
+def test_rolling_reconfig_capacity_never_dips():
+    """Replica-granular create-then-remove: the old replicas retire only
+    once every replacement is ready, so live capacity never drops below the
+    old allocation during the transition."""
+    c = _fabric_cluster()
+    c.apply_allocation(0.0, {"resnet18": 4})
+    c.mark_warm()
+    old = {r.rid for r in c.fabric.group("resnet18")}
+    c.apply_allocation(100.0, {"resnet50": 8})
+    switch = 100.0 + PROFILES["resnet50"].rt
+    for r in c.fabric.replicas.values():
+        if r.rid in old:
+            assert r.retire_at >= switch - 1e-9         # still serving
+        else:
+            assert r.ready_at == pytest.approx(switch)
+    # mid-transition traffic lands on the old, still-live replicas
+    c.dispatch(101.0, "resnet50")
+    assert c.requests[-1].backend.startswith("resnet18#")
+    c.dispatch(switch + 0.1, "resnet50")
+    assert c.requests[-1].backend.startswith("resnet50#")
+
+
+def test_reapply_same_allocation_is_churn_free():
+    c = _fabric_cluster()
+    c.apply_allocation(0.0, {"resnet50": 8})
+    rids = {r.rid for r in c.fabric.replicas.values()}
+    c.apply_allocation(50.0, {"resnet50": 8})
+    assert {r.rid for r in c.fabric.replicas.values()} == rids
+    assert all(r.retire_at == float("inf") for r in c.fabric.replicas.values())
+
+
+def test_scale_down_keeps_matching_replicas():
+    c = _fabric_cluster()
+    c.apply_allocation(0.0, {"resnet50": 8})
+    c.mark_warm()
+    c.apply_allocation(50.0, {"resnet50": 4})
+    live = [r for r in c.fabric.group("resnet50")
+            if r.retire_at == float("inf")]
+    assert sum(r.units for r in live) == 4
+    # surplus retires immediately (no creates -> switch_t == t)
+    gone = [r for r in c.fabric.group("resnet50") if r.retire_at <= 50.0]
+    assert sum(r.units for r in gone) == 4
+
+
+# ------------------------------------------------------- backlog semantics
+def test_sim_backlog_counts_queued_not_in_service():
+    """ClusterAPI.backlog: only queued-not-yet-in-service requests count —
+    aligned with the engine's admission-queue-depth semantics."""
+    prof = VariantProfile(name="v", accuracy=70.0, rt=0.0, th_slope=2.0,
+                          th_intercept=0.0, lat_base_ms=500.0, lat_k_ms=0.0)
+    c = SimCluster({"v": prof})
+    c.apply_allocation(0.0, {"v": 1})           # th=2 rps, p=0.5s -> c=1
+    assert c.backlog(0.0) == 0.0
+    for _ in range(3):
+        c.dispatch(0.0, "v")
+    # one request in service, two queued behind it
+    assert c.backlog(0.0) == pytest.approx(2.0)
+    # in-service work alone is not backlog
+    s = c.backends["v"].effective_service_s
+    assert c.backlog(2 * s + 1e-6) == pytest.approx(0.0)
+
+
+# ------------------------------------------------------- two-level routing
+def test_p2c_keeps_replicas_balanced_under_poisson_load():
+    """Power-of-two-choices: the time-averaged per-replica outstanding stays
+    balanced (max/mean ratio bounded) under Poisson load at ~70% utilization
+    — across seeds and replica counts (the balls-into-bins property)."""
+    for seed in range(5):
+        for n_rep in (2, 4, 8):
+            c = SimCluster(PROFILES, nodes=make_nodes(n_rep, 2),
+                           replica_size=2, router="p2c", placement="spread")
+            c.apply_allocation(0.0, {"resnet50": 2 * n_rep})
+            c.mark_warm()
+            cap = sum(len(r.handle.server_free) / r.handle.effective_service_s
+                      for r in c.fabric.replicas.values())
+            rng = np.random.default_rng(seed)
+            t, sums = 0.0, {}
+            for _ in range(1500):
+                t += rng.exponential(1.0 / (0.7 * cap))
+                for r in c.fabric.replicas.values():
+                    sums[r.rid] = sums.get(r.rid, 0.0) + \
+                        r.handle.outstanding(t)
+                c.dispatch(t, "resnet50")
+            avg = np.array(list(sums.values())) / 1500.0
+            assert avg.max() / max(avg.mean(), 1e-9) < 1.6, \
+                f"imbalanced: seed={seed} n={n_rep} avgs={avg}"
+
+
+def test_straggler_p2c_beats_load_blind_routing():
+    """A slow replica (injected straggler) degrades rr/random routing far
+    more than p2c — the reason two-level routing is load-aware."""
+    p99 = {}
+    for router in ("p2c", "random"):
+        c = _fabric_cluster(router=router)
+        c.apply_allocation(0.0, {"resnet50": 8})
+        c.mark_warm()
+        rid = sorted(c.fabric.replicas)[0]
+        c.inject_fault(0.0, replica_slowdown(0.0, rid, 4.0))
+        rng = np.random.default_rng(0)
+        t = 0.0
+        for _ in range(2500):
+            t += rng.exponential(1.0 / 80.0)
+            c.dispatch(t, "resnet50")
+        p99[router] = c.summarize(750.0, 78.31)["p99_ms"]
+    assert p99["p2c"] <= p99["random"]
+
+
+def test_stale_replica_fault_events_are_noops():
+    """A slowdown/restore targeting a replica that already retired must not
+    crash the replay — stale fault events are skipped."""
+    c = _fabric_cluster()
+    c.apply_allocation(0.0, {"resnet50": 4})
+    c.mark_warm()
+    old = sorted(c.fabric.replicas)[0]
+    c.apply_allocation(10.0, {"resnet18": 4})   # resnet50 retires
+    c.dispatch(10.0 + PROFILES["resnet18"].rt + 1.0, "resnet18")  # purges
+    assert old not in c.fabric.replicas
+    c.inject_fault(30.0, replica_slowdown(30.0, old, 3.0))        # no-op
+    c.inject_fault(31.0, replica_restore(31.0, old))              # no-op
+
+
+def test_rr_router_cycles_per_variant():
+    """The rr baseline must actually rotate within a variant even when
+    traffic to other variants interleaves."""
+    from repro.cluster import ReplicaView, RoundRobinReplicaRouter
+    r = RoundRobinReplicaRouter()
+    a = [ReplicaView("a#0", 0), ReplicaView("a#1", 0)]
+    b = [ReplicaView("b#0", 0), ReplicaView("b#1", 0)]
+    picks_a, picks_b = [], []
+    for _ in range(4):                       # interleave a,b,a,b,...
+        picks_a.append(r.pick(a))
+        picks_b.append(r.pick(b))
+    assert picks_a == ["a#0", "a#1", "a#0", "a#1"]
+    assert picks_b == ["b#0", "b#1", "b#0", "b#1"]
+
+
+def test_fault_injection_requires_fabric():
+    c = SimCluster(PROFILES)
+    with pytest.raises(RuntimeError, match="fabric"):
+        c.inject_fault(0.0, node_crash(0.0, "node0"))
+
+
+# -------------------------------------------------------- failure scenario
+def _constant_trace(seconds=240, rate=60):
+    return np.full(seconds, float(rate))
+
+
+def _failure_run(faults=None, seed=3):
+    # first-fit packs replicas onto few nodes, so the node crash takes a
+    # measurable bite out of capacity (near-capacity budget: 12 @ 60 rps)
+    cluster = SimCluster(PROFILES, nodes=make_nodes(4, 8), replica_size=2,
+                         placement="first-fit", router="p2c")
+    cfg = ControllerConfig(budget=12, beta=0.05, gamma=0.2, reactive=True)
+    ctrl = InfAdapterController(PROFILES, MovingMaxForecaster(), cfg)
+    res = run_experiment("failure", ctrl, PROFILES, _constant_trace(),
+                         warm_start={"resnet18": 8}, reference_accuracy=78.31,
+                         cluster=cluster, faults=faults, seed=seed)
+    return cluster, res
+
+
+def _viol_rate(cluster, t0, t1, slo_ms=750.0):
+    win = [r for r in cluster.requests if t0 <= r.arrival < t1]
+    assert win, f"no requests in [{t0},{t1})"
+    return float(np.mean([r.latency_ms > slo_ms for r in win]))
+
+
+def test_node_failure_recovery_restores_slo():
+    """Kill a node mid-trace: the reactive controller re-places through
+    apply_allocation (capacity_factor discounts lost replicas), the SLO
+    spike is real but bounded, and the post-recovery violation rate
+    returns to the no-fault baseline."""
+    base_cluster, _ = _failure_run(faults=None)
+    faults = FaultSchedule([node_crash(80.0, "node0"),
+                            node_recover(150.0, "node0")])
+    cluster, _ = _failure_run(faults=faults)
+    assert len(faults) == 0                      # every event injected
+    # the controller re-placed: full target capacity is live again
+    assert cluster.fabric.capacity_factor(239.0) == 1.0
+    assert cluster.fabric.nodes["node0"].alive
+    # the crash has a measurable cost...
+    spike = _viol_rate(cluster, 80.0, 95.0)
+    assert spike > _viol_rate(base_cluster, 80.0, 95.0)
+    # ...that stays bounded (re-placement begins at the next reactive check)
+    assert spike < 0.8
+    assert _viol_rate(cluster, 100.0, 150.0) < 0.05     # drained well before
+    # full recovery: the tail of the trace matches the no-fault baseline
+    post = _viol_rate(cluster, 180.0, 240.0)
+    base = _viol_rate(base_cluster, 180.0, 240.0)
+    assert post <= base + 0.02
+
+
+def test_all_controllers_run_on_the_fabric():
+    """Acceptance: InfAdapter, MS+, VPA+, INFaaS, and Cocktail all drive the
+    replica fabric unchanged through the shared ClusterAPI."""
+    from repro.core.adapter import MSPlusController, VPAPlusController
+    from repro.core.cocktail import CocktailController
+    from repro.core.infaas import INFaaSController
+    trace = _constant_trace(seconds=120, rate=40)
+    cfg = ControllerConfig(budget=16, beta=0.05, gamma=0.2)
+
+    def fabric():
+        return SimCluster(PROFILES, nodes=make_nodes(4, 8), replica_size=2,
+                          placement="spread")
+
+    runs = {
+        "inf": InfAdapterController(PROFILES, MovingMaxForecaster(), cfg),
+        "ms": MSPlusController(PROFILES, MovingMaxForecaster(), cfg),
+        "vpa": VPAPlusController(PROFILES["resnet50"], cfg),
+        "infaas": INFaaSController(PROFILES, cfg, min_accuracy=70.0),
+        "cocktail": CocktailController(PROFILES, MovingMaxForecaster(), cfg),
+    }
+    for name, ctrl in runs.items():
+        warm = {"resnet50": 8} if name == "vpa" else {"resnet18": 8}
+        res = run_experiment(name, ctrl, PROFILES, trace, warm_start=warm,
+                             reference_accuracy=78.31, cluster=fabric())
+        assert res.summary["n_requests"] > 0, name
+        assert res.summary["violation_rate"] < 0.5, name
+        assert res.summary["avg_cost_units"] > 0, name

@@ -45,6 +45,30 @@ def test_share_convergence_property(weights):
         assert abs(d.realized_shares().get(m, 0.0) - w / total) < 0.05
 
 
+@given(weights=st.dictionaries(
+    st.sampled_from(["a", "b", "c", "d"]),
+    st.floats(0.5, 100.0), min_size=1, max_size=4),
+    warmup=st.integers(1, 500))
+@settings(max_examples=30, deadline=None)
+def test_shares_converge_to_quotas_after_reset(weights, warmup):
+    """reset() zeroes the counters so realized_shares reflects only the
+    current run — and convergence-to-quota still holds afterwards."""
+    d = WeightedRoundRobinDispatcher()
+    d.set_weights(weights)
+    for _ in range(warmup):              # pollute counters with a "previous run"
+        d.next_backend()
+    d.reset()
+    assert d.realized_shares() == {}
+    assert all(c == 0 for c in d.dispatched.values())
+    n = 2000
+    for _ in range(n):
+        d.next_backend()
+    assert sum(d.dispatched.values()) == n   # counts the post-reset run only
+    total = sum(weights.values())
+    for m, w in weights.items():
+        assert abs(d.realized_shares().get(m, 0.0) - w / total) < 0.05
+
+
 def test_weight_update_mid_stream():
     d = WeightedRoundRobinDispatcher()
     d.set_weights({"a": 1.0})
