@@ -1,22 +1,32 @@
-"""Continuous batching vs legacy pump serving: throughput + tail latency.
+"""Serving-engine benchmarks: continuous batching vs pump, dense vs paged KV.
 
-Replays the same Poisson arrival schedule against the real-execution engine
-in both modes at several offered loads and reports per-mode P99 / mean
-latency / achieved throughput, plus the continuous/pump P99 ratio at each
-rate. This measures the tentpole claim of the continuous-batching PR: at
-equal offered load the slot-based engine's tail latency is no worse than the
-blocking micro-batch path (it strictly wins once arrivals collide with
-in-flight generations — head-of-line blocking).
+Two studies against the real-execution engine:
+
+1. **Continuous vs pump** (PR 1 tentpole): identical Poisson arrival
+   schedules in both modes at several offered loads; per-mode P99 / mean
+   latency / achieved throughput and the continuous/pump P99 ratio.
+
+2. **Paged vs dense KV cache** (DESIGN.md §Paged KV cache): at 25/50/75%
+   slot occupancy with short sequences, per-engine-tick P50/P99 latency and
+   closed-loop throughput under the dense per-slot ring cache vs the paged
+   pool (right-sized prefill + length-aware decode); plus a mixed-length
+   throughput cell and a context-scaling sweep showing paged step time
+   follows *live* context while dense follows capacity. Results land in the
+   machine-readable ``reports/BENCH_engine.json`` (a CI artifact) and are
+   rendered into EXPERIMENTS.md by ``repro.analysis.report``.
 
 Wall-clock real execution (CPU, smoke-scale variant) — a few seconds per
-(mode, rate) cell.
+cell.
 
 Run: PYTHONPATH=src python -m benchmarks.run --only engine_serving
 """
 from __future__ import annotations
 
+import gc
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -26,6 +36,24 @@ PROMPT_LEN = 16
 MAX_NEW = 24
 MAX_BATCH = 8
 VOCAB = 128
+
+# --- paged-vs-dense study geometry ---
+# Capacity C = PG_PROMPT + PG_MAX_NEW = 1024 tokens/slot: big enough that
+# capacity-proportional KV reads dominate a decode tick on CPU (the regime
+# where the cache discipline matters); short requests use ~150 of those
+# tokens, so dense pays ~7x their live context every step. The bench variant
+# unrolls its 2 layers (scan_layers=False) and ticks one decode step at a
+# time (decode_chunk=1): a multi-step chunk scan would thread the whole
+# cache through the scan carry, copying capacity-sized buffers per step in
+# BOTH disciplines and masking the one under comparison.
+PG_PROMPT = 128
+PG_MAX_NEW = 896
+PG_SHORT_NEW = 16
+PG_PAGE = 128
+PG_CHUNK = 1
+PG_BATCH = 16           # 16 slots × 1024 tokens: capacity reads dominate
+OCCUPANCIES = (0.25, 0.5, 0.75)
+BENCH_JSON = os.path.join("reports", "BENCH_engine.json")
 
 
 def _variant():
@@ -60,6 +88,180 @@ def _replay(mode: str, arrivals: np.ndarray, seed: int) -> dict:
     return s
 
 
+def _paged_variant():
+    from repro.configs import get_config, smoke_variant
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=VOCAB, num_layers=2,
+        scan_layers=False, name="bench-paged-2L")
+    return {"bench-paged-2L": (base, 70.0)}
+
+
+def _paged_engine(kv_cache: str):
+    from repro.serving.engine import InProcessServingEngine
+    eng = InProcessServingEngine(
+        _paged_variant(), max_batch=PG_BATCH, prompt_len=PG_PROMPT,
+        max_new=PG_MAX_NEW, decode_chunk=PG_CHUNK, queue_cap=100_000,
+        kv_cache=kv_cache, kv_page_size=PG_PAGE)
+    eng.apply_allocation(0.0, {"bench-paged-2L": 1})
+    return eng
+
+
+def _closed_loop_pair(engines: Dict, k: int, max_new, n_steps: int,
+                      seed: int) -> Dict[str, Dict]:
+    """Drive every engine through the SAME closed-loop workload (exactly
+    ``k`` in flight, identical per-request ``max_new`` draws), alternating
+    one tick per engine so machine-load drift hits all of them equally —
+    the ratios, which the acceptance criteria gate on, stay meaningful on a
+    noisy host. ``max_new`` is an int or a callable(rng)->int.
+
+    Returns per-engine per-tick P50/P99 ms and completions per second of
+    *own* busy time (each engine's throughput as if running alone)."""
+    from repro.serving.api import Request
+    draw = max_new if callable(max_new) else (lambda _rng: max_new)
+    st = {kv: {"rng": np.random.default_rng(seed), "rid": 0, "ticks": [],
+               "busy_s": 0.0, "done0": len(eng.done)}
+          for kv, eng in engines.items()}
+
+    def top_up(kv):
+        s, eng = st[kv], engines[kv]
+        while eng.backlog(0.0) + eng.in_flight() < k:
+            eng.submit(Request(
+                rid=s["rid"], tokens=s["rng"].integers(0, VOCAB, PG_PROMPT),
+                max_new=int(draw(s["rng"])), arrival=time.time()), None)
+            s["rid"] += 1
+
+    for kv in engines:
+        top_up(kv)
+    for _ in range(4):                    # settle into steady state
+        for kv, eng in engines.items():
+            eng.step(0.0)
+            top_up(kv)
+    for kv in engines:
+        st[kv]["done0"] = len(engines[kv].done)
+    gc.disable()                          # measured loop: no GC pauses
+    try:
+        for _ in range(n_steps):
+            for kv, eng in engines.items():
+                t1 = time.perf_counter()
+                eng.step(0.0)
+                dt = time.perf_counter() - t1
+                st[kv]["ticks"].append(dt * 1000.0)
+                st[kv]["busy_s"] += dt
+                top_up(kv)
+    finally:
+        gc.enable()
+    out = {}
+    for kv, eng in engines.items():
+        completed = len(eng.done) - st[kv]["done0"]
+        eng.drain(0.0)
+        ticks = np.asarray(st[kv]["ticks"])
+        out[kv] = {"p50_step_ms": float(np.percentile(ticks, 50)),
+                   "p99_step_ms": float(np.percentile(ticks, 99)),
+                   "mean_step_ms": float(ticks.mean()),
+                   "throughput_rps": completed / st[kv]["busy_s"]}
+    return out
+
+
+def _context_scaling_pair(engines: Dict, k: int, seed: int,
+                          gen: int = 320) -> Dict[str, List[Dict]]:
+    """Admit ``k`` identical long generations on every engine and record
+    mean tick time as the live context grows, alternating ticks across
+    engines (same drift-cancelling rationale as ``_closed_loop_pair``) —
+    paged tick time should track context, dense capacity."""
+    from repro.serving.api import Request
+    for kv, eng in engines.items():
+        rng = np.random.default_rng(seed)
+        for i in range(k):
+            eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, PG_PROMPT),
+                               max_new=gen, arrival=time.time()), None)
+        eng.step(0.0)                     # admission (prefill) tick
+    bins: Dict[str, Dict[int, List[float]]] = {kv: {} for kv in engines}
+    ctx = PG_PROMPT
+    gc.disable()
+    try:
+        while any(eng.in_flight() for eng in engines.values()):
+            for kv, eng in engines.items():
+                if not eng.in_flight():
+                    continue
+                t1 = time.perf_counter()
+                eng.step(0.0)
+                dt_ms = (time.perf_counter() - t1) * 1000.0
+                bins[kv].setdefault(ctx // 128 * 128, []).append(dt_ms)
+            ctx += PG_CHUNK
+    finally:
+        gc.enable()
+    for eng in engines.values():
+        eng.drain(0.0)
+    return {kv: [{"context_tokens": c, "mean_step_ms": float(np.mean(v))}
+                 for c, v in sorted(b.items())]
+            for kv, b in bins.items()}
+
+
+def paged_vs_dense() -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """The §Paged KV cache study: occupancy cells, mixed-length throughput,
+    context scaling. Returns benchmark rows + the BENCH_engine.json payload."""
+    rows: List[Tuple[str, float, str]] = []
+    engines = {kv: _paged_engine(kv) for kv in ("dense", "paged")}
+    payload: Dict = {
+        "config": {"prompt_len": PG_PROMPT, "max_new": PG_MAX_NEW,
+                   "short_max_new": PG_SHORT_NEW, "max_batch": PG_BATCH,
+                   "page_size": PG_PAGE, "decode_chunk": PG_CHUNK,
+                   "vocab": VOCAB, "layers": 2, "d_model": 64},
+        "occupancy": [], "mixed_load": {}, "context_scaling": {}}
+
+    # short sequences in a narrow band around PG_SHORT_NEW: identical
+    # lengths would retire whole admission cohorts at once, which is neither
+    # realistic nor how steady-state occupancy behaves
+    def short(rng):
+        return int(rng.integers(PG_SHORT_NEW - 4, PG_SHORT_NEW + 5))
+
+    for occ in OCCUPANCIES:
+        k = max(1, int(round(occ * PG_BATCH)))
+        cell = {"occupancy": occ, "slots": k}
+        cell.update(_closed_loop_pair(engines, k, short, n_steps=80,
+                                      seed=int(occ * 100)))
+        cell["p99_ratio"] = (cell["paged"]["p99_step_ms"]
+                             / max(cell["dense"]["p99_step_ms"], 1e-9))
+        cell["throughput_ratio"] = (cell["paged"]["throughput_rps"]
+                                    / max(cell["dense"]["throughput_rps"], 1e-9))
+        payload["occupancy"].append(cell)
+        rows.append((
+            f"paged_occ{int(occ * 100)}",
+            cell["paged"]["p99_step_ms"] * 1000.0,
+            f"p99_ratio={cell['p99_ratio']:.3f} "
+            f"thr_ratio={cell['throughput_ratio']:.2f} "
+            f"dense_p99={cell['dense']['p99_step_ms']:.2f}ms "
+            f"paged_p99={cell['paged']['p99_step_ms']:.2f}ms"))
+
+    # Mixed-length load: short-heavy mix whose live contexts (≤256 tokens)
+    # sit well under the provisioned 1024-token capacity — the paper's
+    # dynamic-workload regime (slots sized for the worst case, traffic mostly
+    # short). Dense pays capacity per step regardless; paged pays the mix.
+    def mixed(rng):
+        return int(rng.choice((8, 16, 32, 128), p=(0.4, 0.3, 0.2, 0.1)))
+
+    payload["mixed_load"] = _closed_loop_pair(engines, PG_BATCH, mixed,
+                                              n_steps=100, seed=7)
+    thr_ratio = (payload["mixed_load"]["paged"]["throughput_rps"]
+                 / max(payload["mixed_load"]["dense"]["throughput_rps"], 1e-9))
+    payload["mixed_load"]["throughput_ratio"] = thr_ratio
+    rows.append(("paged_mixed_thr", thr_ratio * 1e6,
+                 f"paged/dense={thr_ratio:.2f}x "
+                 f"({payload['mixed_load']['paged']['throughput_rps']:.1f} vs "
+                 f"{payload['mixed_load']['dense']['throughput_rps']:.1f} rps)"))
+
+    payload["context_scaling"] = _context_scaling_pair(engines, k=4, seed=11)
+    for kv in ("dense", "paged"):
+        pts = payload["context_scaling"][kv]
+        if len(pts) >= 2:
+            lo, hi = pts[0]["mean_step_ms"], pts[-1]["mean_step_ms"]
+            rows.append((f"ctx_scaling_{kv}", hi * 1000.0,
+                         f"step_ms {lo:.2f}->{hi:.2f} over context "
+                         f"{pts[0]['context_tokens']}->"
+                         f"{pts[-1]['context_tokens']}tok"))
+    return rows, payload
+
+
 def run() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     for rate in RATES_RPS:
@@ -78,6 +280,12 @@ def run() -> List[Tuple[str, float, str]]:
         rows.append((f"p99_ratio_r{int(rate)}",
                      (p99["continuous"] - p99["pump"]) * 1000.0,
                      f"continuous/pump={p99['continuous'] / max(p99['pump'], 1e-9):.3f}"))
+
+    paged_rows, payload = paged_vs_dense()
+    rows.extend(paged_rows)
+    os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
     return rows
 
 

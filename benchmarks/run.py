@@ -8,7 +8,8 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   fig6_profile_fit      linear-regression profile R² (Fig. 6)
   fig7_beta_sweep       β sensitivity, cumulative metrics (Fig. 7/9/10)
   fig8_nonbursty        non-bursty trace comparison (Fig. 8)
-  engine_serving        continuous batching vs pump P99/throughput (DESIGN.md)
+  engine_serving        continuous vs pump + paged vs dense KV cache; writes
+                        reports/BENCH_engine.json (DESIGN.md §Paged KV cache)
   cluster_fabric        replica scaling, routing policy, failure recovery
   profiling             measured vs roofline vs paper-calibrated profile error
   forecaster            LSTM vs baselines MAE/under-rate (Fig. 5 top)

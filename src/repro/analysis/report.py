@@ -1,10 +1,12 @@
-"""Generate the §Dry-run, §Roofline, §Profiles, and §Cluster-fabric markdown
-tables in EXPERIMENTS.md from reports/dryrun/*.json, reports/profiles/*.json,
-and reports/cluster/*.json (the latter written by
-``benchmarks/bench_cluster.py``).
+"""Generate the §Dry-run, §Roofline, §Profiles, §Cluster-fabric, and
+§Paged-KV markdown tables in EXPERIMENTS.md from reports/dryrun/*.json,
+reports/profiles/*.json, reports/cluster/*.json, and
+reports/BENCH_engine.json (the latter two written by
+``benchmarks/bench_cluster.py`` / ``benchmarks/bench_engine.py``).
 
 Usage: PYTHONPATH=src python -m repro.analysis.report [--dir reports/dryrun]
            [--profiles-dir reports/profiles] [--cluster-dir reports/cluster]
+           [--bench-engine reports/BENCH_engine.json]
 """
 from __future__ import annotations
 
@@ -137,6 +139,46 @@ def cluster_failure_table(cluster_dir: str) -> str:
     return "\n".join(out)
 
 
+def paged_engine_tables(bench_path: str):
+    """§Paged KV cache: occupancy cells (P50/P99 step latency + throughput,
+    dense vs paged) and the context-scaling sweep, from the machine-readable
+    BENCH_engine.json the engine benchmark emits (also a CI artifact)."""
+    occ = ["| occupancy | slots | dense p50/p99 ms | paged p50/p99 ms | "
+           "p99 ratio | thr ratio |",
+           "|---|---|---|---|---|---|"]
+    ctx = ["| context tokens | dense step ms | paged step ms |",
+           "|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(occ), "\n".join(ctx)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(occ), "\n".join(ctx)
+    for c in data.get("occupancy", []):
+        d, p = c["dense"], c["paged"]
+        occ.append(f"| {c['occupancy']:.0%} | {c['slots']} | "
+                   f"{d['p50_step_ms']:.1f}/{d['p99_step_ms']:.1f} | "
+                   f"{p['p50_step_ms']:.1f}/{p['p99_step_ms']:.1f} | "
+                   f"**{c['p99_ratio']:.2f}** | {c['throughput_ratio']:.2f} |")
+    ml = data.get("mixed_load", {})
+    if "dense" in ml and "paged" in ml:
+        occ.append(f"| mixed load | {data['config']['max_batch']} | "
+                   f"thr {ml['dense']['throughput_rps']:.1f} rps | "
+                   f"thr {ml['paged']['throughput_rps']:.1f} rps | — | "
+                   f"**{ml['throughput_ratio']:.2f}** |")
+    cs = data.get("context_scaling", {})
+    dense_pts = {r["context_tokens"]: r["mean_step_ms"]
+                 for r in cs.get("dense", [])}
+    paged_pts = {r["context_tokens"]: r["mean_step_ms"]
+                 for r in cs.get("paged", [])}
+    for c in sorted(set(dense_pts) | set(paged_pts)):
+        dv = f"{dense_pts[c]:.1f}" if c in dense_pts else "—"
+        pv = f"{paged_pts[c]:.1f}" if c in paged_pts else "—"
+        ctx.append(f"| {c} | {dv} | {pv} |")
+    return "\n".join(occ), "\n".join(ctx)
+
+
 def inject(md_path: str, marker: str, table: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -158,6 +200,7 @@ def main():
     ap.add_argument("--dir", default="reports/dryrun")
     ap.add_argument("--profiles-dir", default="reports/profiles")
     ap.add_argument("--cluster-dir", default="reports/cluster")
+    ap.add_argument("--bench-engine", default="reports/BENCH_engine.json")
     ap.add_argument("--md", default="EXPERIMENTS.md")
     args = ap.parse_args()
     rows = load(args.dir)
@@ -168,6 +211,9 @@ def main():
            cluster_scaling_table(args.cluster_dir))
     inject(args.md, "CLUSTER_FAILURE_TABLE",
            cluster_failure_table(args.cluster_dir))
+    occ_tbl, ctx_tbl = paged_engine_tables(args.bench_engine)
+    inject(args.md, "PAGED_ENGINE_TABLE", occ_tbl)
+    inject(args.md, "PAGED_CONTEXT_TABLE", ctx_tbl)
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

@@ -10,12 +10,17 @@ An additive bias (B, C) carries slot validity (ring-buffer occupancy and
 sliding-window masks are computed by the caller — they depend on the cache
 discipline, not on the kernel).
 
-Grid: (B, KV, C/BK). Block shapes keep the whole GQA group resident:
+Arbitrary context lengths are accepted: a ragged tail block (C % bk != 0)
+is padded up to the block size and masked through the bias (-1e30 on the
+padding), so callers need no divisibility discipline.
+
+Grid: (B, KV, ceil(C/BK)). Block shapes keep the whole GQA group resident:
 q (G, hd), k/v (BK, hd), bias (BK,) — VMEM ≈ G·hd + 2·BK·hd floats.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +30,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BK = 512
 NEG_INF = -1e30
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """interpret=None auto-detects: compiled on a real TPU backend,
+    interpret mode everywhere else (this container validates on CPU)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
@@ -67,12 +80,19 @@ def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("softcap", "bk", "interpret"))
 def flash_decode_bkhd(q: jax.Array, k: jax.Array, v: jax.Array,
                       bias: jax.Array, *, softcap: float = 0.0,
-                      bk: int = DEFAULT_BK, interpret: bool = True) -> jax.Array:
-    """q: (B, KV, G, hd); k, v: (B, KV, C, hd); bias: (B, C) -> out like q."""
+                      bk: int = DEFAULT_BK,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, KV, G, hd); k, v: (B, KV, C, hd); bias: (B, C) -> out like q.
+
+    C need not divide bk: the ragged tail block is padded and masked here."""
     B, KV, G, hd = q.shape
     C = k.shape[2]
-    assert C % bk == 0, (C, bk)
-    n_k = C // bk
+    pad = (-C) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+    n_k = (C + pad) // bk
     kernel = functools.partial(_decode_kernel, bk=bk, softcap=softcap,
                                n_kv_blocks=n_k)
     return pl.pallas_call(
@@ -91,5 +111,5 @@ def flash_decode_bkhd(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, bias)

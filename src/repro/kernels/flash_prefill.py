@@ -15,12 +15,15 @@ VMEM budget per step (BQ=BK=128, G<=8, hd<=256, fp32 scratch):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_decode import resolve_interpret
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -85,7 +88,7 @@ def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_prefill_bkhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        window: int = 0, softcap: float = 0.0,
                        bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, KV, G, S, hd); k, v: (B, KV, S, hd) -> out like q.
 
     S must be divisible by the block sizes (ops.py pads).
@@ -111,5 +114,5 @@ def flash_prefill_bkhd(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((G, bq), jnp.float32),        # running sum l
             pltpu.VMEM((G, bq, hd), jnp.float32),    # output accumulator
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

@@ -1,9 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles layout transposes between the model's (B, S, H, hd) convention and the
-kernels' (B, KV, G, S, hd) tiling layout, pads sequences/caches to block
-multiples, and selects interpret mode automatically (interpret=True everywhere
-except a real TPU backend — this container validates on CPU).
+kernels' (B, KV, G, S, hd) tiling layout and pads sequences to block
+multiples. Interpret mode is auto-detected inside each kernel (compiled on a
+real TPU backend, interpret everywhere else — this container validates on
+CPU); pass ``interpret=`` explicitly at the kernel level to override.
 """
 from __future__ import annotations
 
@@ -16,10 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_decode as fd
 from repro.kernels import flash_prefill as fp
 from repro.kernels import ssd_scan as ss
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels import paged as pk
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> Tuple[jax.Array, int]:
@@ -46,7 +44,7 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
     kk, _ = _pad_to(kk, 2, bk)
     vk, _ = _pad_to(vk, 2, bk)
     out = fp.flash_prefill_bkhd(qk, kk, vk, window=window, softcap=softcap,
-                                bq=bq, bk=bk, interpret=_interpret())
+                                bq=bq, bk=bk)
     out = out[:, :, :, :S]                                     # drop padding
     return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
 
@@ -67,18 +65,22 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array, *,
 def flash_decode_bkchd(q: jax.Array, k: jax.Array, v: jax.Array,
                        bias: jax.Array, *, softcap: float = 0.0) -> jax.Array:
     """Kernel-native layout: q (B,KV,G,hd); k,v (B,KV,C,hd); bias (B,C)
-    -> (B,KV,G,hd). No relayout copies (cache is stored in this layout)."""
-    B, KV, G, hd = q.shape
+    -> (B,KV,G,hd). No relayout copies (cache is stored in this layout).
+    The kernel itself pads and masks a ragged tail block, so any C works."""
     C = k.shape[2]
     bk = min(fd.DEFAULT_BK, max(8, 1 << (C - 1).bit_length()))
-    kk, _ = _pad_to(k, 2, bk)
-    vk, _ = _pad_to(v, 2, bk)
-    bias_p, padded = _pad_to(bias, 1, bk)
-    if padded:
-        bias_p = bias_p.at[:, C:].set(-1e9)
-    return fd.flash_decode_bkhd(q, kk, vk, bias_p,
-                                softcap=softcap, bk=bk,
-                                interpret=_interpret())
+    return fd.flash_decode_bkhd(q, k, v, bias, softcap=softcap, bk=bk)
+
+
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       tables: jax.Array, lengths: jax.Array, *,
+                       softcap: float = 0.0) -> jax.Array:
+    """Paged decode in kernel-native layout: q (B,KV,G,hd); k/v_pages
+    (KV,P,page_size,hd); tables (B,n_pages) page ids; lengths (B,) live
+    tokens -> (B,KV,G,hd). The page pool IS the stored cache layout, so no
+    gather/relayout copies are paid on the Pallas path."""
+    return pk.paged_flash_decode_bkhd(q, k_pages, v_pages, tables, lengths,
+                                      softcap=softcap)
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
@@ -91,4 +93,4 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     if initial_state is None:
         initial_state = jnp.zeros((b, h, p, n), jnp.float32)
     return ss.ssd_scan_chunked(x, dt, A, B, C, initial_state, chunk=chunk,
-                               interpret=_interpret())
+                               interpret=fd.resolve_interpret(None))

@@ -1,0 +1,9 @@
+"""Paged KV-cache kernels: block-table-indexed attention over a page pool.
+
+The serving engine's paged KV discipline (DESIGN.md §Paged KV cache) stores
+each sequence's cache as a list of fixed-size pages drawn from a shared
+per-replica pool; these kernels consume that layout directly instead of a
+dense per-slot cache.
+"""
+from repro.kernels.paged.decode import (DEFAULT_PAGE_SIZE,  # noqa: F401
+                                        paged_flash_decode_bkhd)

@@ -1,0 +1,139 @@
+"""Paged flash-decoding GQA attention — Pallas TPU kernel over a page pool.
+
+One query token per sequence attends to a KV cache stored as fixed-size
+*pages* in a shared pool ``(KV, P, page_size, hd)``; each sequence owns an
+ordered list of page ids in a block table ``(B, n_pages)``. The kernel
+gathers K/V through the block table with scalar prefetch: the table and the
+per-row live lengths are ``PrefetchScalarGridSpec`` operands, so the
+``index_map`` of the K/V BlockSpecs can address ``pages[tables[b, j]]``
+before the grid step runs — the DMA engine fetches exactly the pages a
+sequence owns, never a dense ``(B, C)`` cache slice.
+
+Two properties make the per-step cost proportional to *live* context rather
+than pool capacity (the whole point of the paged discipline):
+
+  * the grid's page axis is bounded by the *caller's* ``n_pages`` — the
+    engine buckets it to the max live page count of the current batch, not
+    the per-slot capacity;
+  * within the grid, rows skip pages beyond their own length with
+    ``pl.when(j * page_size < length[b])`` (a row that retired or just
+    joined does no attention work for pages it doesn't reach), and the tail
+    page is masked per-position with an iota compare — ragged lengths need
+    no padding discipline from the caller.
+
+Running ``(m, l, acc)`` VMEM scratch implements the online softmax across
+the sequential page axis, exactly like ``flash_decode.py`` (TPU split-K via
+the sequential grid; DESIGN.md). A row with ``length == 0`` runs no compute
+block at all and finalizes to zeros (``l`` is floored), so dead batch slots
+are numerically inert.
+
+Grid: (B, KV, n_pages). VMEM per step ≈ G·hd + 2·page_size·hd floats.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_decode import resolve_interpret
+
+DEFAULT_PAGE_SIZE = 16
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         softcap: float, n_pages: int):
+    b = pl.program_id(0)
+    jp = pl.program_id(2)
+    G, hd = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(jp == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+
+    # live-page bound: rows do no work for pages beyond their own length
+    @pl.when(jp * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, hd)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, ps)
+        s = s / np.sqrt(hd)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        # masked tail: positions of this page beyond the row's length
+        pos = jp * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (G, page_size), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m_prev[:, 0] - m_new)
+        l_ref[...] = (l_ref[...] * scale[:, None]
+                      + jnp.sum(p, axis=-1, keepdims=True))
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # (G, hd)
+        acc_ref[...] = acc_ref[...] * scale[:, None] + pv
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(jp == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)   # length-0 rows finalize to 0
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_decode_bkhd(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, tables: jax.Array,
+                            lengths: jax.Array, *, softcap: float = 0.0,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, KV, G, hd); k/v_pages: (KV, P, page_size, hd);
+    tables: (B, n_pages) int32 page ids; lengths: (B,) int32 live tokens
+    per row -> out like q.
+
+    ``tables[b, j]`` for ``j * page_size >= lengths[b]`` is never read by
+    the compute path but must still be a valid pool index (< P) — the
+    BlockSpec fetch happens regardless of the ``pl.when`` skip. The engine
+    points unowned table entries at the reserved page 0.
+    """
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[2]
+    n_pages = tables.shape[1]
+    assert k_pages.shape[0] == KV and v_pages.shape == k_pages.shape
+    assert lengths.shape == (B,)
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps,
+                               softcap=softcap, n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, t, n: (h, t[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda b, h, j, t, n: (h, t[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max m
+            pltpu.VMEM((G, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)

@@ -51,6 +51,37 @@ def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def ref_paged_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     tables: jax.Array, lengths: jax.Array,
+                     softcap: float = 0.0) -> jax.Array:
+    """Paged one-token GQA decode oracle: gather the pages each row owns
+    into a dense (B, n_pages*page_size) context, mask positions beyond the
+    row's length, and run plain softmax attention.
+
+    q: (B, KV, G, hd); k/v_pages: (KV, P, page_size, hd);
+    tables: (B, n_pages) int32 page ids; lengths: (B,) int32
+    -> (B, KV, G, hd). Rows with length == 0 return zeros (matching the
+    kernel's inert dead-slot semantics)."""
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[2]
+    n_pages = tables.shape[1]
+    kg = jnp.moveaxis(k_pages[:, tables], 1, 0)        # (B,KV,n_pages,ps,hd)
+    vg = jnp.moveaxis(v_pages[:, tables], 1, 0)
+    kg = kg.reshape(B, KV, n_pages * ps, hd).astype(jnp.float32)
+    vg = vg.reshape(B, KV, n_pages * ps, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bkth->bkgt", qf, kg) / np.sqrt(hd)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = jnp.arange(n_pages * ps)[None, :] < lengths[:, None]   # (B, T)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(valid[:, None, None], probs, 0.0)  # len==0: all-NaN -> 0
+    probs = jnp.nan_to_num(probs)
+    out = jnp.einsum("bkgt,bkth->bkgh", probs, vg)
+    return out.astype(q.dtype)
+
+
 def ref_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             C: jax.Array, initial_state: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, jax.Array]:

@@ -1,14 +1,15 @@
 """GQA attention: train/prefill (full-sequence causal, optional sliding window)
-and single-token decode against a (possibly ring-buffered) KV cache.
+and single-token decode against a KV cache — dense ring-buffered per-slot
+caches or the paged pool (``PagedKVCache`` + ``paged_decode_attention``).
 
-Two execution paths:
+Two execution paths throughout:
   * pure-jnp einsum path (always available; oracle for the kernels)
   * Pallas path (``cfg.use_pallas``) via ``repro.kernels.ops``
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -227,3 +228,159 @@ def decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array, k_cache: jax.Array
     out = out.reshape(B, 1, H * hd)
     attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
     return attn, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: pool bookkeeping + decode against block-table pages
+# ---------------------------------------------------------------------------
+
+class PagedKVCache:
+    """Host-side bookkeeping for one replica's shared KV page pool.
+
+    The device arrays (the ``(L, KV, P, page_size, hd)`` pool leaves and the
+    per-slot block table) live in the engine's cache pytree; this object
+    tracks which pool pages are free and which slot owns which pages, so
+    admission can be gated on *memory-true* capacity and retirement returns
+    pages for reuse.
+
+    Page 0 is reserved as the **trash page**: block-table rows of free slots
+    point at it, so decode-step writes from dead batch rows land somewhere
+    harmless instead of corrupting a live sequence's pages. ``alloc`` never
+    hands it out and ``usable_pages`` excludes it.
+
+    Invariants (property-tested in ``tests/test_kernels_paged.py``): every
+    usable page is either free or owned by exactly one slot; ``alloc`` is
+    all-or-nothing; double-``alloc`` on a live slot and double-``free`` of a
+    page are errors, not silent corruption.
+    """
+
+    TRASH_PAGE = 0
+
+    def __init__(self, total_pages: int, page_size: int):
+        assert total_pages >= 2, "need at least one usable page + trash"
+        assert page_size >= 1
+        self.total_pages = total_pages
+        self.page_size = page_size
+        # LIFO free list: recently freed pages are reused first (their pool
+        # rows are warm in cache)
+        self._free: List[int] = list(range(total_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}     # slot -> page ids
+
+    @property
+    def usable_pages(self) -> int:
+        return self.total_pages - 1                # page 0 is the trash page
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of usable pool pages currently owned by live slots."""
+        return self.used_pages / max(self.usable_pages, 1)
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-max(tokens, 0) // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, slot: int, n: int) -> Optional[List[int]]:
+        """Give ``slot`` ownership of ``n`` pages; None if the pool can't
+        satisfy the whole request (all-or-nothing — a partial grant would
+        admit a sequence the pool cannot finish)."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages (double alloc)")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = pages
+        return list(pages)
+
+    def free(self, slot: int) -> List[int]:
+        """Return ``slot``'s pages to the pool; [] if it owns none (retiring
+        a never-admitted slot is a no-op, not an error)."""
+        pages = self._owned.pop(slot, [])
+        for pg in pages:
+            if pg == self.TRASH_PAGE or pg in self._free:
+                raise ValueError(f"double free of page {pg}")
+            self._free.append(pg)
+        return pages
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))
+
+
+def paged_decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, pos: jax.Array, *,
+                           n_pages: int,
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against the paged pool (one layer's pool leaves).
+
+    x: (B, 1, D); k/v_pages: (KV, P, page_size, hd) — the shared pool;
+    page_table: (B, max_pages) int32 page ids per slot; pos: (B,) int32
+    absolute position of the new token. ``n_pages`` is the static live-page
+    bound the caller bucketed the batch to: attention reads only the first
+    ``n_pages`` table columns, so per-step cost is proportional to the live
+    context of the batch, not the pool/slot capacity.
+
+    The new token's K/V is written to page ``page_table[b, pos // ps]`` at
+    offset ``pos % ps`` — free slots' table rows point at the reserved trash
+    page, so their (garbage) writes are harmless. No sliding-window/ring
+    support: the paged discipline allocates capacity for the whole sequence
+    (the engine asserts this at cache init).
+
+    Returns (attn_out (B,1,D), new_k_pages, new_v_pages).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    B = x.shape[0]
+    ps = k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)), KV, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    # scatter the new token into its page (clip keeps long-dead rows inside
+    # the table; their row is all trash-page anyway)
+    page_col = jnp.minimum(pos // ps, max_pages - 1)
+    page = page_table[jnp.arange(B), page_col]               # (B,)
+    off = pos % ps
+    k_pages = k_pages.astype(dt).at[:, page, off].set(
+        k[:, 0].transpose(1, 0, 2))                          # value (KV,B,hd)
+    v_pages = v_pages.astype(dt).at[:, page, off].set(
+        v[:, 0].transpose(1, 0, 2))
+
+    lengths = pos + 1
+    tables = page_table[:, :n_pages]
+    qg = q.reshape(B, KV, H // KV, hd)                       # (B,KV,G,hd)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.paged_flash_decode(qg, k_pages, v_pages, tables, lengths,
+                                      softcap=cfg.attn_logit_softcap)
+    else:
+        kg = jnp.moveaxis(k_pages[:, tables], 1, 0)      # (B,KV,n_pages,ps,hd)
+        vg = jnp.moveaxis(v_pages[:, tables], 1, 0)
+        kg = kg.reshape(B, KV, n_pages * ps, hd)
+        vg = vg.reshape(B, KV, n_pages * ps, hd)
+        scores = jnp.einsum("bkgh,bkth->bkgt", qg, kg,
+                            preferred_element_type=jnp.float32) / np.sqrt(hd)
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        valid = jnp.arange(n_pages * ps)[None, :] < lengths[:, None]
+        scores = jnp.where(valid[:, None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgt,bkth->bkgh", probs.astype(vg.dtype), vg,
+                         preferred_element_type=jnp.float32)
+        out = out.astype(dt)
+    out = out.reshape(B, 1, H * hd)
+    attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    return attn, k_pages, v_pages

@@ -296,6 +296,83 @@ class LM:
         return cache
 
     # ------------------------------------------------------------------
+    # paged KV cache (shared page pool + per-slot block tables)
+    # ------------------------------------------------------------------
+    def supports_paged_cache(self) -> bool:
+        """Paged decode covers the pure-attention KV families. SSM/hybrid
+        carry non-positional state, encoder-decoder adds a cross cache, and
+        sliding windows imply the ring discipline — all stay dense."""
+        cfg = self.cfg
+        return (cfg.family in ("dense", "moe", "vlm")
+                and not cfg.is_encoder_decoder and not cfg.sliding_window)
+
+    def init_paged_cache(self, batch_size: int, pool_pages: int,
+                         page_size: int, max_pages_per_seq: int) -> Dict:
+        """Pool-shaped cache pytree: ``kp``/``vp`` are the shared page pool
+        ``(L, KV, pool_pages, page_size, hd)``; ``pt`` is the per-slot block
+        table (all rows initially the reserved trash page 0); ``pos`` the
+        per-slot next position. Pool bookkeeping (which pages are free/owned)
+        lives host-side in ``repro.models.attention.PagedKVCache``."""
+        cfg = self.cfg
+        assert self.supports_paged_cache(), \
+            f"paged KV cache unsupported for config {cfg.name!r}"
+        dt = self.compute_dtype
+        L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+            "kp": jnp.zeros((L, KV, pool_pages, page_size, hd), dt),
+            "vp": jnp.zeros((L, KV, pool_pages, page_size, hd), dt),
+            "pt": jnp.zeros((batch_size, max_pages_per_seq), jnp.int32),
+        }
+
+    def paged_admit(self, cache: Dict, prefill_cache: Dict,
+                    cur_tok: jax.Array, first_tok: jax.Array,
+                    page_ids: jax.Array, dest_slots: jax.Array
+                    ) -> Tuple[Dict, jax.Array]:
+        """Scatter ``b`` right-sized prefilled rows into the page pool.
+
+        ``prefill_cache`` comes from ``prefill(..., max_len=prompt_len)`` —
+        sized to the actual arriving batch and the prompt alone, never padded
+        to slot capacity. ``page_ids`` (b, max_pages_per_seq) are the full
+        block-table rows the pool manager allocated to each joiner;
+        ``dest_slots`` (b,) the receiving batch slots. Rows of a partially
+        filled admission bucket are dropped by pointing ``dest_slots`` (and
+        their ``page_ids``) out of bounds — jnp scatter ``mode="drop"`` makes
+        the masking free, so one compiled executable serves any joiner count
+        within the bucket. Returns (new cache, new cur_tok)."""
+        kp, vp, pt, pos = cache["kp"], cache["vp"], cache["pt"], cache["pos"]
+        ps = kp.shape[3]
+        k_new, v_new = prefill_cache["k"], prefill_cache["v"]  # (L,b,KV,S,hd)
+        L, b, KV, S, hd = k_new.shape
+        pp = -(-S // ps)                       # pages holding the prompt
+        pad = pp * ps - S
+        if pad:
+            widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+            k_new = jnp.pad(k_new, widths)
+            v_new = jnp.pad(v_new, widths)
+        # (L, KV, b, pp, ps, hd): match the pool gather shape of the scatter
+        k_new = k_new.reshape(L, b, KV, pp, ps, hd).transpose(0, 2, 1, 3, 4, 5)
+        v_new = v_new.reshape(L, b, KV, pp, ps, hd).transpose(0, 2, 1, 3, 4, 5)
+        prompt_pages = page_ids[:, :pp]                       # (b, pp)
+        kp = kp.at[:, :, prompt_pages].set(k_new, mode="drop")
+        vp = vp.at[:, :, prompt_pages].set(v_new, mode="drop")
+        pt = pt.at[dest_slots].set(page_ids, mode="drop")
+        pos = pos.at[dest_slots].set(prefill_cache["pos"], mode="drop")
+        tok = cur_tok.at[dest_slots].set(first_tok, mode="drop")
+        out = dict(cache)
+        out.update(kp=kp, vp=vp, pt=pt, pos=pos)
+        return out, tok
+
+    def paged_retire(self, cache: Dict, slot: int) -> Dict:
+        """Point a retiring slot's block-table row back at the trash page and
+        reset its position, so the batch row decodes harmlessly until the
+        next admission (its freed pages may be re-owned immediately)."""
+        out = dict(cache)
+        out["pt"] = cache["pt"].at[slot].set(0)
+        out["pos"] = cache["pos"].at[slot].set(0)
+        return out
+
+    # ------------------------------------------------------------------
     # prefill: run the full prompt, build the cache
     # ------------------------------------------------------------------
     def prefill(self, params: Dict, batch: Dict, max_len: Optional[int] = None
@@ -468,6 +545,68 @@ class LM:
         else:
             x, new_caches = jax.lax.scan(body, x, (params["layers"], windows,
                                                    layer_caches))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(cfg, params["embed"], x)
+        logits = logits + jnp.asarray(self._vmask, logits.dtype)
+        new_cache = dict(cache)
+        new_cache.update(new_caches)
+        new_cache["pos"] = pos + 1
+        return logits[:, 0], new_cache
+
+    # ------------------------------------------------------------------
+    # one-token decode against the paged pool
+    # ------------------------------------------------------------------
+    def decode_step_paged(self, params: Dict, cache: Dict, tokens: jax.Array,
+                          *, n_pages: int) -> Tuple[jax.Array, Dict]:
+        """tokens: (B,) int32 -> (logits (B, V), updated cache).
+
+        Paged counterpart of ``decode_step``: per-layer attention runs
+        against the shared page pool through each slot's block table, bounded
+        by the static ``n_pages`` (the caller's live-page bucket). Per-layer
+        pool leaves ride through the layer scan exactly like the dense k/v
+        leaves; ``pt``/``pos`` are shared across layers (a token lands at the
+        same page offset in every layer's pool)."""
+        cfg = self.cfg
+        assert self.supports_paged_cache(), cfg.name
+        dt = self.compute_dtype
+        pos = cache["pos"]
+        x = embed(cfg, params["embed"], tokens[:, None], dt)
+        if cfg.rope_theta <= 0:
+            B = tokens.shape[0]
+            half = cfg.d_model // 2
+            inv = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
+            ang = pos[:, None].astype(jnp.float32) * inv[None]
+            pe = jnp.zeros((B, cfg.d_model), jnp.float32)
+            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+            x = x + pe[:, None, :].astype(dt)
+        pt = cache["pt"]
+
+        def body(carry, inp):
+            lp, kp_l, vp_l = inp
+            x_in = carry
+            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+            a, kp_l, vp_l = attn.paged_decode_attention(
+                cfg, lp["attn"], h, kp_l, vp_l, pt, pos, n_pages=n_pages)
+            x_new = x_in + a
+            h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+            else:
+                y = apply_mlp(cfg, lp["ffn"], h2)
+            x_new = x_new + y
+            return x_new, {"kp": kp_l, "vp": vp_l}
+
+        if not cfg.scan_layers:
+            outs = []
+            for i in range(cfg.num_layers):
+                inp = (_layer_slice(params["layers"], i),
+                       cache["kp"][i], cache["vp"][i])
+                x, out = body(x, inp)
+                outs.append(out)
+            new_caches = _stack_layers(outs)
+        else:
+            x, new_caches = jax.lax.scan(
+                body, x, (params["layers"], cache["kp"], cache["vp"]))
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(cfg, params["embed"], x)
         logits = logits + jnp.asarray(self._vmask, logits.dtype)

@@ -142,12 +142,11 @@ class EngineProfiler:
             b = eng.backends[name]
             eng.done.extend(b.drain_slots(time.time()))  # free all slots
             return b
-        from repro.serving.engine import VariantBackend
-        cfg, acc = eng.variant_defs[name]
-        return VariantBackend(name, cfg, acc, max_batch=eng.max_batch,
-                              prompt_len=eng.prompt_len, max_new=eng.max_new,
-                              decode_chunk=eng.decode_chunk,
-                              use_pallas=eng.use_pallas)
+        # throwaway backend built by the engine's own factory, so it carries
+        # the engine's KV discipline (dense ring vs paged pool) — a paged
+        # engine must be profiled under paged admission/decode semantics or
+        # the fitted th(n)/p(n) describe a backend it never runs
+        return eng._make_backend(name)
 
     # ----------------------------------------------------------- measurement
     def _measure_point(self, b, cap: int, rpp: int) -> MeasuredPoint:

@@ -17,6 +17,14 @@ Two execution modes per ``VariantBackend``:
     loop), kept as the baseline that ``benchmarks/bench_engine.py`` measures
     continuous batching against.
 
+Two KV disciplines (``kv_cache=``): ``"dense"`` materializes the per-slot
+``(max_batch, prompt_len + max_new)`` ring cache; ``"paged"`` replaces it
+with a shared per-replica page pool (``PagedVariantBackend``): prefill is
+right-sized to the actual arriving batch, decode attention is bounded by the
+live context's page count instead of capacity, and pages are allocated at
+admission / freed at retirement so admission respects memory-true capacity
+(DESIGN.md §Paged KV cache).
+
 Admission control: the engine keeps a bounded FIFO queue *per variant*
 (backpressure — ``submit`` returns False and counts a rejection when the
 queue is full), so ``backlog(t)`` reports true queue depth to the
@@ -60,17 +68,27 @@ from repro.cluster.placement import Node
 from repro.cluster.replicas import ReplicaFabric
 from repro.cluster.router import ReplicaView, make_router
 from repro.configs.base import ModelConfig
+from repro.models.attention import PagedKVCache
 from repro.models.model import build_model
 from repro.serving.api import Request, summarize_requests
 
-__all__ = ["Request", "VariantBackend", "InProcessServingEngine"]
+__all__ = ["Request", "VariantBackend", "PagedVariantBackend",
+           "InProcessServingEngine"]
 
 # Batch axis of each cache leaf (k/v/conv/ssd carry a leading layer axis).
 _CACHE_BATCH_AXIS = {"pos": 0, "k": 1, "v": 1, "conv": 1, "ssd": 1, "enc": 0}
 
 
 class VariantBackend:
-    """One loaded model variant: params + jitted prefill/decode + slot state."""
+    """One loaded model variant: params + jitted prefill/decode + slot state.
+
+    The KV discipline is pluggable: this base class materializes the dense
+    per-slot ring cache at ``(max_batch, prompt_len + max_new)``;
+    ``PagedVariantBackend`` replaces it with the shared page pool (see
+    DESIGN.md §Paged KV cache). The slot lifecycle, queueing, and retirement
+    logic are shared — subclasses override ``_build_state`` (cache + jit
+    warm-up, measured as readiness), ``_run_decode_chunk``, admission, and
+    the ``_retire_slot`` hook."""
 
     def __init__(self, name: str, cfg: ModelConfig, accuracy: float,
                  max_batch: int = 8, prompt_len: int = 32, max_new: int = 16,
@@ -90,47 +108,71 @@ class VariantBackend:
         self.slot_cap: Optional[int] = None   # units -> concurrency (enforced
         # only when the engine runs with enforce_units; see free_slots)
         self.slow_factor = 1.0   # straggler fault: decode stretched by this
-        t0 = time.time()
-        self.params = self.model.init(jax.random.PRNGKey(seed))
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, max_len=prompt_len + max_new))
-        self._decode = jax.jit(self.model.decode_step)
-        self._decode_chunk = jax.jit(self._decode_chunk_fn)
-        self._admit_merge = jax.jit(self._admit_merge_fn)
-
-        # --- persistent slot state (continuous batching) ---
-        toks = jnp.zeros((max_batch, prompt_len), jnp.int32)
-        logits, cache = self._prefill(self.params, {"tokens": toks})
-        self.cache = cache                               # resident batch cache
-        self.cur_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_remaining = np.zeros((max_batch,), np.int64)
         self.slot_tokens: List[List[int]] = [[] for _ in range(max_batch)]
-
-        # warm-up compile of every jitted entry point (part of readiness)
-        self._decode(self.params, cache, jnp.zeros((max_batch,), jnp.int32))
-        self._decode_chunk(self.params, self.cache, self.cur_tok)
-        self._admit_merge(
-            self.cache, cache, self.cur_tok, self.cur_tok,
-            jnp.zeros((max_batch,), jnp.int32),
-            jnp.zeros((max_batch,), bool))
-        self.slot_req = [None] * max_batch               # warm-up left no state
+        t0 = time.time()
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self._build_state()                  # cache + jit warm-up = readiness
         self.readiness_s = time.time() - t0
 
-    # ------------------------------------------------------------- jitted fns
-    def _decode_chunk_fn(self, params, cache, tok):
-        """``decode_chunk`` greedy decode steps as one traced scan.
+    def _build_state(self) -> None:
+        """Dense KV discipline: one resident ``(max_batch, C)`` cache.
 
-        Returns (next feed token (B,), cache, emitted tokens (chunk, B))."""
+        The resident cache is **donated** to every jitted consumer (decode,
+        decode chunk, admission merge): the engine always replaces
+        ``self.cache`` with the call's result, so XLA may update the KV
+        buffers in place instead of copying the whole capacity-sized cache
+        every step (§Paged KV cache perf notes — the copy, not the math, was
+        the dominant per-step cost at large C on CPU)."""
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(
+                p, b, max_len=self.prompt_len + self.max_new))
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._decode_chunk = jax.jit(self._decode_chunk_fn,
+                                     donate_argnums=(1,))
+        self._admit_merge = jax.jit(self._admit_merge_fn, donate_argnums=(0,))
+
+        # --- persistent slot state (continuous batching) ---
+        # Warm-up compiles every jitted entry point (part of readiness).
+        # Donated caches are chained call-to-call — a donated buffer is dead
+        # after the call, so each step feeds the previous step's output.
+        toks = jnp.zeros((self.max_batch, self.prompt_len), jnp.int32)
+        zeros_tok = jnp.zeros((self.max_batch,), jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        self.cur_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        _, cache = self._decode(self.params, cache, zeros_tok)
+        _, cache, _ = self._decode_chunk(self.params, cache, self.cur_tok)
+        _, fresh = self._prefill(self.params, {"tokens": toks})
+        self.cache, self.cur_tok = self._admit_merge(
+            cache, fresh, self.cur_tok, self.cur_tok,
+            jnp.zeros((self.max_batch,), jnp.int32),
+            jnp.zeros((self.max_batch,), bool))
+        self.slot_req = [None] * self.max_batch          # warm-up left no state
+
+    # ------------------------------------------------------------- jitted fns
+    def _chunk_scan(self, cache, tok, step_fn):
+        """``decode_chunk`` greedy steps of ``step_fn(cache, tok)`` as one
+        traced scan. Returns (next feed token (B,), cache, emitted tokens
+        (chunk, B)). A chunk of 1 skips the scan: the scan carry
+        double-buffers the whole cache per iteration, which donation cannot
+        elide."""
         def body(carry, _):
             t, c = carry
-            logits, c = self.model.decode_step(params, c, t)
+            logits, c = step_fn(c, t)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return (nxt, c), nxt
 
+        if self.decode_chunk == 1:
+            (tok, cache), toks = body((tok, cache), None)
+            return tok, cache, toks[None]
         (tok, cache), toks = jax.lax.scan(
             body, (tok, cache), None, length=self.decode_chunk)
         return tok, cache, toks
+
+    def _decode_chunk_fn(self, params, cache, tok):
+        return self._chunk_scan(
+            cache, tok, lambda c, t: self.model.decode_step(params, c, t))
 
     @staticmethod
     def _admit_merge_fn(cache, new_cache, cur_tok, new_tok, src, mask):
@@ -184,49 +226,58 @@ class VariantBackend:
     def active_slots(self) -> int:
         return sum(1 for r in self.slot_req if r is not None)
 
-    def admit(self, reqs: List[Request], now: float) -> List[Request]:
-        """Prefill ``reqs`` (≤ free slots) and join them to the batch.
-
-        A request's token budget is ``min(r.max_new, self.max_new)`` — the
-        KV ring buffer is provisioned for prompt_len + max_new tokens, so
-        longer asks are truncated (``r.output`` carries the served length;
-        the request object itself is never mutated). Requests whose budget
-        is 1 complete at admission (their token is the prefill argmax).
-        Returns requests finished here."""
-        free = self.free_slots
-        assert len(reqs) <= len(free)
-        if not reqs:
-            return []
+    def _admit_prefill(self, reqs: List[Request], rows: int):
+        """Shared admission front half: stamp service start (everything
+        before is queue wait), build the (rows, prompt_len) prompt matrix,
+        prefill, take the first greedy token. Returns (first tokens (rows,)
+        device, same as np, prefill cache)."""
         t_service = time.time()
         for r in reqs:                   # service (= prefill + decode) begins
-            r.service_start = t_service  # here; everything before is queue wait
-        n = len(reqs)
-        prompts = np.zeros((self.max_batch, self.prompt_len), np.int64)
+            r.service_start = t_service
+        prompts = np.zeros((rows, self.prompt_len), np.int64)
         for j, r in enumerate(reqs):
             prompts[j, :len(r.tokens)] = r.tokens[:self.prompt_len]
         logits, new_cache = self._prefill(self.params,
                                           {"tokens": jnp.asarray(prompts)})
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, np.asarray(first), new_cache
+
+    def _budget(self, r: Request) -> int:
+        """A request's token budget is ``min(r.max_new, self.max_new)`` —
+        the cache is provisioned for prompt_len + max_new tokens, so longer
+        asks are truncated (``r.output`` carries the served length; the
+        request object itself is never mutated)."""
+        return min(r.max_new, self.max_new)
+
+    def _bind_slot(self, r: Request, slot: int, tok0: int) -> None:
+        self.slot_req[slot] = r
+        self.slot_remaining[slot] = self._budget(r) - 1
+        self.slot_tokens[slot] = [tok0]
+
+    def admit(self, reqs: List[Request], now: float) -> List[Request]:
+        """Prefill ``reqs`` (≤ free slots) and join them to the batch.
+        Requests whose budget is 1 complete at admission (their token is
+        the prefill argmax). Returns requests finished here."""
+        free = self.free_slots
+        assert len(reqs) <= len(free)
+        if not reqs:
+            return []
+        first, first_np, new_cache = self._admit_prefill(reqs, self.max_batch)
         src = np.zeros((self.max_batch,), np.int32)
         mask = np.zeros((self.max_batch,), bool)
-        for j, slot in enumerate(free[:n]):
-            src[slot], mask[slot] = j, True
-        self.cache, self.cur_tok = self._admit_merge(
-            self.cache, new_cache, self.cur_tok, first,
-            jnp.asarray(src), jnp.asarray(mask))
-        first_np = np.asarray(first)
         finished = []
-        for j, slot in enumerate(free[:n]):
-            r = reqs[j]
+        for j, r in enumerate(reqs):
+            slot = free[j]
+            src[slot], mask[slot] = j, True
             tok0 = int(first_np[j])
-            budget = min(r.max_new, self.max_new)
-            if budget <= 1:
+            if self._budget(r) <= 1:
                 self._finish(r, [tok0], now)
                 finished.append(r)
                 continue
-            self.slot_req[slot] = r
-            self.slot_remaining[slot] = budget - 1
-            self.slot_tokens[slot] = [tok0]
+            self._bind_slot(r, slot, tok0)
+        self.cache, self.cur_tok = self._admit_merge(
+            self.cache, new_cache, self.cur_tok, first,
+            jnp.asarray(src), jnp.asarray(mask))
         return finished
 
     def decode_step_batch(self, now: float) -> List[Request]:
@@ -234,9 +285,7 @@ class VariantBackend:
         if self.active_slots == 0:
             return []
         t0 = time.time()
-        self.cur_tok, self.cache, toks = self._decode_chunk(
-            self.params, self.cache, self.cur_tok)
-        toks = np.asarray(toks)                          # (chunk, B)
+        toks = self._run_decode_chunk()                  # (chunk, B)
         if self.slow_factor > 1.0:
             # injected straggler: effective chunk time scales by slow_factor
             time.sleep((time.time() - t0) * (self.slow_factor - 1.0))
@@ -252,7 +301,18 @@ class VariantBackend:
                 finished.append(r)
                 self.slot_req[slot] = None
                 self.slot_tokens[slot] = []
+                self._retire_slot(slot)
         return finished
+
+    def _run_decode_chunk(self) -> np.ndarray:
+        self.cur_tok, self.cache, toks = self._decode_chunk(
+            self.params, self.cache, self.cur_tok)
+        return np.asarray(toks)
+
+    def _retire_slot(self, slot: int) -> None:
+        """Hook called when a slot's request completes (paged backends free
+        the slot's pool pages here); the dense cache needs no cleanup —
+        stale entries are masked by the validity bias."""
 
     def _finish(self, r: Request, tokens: List[int], now: float) -> None:
         r.output = np.asarray(tokens[:min(r.max_new, self.max_new)], np.int64)
@@ -271,6 +331,173 @@ class VariantBackend:
         return done
 
 
+def _bucket_ladder(lo: int, hi: int) -> List[int]:
+    """Doubling ladder of static sizes in [lo, hi], always ending at hi —
+    the compile-once buckets for right-sized prefill batches and live-page
+    bounds (log₂ many executables instead of one per dynamic size)."""
+    sizes = []
+    n = max(1, lo)
+    while n < hi:
+        sizes.append(n)
+        n *= 2
+    sizes.append(hi)
+    return sizes
+
+
+class PagedVariantBackend(VariantBackend):
+    """``VariantBackend`` with a paged KV pool instead of the dense ring.
+
+    Three cost levers over the dense discipline (DESIGN.md §Paged KV cache):
+
+      * **Right-sized prefill** — admission prefills a batch bucketed to the
+        actual number of joiners (1, 2, 4, …), never padded to ``max_batch``,
+        and only to ``prompt_len`` capacity (decode tokens live in pages, so
+        the prefill cache never over-allocates for them).
+      * **Length-aware decode** — each decode chunk runs at the smallest
+        live-page bucket covering the longest live sequence; attention cost
+        is proportional to live context, not ``prompt_len + max_new``
+        capacity. With ``use_pallas`` the ``paged_flash_decode`` kernel
+        additionally skips pages per row.
+      * **Memory-true capacity** — pages are allocated at admission (whole
+        sequence budget, all-or-nothing) and freed at retirement;
+        ``free_slots`` admits only what the pool can hold, so
+        ``enforce_units`` and the profiler observe real memory capacity.
+    """
+
+    def __init__(self, name: str, cfg: ModelConfig, accuracy: float,
+                 page_size: int = 16, pool_pages: Optional[int] = None,
+                 **kw):
+        self.page_size = page_size
+        self._pool_pages_arg = pool_pages
+        super().__init__(name, cfg, accuracy, **kw)
+
+    def _build_state(self) -> None:
+        model, ps = self.model, self.page_size
+        # pages covering one slot's whole budget (prompt + decode tokens)
+        self.pages_per_slot = -(-(self.prompt_len + self.max_new) // ps)
+        pool_pages = self._pool_pages_arg or (
+            self.max_batch * self.pages_per_slot + 1)   # +1: trash page 0
+        self.pool = PagedKVCache(pool_pages, ps)
+        self.cache = model.init_paged_cache(
+            self.max_batch, pool_pages, ps, self.pages_per_slot)
+        self.cur_tok = jnp.zeros((self.max_batch,), jnp.int32)
+        # host mirror of cache["pos"] (the device advances every row by
+        # exactly `decode_chunk` per chunk) — picks the live-page bucket
+        self.slot_pos = np.zeros((self.max_batch,), np.int64)
+
+        self.batch_buckets = _bucket_ladder(1, self.max_batch)
+        first_pages = self.pool.pages_needed(self.prompt_len + self.decode_chunk)
+        self.page_buckets = _bucket_ladder(first_pages, self.pages_per_slot)
+
+        # The pool is donated to the admission scatter and the decode chunk
+        # (the engine always replaces ``self.cache`` with the result), so
+        # page writes happen in place — a paged cache that copied the whole
+        # pool per touch would scale with capacity again
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=self.prompt_len))
+        self._paged_admit = jax.jit(model.paged_admit, donate_argnums=(0,))
+        self._decode_chunk_p = jax.jit(self._paged_chunk_fn,
+                                       static_argnums=(3,),
+                                       donate_argnums=(1,))
+
+        # warm-up every (batch bucket, page bucket) executable — all are
+        # part of this backend's measured readiness rt_m (donated caches are
+        # chained call-to-call; see the dense warm-up)
+        for bb in self.batch_buckets:
+            toks = jnp.zeros((bb, self.prompt_len), jnp.int32)
+            logits, pref = self._prefill(self.params, {"tokens": toks})
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.cache, self.cur_tok = self._paged_admit(
+                self.cache, pref, self.cur_tok, first,
+                jnp.full((bb, self.pages_per_slot), self.pool.total_pages,
+                         jnp.int32),                     # OOB page ids: drop
+                jnp.full((bb,), self.max_batch, jnp.int32))  # OOB slots: drop
+        for nb in self.page_buckets:
+            self.cur_tok, self.cache, _ = self._decode_chunk_p(
+                self.params, self.cache, self.cur_tok, nb)
+
+    # ------------------------------------------------------------- jitted fns
+    def _paged_chunk_fn(self, params, cache, tok, n_pages: int):
+        """``decode_chunk`` paged decode steps as one traced scan at the
+        static live-page bucket ``n_pages`` (shares ``_chunk_scan`` with the
+        dense path)."""
+        return self._chunk_scan(
+            cache, tok,
+            lambda c, t: self.model.decode_step_paged(params, c, t,
+                                                      n_pages=n_pages))
+
+    # ------------------------------------------------- continuous-batch path
+    @property
+    def free_slots(self) -> List[int]:
+        """Slots open for admission = free batch rows ∩ slot_cap (see base)
+        ∩ what the page pool can actually hold — memory-true capacity."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if self.slot_cap is not None:
+            allow = min(self.slot_cap, self.max_batch) - self.active_slots
+            free = free[:max(allow, 0)]
+        return free[:self.pool.free_pages // self.pages_per_slot]
+
+    @property
+    def kv_pool_occupancy(self) -> float:
+        return self.pool.occupancy
+
+    def admit(self, reqs: List[Request], now: float) -> List[Request]:
+        """Right-sized admission: prefill only the actual joiners (bucketed),
+        allocate each a full page budget, scatter the prefilled KV into its
+        pages. Shared stamping/budget semantics live in the base helpers."""
+        free = self.free_slots
+        assert len(reqs) <= len(free)
+        if not reqs:
+            return []
+        bb = next(b for b in self.batch_buckets if b >= len(reqs))
+        first, first_np, pref = self._admit_prefill(reqs, bb)
+        # OOB defaults: rows not joining a slot are dropped by the scatter
+        page_ids = np.full((bb, self.pages_per_slot), self.pool.total_pages,
+                           np.int32)
+        dest = np.full((bb,), self.max_batch, np.int32)
+        finished = []
+        for j, r in enumerate(reqs):
+            slot = free[j]
+            tok0 = int(first_np[j])
+            if self._budget(r) <= 1:     # completes at admission: no pages
+                self._finish(r, [tok0], now)
+                finished.append(r)
+                continue
+            pages = self.pool.alloc(slot, self.pages_per_slot)
+            assert pages is not None     # free_slots gated on the pool
+            page_ids[j] = pages
+            dest[j] = slot
+            self._bind_slot(r, slot, tok0)
+            self.slot_pos[slot] = self.prompt_len
+        self.cache, self.cur_tok = self._paged_admit(
+            self.cache, pref, self.cur_tok, first,
+            jnp.asarray(page_ids), jnp.asarray(dest))
+        return finished
+
+    def _run_decode_chunk(self) -> np.ndarray:
+        live = [self.slot_pos[s] for s, r in enumerate(self.slot_req)
+                if r is not None]
+        need = self.pool.pages_needed(int(max(live)) + self.decode_chunk)
+        need = min(need, self.pages_per_slot)
+        nb = next(b for b in self.page_buckets if b >= need)
+        self.cur_tok, self.cache, toks = self._decode_chunk_p(
+            self.params, self.cache, self.cur_tok, nb)
+        self.slot_pos += self.decode_chunk   # device advanced every row
+        return np.asarray(toks)
+
+    def _retire_slot(self, slot: int) -> None:
+        """Free the slot's pages and point its table row back at the trash
+        page so the dead batch row keeps decoding harmlessly."""
+        self.pool.free(slot)
+        self.cache = self.model.paged_retire(self.cache, slot)
+        self.slot_pos[slot] = 0
+
+    # -------------------------------------------------------- pump-mode path
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        raise NotImplementedError(
+            "paged KV backends serve in continuous mode only")
+
+
 class InProcessServingEngine:
     """``ServingAPI`` on real models (continuous batching or legacy pump).
 
@@ -286,8 +513,13 @@ class InProcessServingEngine:
                  decode_chunk: int = 4, queue_cap: int = 256,
                  use_pallas: bool = False, enforce_units: bool = False,
                  nodes: Optional[Sequence[Node]] = None,
-                 placement="first-fit", router="p2c", replica_size: int = 1):
+                 placement="first-fit", router="p2c", replica_size: int = 1,
+                 kv_cache: str = "dense", kv_page_size: int = 16,
+                 kv_pool_pages: Optional[int] = None):
         assert mode in ("continuous", "pump"), mode
+        assert kv_cache in ("dense", "paged"), kv_cache
+        assert kv_cache == "dense" or mode == "continuous", \
+            "paged KV backends serve in continuous mode only"
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
         self.prompt_len = prompt_len
@@ -296,6 +528,12 @@ class InProcessServingEngine:
         self.decode_chunk = decode_chunk
         self.queue_cap = queue_cap
         self.use_pallas = use_pallas
+        # KV discipline of every backend this engine creates: "dense" is the
+        # per-slot ring cache; "paged" the shared page pool (page_size tokens
+        # per page, pool sized kv_pool_pages or full slot parity by default)
+        self.kv_cache = kv_cache
+        self.kv_page_size = kv_page_size
+        self.kv_pool_pages = kv_pool_pages
         # enforce_units: an allocation of n units caps the variant at n
         # concurrent slots — the same units -> concurrency mapping the
         # profiling subsystem measures th(n) under, so measured profiles
@@ -322,6 +560,17 @@ class InProcessServingEngine:
                                         rt_fn=lambda m: 0.0)
             self.router = make_router(router)
 
+    def _make_backend(self, variant: str) -> VariantBackend:
+        cfg, acc = self.variant_defs[variant]
+        kw = dict(max_batch=self.max_batch, prompt_len=self.prompt_len,
+                  max_new=self.max_new, decode_chunk=self.decode_chunk,
+                  use_pallas=self.use_pallas)
+        if self.kv_cache == "paged":
+            return PagedVariantBackend(variant, cfg, acc,
+                                       page_size=self.kv_page_size,
+                                       pool_pages=self.kv_pool_pages, **kw)
+        return VariantBackend(variant, cfg, acc, **kw)
+
     # ------------------------------------------------------------ ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
         target = {m: n for m, n in units.items() if n > 0}
@@ -330,12 +579,7 @@ class InProcessServingEngine:
             return
         for m, n in target.items():
             if m not in self.backends:
-                cfg, acc = self.variant_defs[m]
-                self.backends[m] = VariantBackend(
-                    m, cfg, acc, max_batch=self.max_batch,
-                    prompt_len=self.prompt_len, max_new=self.max_new,
-                    decode_chunk=self.decode_chunk,
-                    use_pallas=self.use_pallas)
+                self.backends[m] = self._make_backend(m)
                 self.queues.setdefault(m, deque())
             self.backends[m].units = n
             self.backends[m].slot_cap = n if self.enforce_units else None
@@ -357,12 +601,7 @@ class InProcessServingEngine:
         rt_m), surplus replicas drain their slots and requeue waiters."""
         tr = self.fabric.apply(t, target)
         for rep in tr.created:
-            cfg, acc = self.variant_defs[rep.variant]
-            b = VariantBackend(rep.variant, cfg, acc, max_batch=self.max_batch,
-                               prompt_len=self.prompt_len,
-                               max_new=self.max_new,
-                               decode_chunk=self.decode_chunk,
-                               use_pallas=self.use_pallas)
+            b = self._make_backend(rep.variant)
             b.units = rep.units
             b.slot_cap = min(rep.units, self.max_batch) \
                 if self.enforce_units else None
@@ -418,6 +657,19 @@ class InProcessServingEngine:
 
     def in_flight(self) -> int:
         return sum(b.active_slots for b in self.backends.values())
+
+    def kv_pool_stats(self) -> Optional[Dict]:
+        """Aggregate page-pool usage across paged backends (None when the
+        engine runs dense KV caches) — the memory-true capacity gauge that
+        admission already enforces per backend via ``free_slots``."""
+        pools = [b.pool for b in self.backends.values()
+                 if isinstance(b, PagedVariantBackend)]
+        if not pools:
+            return None
+        used = sum(p.used_pages for p in pools)
+        usable = sum(p.usable_pages for p in pools)
+        return {"used_pages": used, "usable_pages": usable,
+                "occupancy": used / max(usable, 1)}
 
     # ----------------------------------------------------------------- faults
     def inject_fault(self, now: float, event: FaultEvent) -> None:
@@ -584,4 +836,7 @@ class InProcessServingEngine:
             # summarizing mid-run or after an allocation emptied the cluster
             out["pending"] = int(sum(len(q) for q in self.queues.values())
                                  + self.in_flight())
+            pool = self.kv_pool_stats()
+            if pool is not None:
+                out["kv_pool_occupancy"] = pool["occupancy"]
         return out

@@ -35,6 +35,36 @@ def test_flash_decode_matches_oracle(B, C, H, KV, hd, dtype):
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
+def test_flash_decode_ragged_tail_block():
+    """C % bk != 0 is handled inside the kernel wrapper (pad-and-mask tail
+    block), so arbitrary context lengths work with any block size."""
+    from repro.kernels import flash_decode as fd
+    B, C, H, KV, hd = 2, 100, 4, 2, 32
+    G = H // KV
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = _rand(ks[0], (B, KV, G, hd), jnp.float32)
+    k = _rand(ks[1], (B, KV, C, hd), jnp.float32)
+    v = _rand(ks[2], (B, KV, C, hd), jnp.float32)
+    bias = jnp.where(jax.random.bernoulli(ks[3], 0.8, (B, C)), 0.0, -1e9)
+    for bk in (32, 64, 512):              # 100 % bk != 0 for each
+        out = fd.flash_decode_bkhd(q, k, v, bias, bk=bk)
+        want = ref.ref_flash_decode(
+            q.reshape(B, 1, H, hd), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), bias)
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(B, 1, H, hd), np.asarray(want),
+            atol=1e-4, rtol=1e-4)
+
+
+def test_interpret_mode_auto_detected():
+    """interpret=None resolves from the backend (interpret off-TPU) — the
+    kernels are callable with no explicit interpret flag anywhere."""
+    from repro.kernels.flash_decode import resolve_interpret
+    assert resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
 def test_flash_decode_respects_bias_mask():
     """Masked cache slots must not affect the output: compare against shrunken cache."""
     ks = jax.random.split(jax.random.PRNGKey(1), 3)

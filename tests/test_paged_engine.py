@@ -1,0 +1,182 @@
+"""Paged KV-cache serving engine: output parity, pool lifecycle, capacity.
+
+Covers the DESIGN.md §Paged KV cache engine contract:
+  * paged continuous batching emits the same greedy tokens as the dense
+    discipline (same jitted model, different cache layout),
+  * right-sized prefill admits without padding the batch to max_batch,
+  * pages allocated at admission are freed at retirement (no leak across a
+    full workload, including drain-on-variant-switch),
+  * a small pool gates admission to memory-true capacity — requests queue
+    rather than over-commit, and everything still completes,
+  * pool occupancy is surfaced through summarize()/kv_pool_stats().
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.serving.api import Request
+from repro.serving.engine import InProcessServingEngine, PagedVariantBackend
+
+MAX_NEW = 6
+
+
+def _variants(n=1):
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=128)
+    out = {"small": (base.replace(num_layers=2, name="small"), 70.0)}
+    if n > 1:
+        out["big"] = (base.replace(num_layers=3, name="big"), 75.0)
+    return out
+
+
+def _reqs(n, rng, max_new=MAX_NEW, prompt_len=8):
+    return [Request(rid=i, tokens=rng.integers(0, 128, prompt_len),
+                    max_new=max_new, arrival=time.time()) for i in range(n)]
+
+
+def _engine(kv_cache="paged", **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_new", MAX_NEW)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("kv_page_size", 4)
+    return InProcessServingEngine(_variants(), kv_cache=kv_cache, **kw)
+
+
+def test_paged_matches_dense_outputs():
+    """Same prompts -> same greedy tokens under both KV disciplines."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 128, 8) for _ in range(5)]
+    outs = {}
+    for kv in ("dense", "paged"):
+        eng = _engine(kv_cache=kv)
+        eng.apply_allocation(0.0, {"small": 1})
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=p, max_new=MAX_NEW,
+                               arrival=time.time()), "small")
+        eng.drain(0.0)
+        assert len(eng.done) == len(prompts)
+        outs[kv] = {r.rid: r.output for r in eng.done}
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(outs["dense"][i], outs["paged"][i])
+
+
+def test_paged_pallas_matches_dense_outputs():
+    """The Pallas paged_flash_decode path agrees with the jnp dense path
+    end-to-end (interpret mode on CPU)."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 128, 8) for _ in range(2)]
+    outs = {}
+    for kv, pallas in (("dense", False), ("paged", True)):
+        eng = _engine(kv_cache=kv, use_pallas=pallas, max_new=4)
+        eng.apply_allocation(0.0, {"small": 1})
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=p, max_new=4,
+                               arrival=time.time()), "small")
+        eng.drain(0.0)
+        outs[kv] = {r.rid: r.output for r in eng.done}
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(outs["dense"][i], outs["paged"][i])
+
+
+def test_pages_freed_at_retirement_no_leak():
+    eng = _engine()
+    eng.apply_allocation(0.0, {"small": 1})
+    b = eng.backends["small"]
+    assert isinstance(b, PagedVariantBackend)
+    rng = np.random.default_rng(3)
+    for r in _reqs(7, rng):
+        assert eng.submit(r, "small")
+    peak = 0
+    for _ in range(200):
+        eng.step(0.0)
+        used = b.pool.used_pages
+        assert used <= b.pool.usable_pages
+        # live slots and owned pages agree at every tick
+        assert used == b.active_slots * b.pages_per_slot
+        peak = max(peak, used)
+        if len(eng.done) == 7:
+            break
+    assert len(eng.done) == 7
+    assert peak > 0                       # the pool actually carried load
+    assert b.pool.used_pages == 0         # every page returned
+    assert b.pool.free_pages == b.pool.usable_pages
+
+
+def test_small_pool_gates_admission_to_memory_capacity():
+    """A pool holding one sequence admits one slot at a time even though the
+    batch has two — memory-true capacity — and still serves everyone."""
+    pps = -(-(8 + MAX_NEW) // 4)          # pages_per_slot at these params
+    eng2 = _engine(kv_pool_pages=pps + 1)  # one sequence + the trash page
+    eng2.apply_allocation(0.0, {"small": 1})
+    b2 = eng2.backends["small"]
+    assert b2.pages_per_slot == pps
+    rng = np.random.default_rng(4)
+    for r in _reqs(4, rng):
+        assert eng2.submit(r, "small")
+    max_active = 0
+    for _ in range(400):
+        eng2.step(0.0)
+        assert b2.active_slots <= 1       # page-gated below the slot count
+        max_active = max(max_active, b2.active_slots)
+        if len(eng2.done) == 4:
+            break
+    assert len(eng2.done) == 4
+    assert max_active == 1
+    assert b2.pool.used_pages == 0
+
+
+def test_occupancy_surfaced_mid_flight():
+    eng = _engine()
+    eng.apply_allocation(0.0, {"small": 1})
+    rng = np.random.default_rng(5)
+    for r in _reqs(2, rng, max_new=MAX_NEW):
+        eng.submit(r, "small")
+    eng.step(0.0)                         # both admitted, still decoding
+    stats = eng.kv_pool_stats()
+    b = eng.backends["small"]
+    assert stats is not None
+    assert stats["used_pages"] == 2 * b.pages_per_slot
+    assert 0.0 < stats["occupancy"] <= 1.0
+    s = eng.summarize(1e9, 70.0)
+    if s:                                 # some requests may have finished
+        assert "kv_pool_occupancy" in s
+    eng.drain(0.0)
+    assert eng.kv_pool_stats()["occupancy"] == 0.0
+    assert eng.summarize(1e9, 70.0)["kv_pool_occupancy"] == 0.0
+    # dense engines report no pool
+    dense = _engine(kv_cache="dense")
+    dense.apply_allocation(0.0, {"small": 1})
+    assert dense.kv_pool_stats() is None
+
+
+def test_profiler_builds_paged_backend_on_paged_engine():
+    """EngineProfiler's throwaway backend must carry the engine's KV
+    discipline: profiling a paged engine measures paged admission/decode
+    semantics (memory-true capacity), not the dense ring."""
+    from repro.profiling.measure import EngineProfiler
+    eng = _engine()                       # paged, nothing loaded yet
+    prof = EngineProfiler(eng, points=(1, 2), requests_per_point=4, warmup=1)
+    assert isinstance(prof._backend("small"), PagedVariantBackend)
+    m = prof.profile_variant("small", points=(1, 2), requests_per_point=4)
+    assert m.profile.th_slope > 0 or m.profile.th_intercept > 0
+
+
+def test_variant_switch_drains_paged_slots_and_frees_pages():
+    eng = InProcessServingEngine(_variants(2), max_batch=2, prompt_len=8,
+                                 max_new=MAX_NEW, decode_chunk=2,
+                                 kv_cache="paged", kv_page_size=4)
+    eng.apply_allocation(0.0, {"small": 1})
+    rng = np.random.default_rng(6)
+    for r in _reqs(4, rng):
+        eng.submit(r, "small")
+    eng.step(0.0)                           # 2 in flight on "small", 2 queued
+    b_small = eng.backends["small"]
+    assert eng.in_flight() == 2
+    eng.apply_allocation(1.0, {"big": 1})   # create-then-remove switch
+    assert b_small.pool.used_pages == 0     # drained slots returned pages
+    eng.drain(1.0)
+    assert len(eng.done) == 4
+    assert sum(1 for r in eng.done if r.accuracy == 75.0) == 2
+    assert eng.backends["big"].pool.used_pages == 0
