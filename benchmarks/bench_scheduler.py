@@ -1,0 +1,291 @@
+"""Scheduler-layer benchmark: FIFO vs EDF vs chunked+EDF on the real engine
+(DESIGN.md §Scheduling).
+
+The paper's pain point restated as a workload: **bimodal prompt lengths** —
+short interactive requests (tight SLO) mixed with long-prefill requests
+(loose SLO) — at a FIXED allocation. Under strict FIFO with monolithic
+prefill, every admission stalls the whole backend for a padded
+``(max_batch, prompt_len)`` prefill and long prompts jump ahead of
+tighter-deadline shorts; the controllers then over-provision against the
+resulting P99. EDF fixes the ordering; chunked prefill (right-sized, fused
+with decode) fixes the stall. The acceptance gate (ISSUE 5) is chunked+EDF
+reaching **≥1.1× goodput** and **≤0.8× P99 latency** vs FIFO on this
+workload.
+
+Methodology — **virtual-clock replay**: every policy replays the IDENTICAL
+Poisson arrival schedule / prompt-length mix / SLO assignment through the
+real engine (real jitted prefill/decode, real queues, real scheduling
+decisions), but the engine's injectable ``clock=`` is a virtual clock that
+advances by the **median measured cost of each jitted call** (monolithic
+prefill, fused chunk, decode chunk — calibrated on this host first). Wall
+time would couple the gated ratios to whatever else the CI runner happens
+to be doing; the virtual clock makes the replay deterministic per host
+while latencies still reflect the true relative cost of each tick type.
+The offered rate and the SLOs are likewise derived from the calibrated
+costs (a "second" means the same amount of engine work everywhere).
+
+Results land in the machine-readable ``reports/BENCH_scheduler.json`` (a
+CI artifact) and are rendered into EXPERIMENTS.md by
+``repro.analysis.report``.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only scheduler
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+VOCAB = 128
+# Geometry chosen so the monolithic-prefill stall is structurally large
+# relative to a decode tick on ANY host (the cost RATIO is set by shapes,
+# not machine speed): a padded (8, 512) admission prefill costs ~10-25
+# decode ticks, while a fused chunk costs ~1.5 — that capacity gap, not a
+# tuned rate, is what the gated ratios rest on.
+MAX_BATCH = 8
+PROMPT_LEN = 512          # capacity = the long prompt
+MAX_NEW = 16
+DECODE_CHUNK = 2
+PREFILL_CHUNK = 32
+SHORT_LEN = 16
+LONG_FRAC = 0.25          # 1 in 4 requests drags a long prefill behind it
+# SLOs in decode-tick units (one unit = the calibrated decode-chunk cost):
+# a short request's ideal chunked service is ~1 fused admission tick + 16
+# one-token ticks (~25 units), so 100 units is a realistic interactive
+# deadline with queueing headroom; longs get 6x that
+SHORT_SLO_TICKS = 100.0
+LONG_SLO_TICKS = 600.0
+# offered load: safely inside chunked's measured capacity (its queues stay
+# bounded) — FIFO's open-loop trickle capacity sits far below it at this
+# geometry (each small-cohort admission pays the full padded prefill), so
+# FIFO is structurally overloaded at the same rate
+CHUNKED_HEADROOM = 0.85
+CALIB_REQS = 48
+N_REQUESTS = 120          # arrivals per policy (fixes the sample size)
+POLICIES = ("fifo", "edf", "chunked")
+BENCH_JSON = os.path.join("reports", "BENCH_scheduler.json")
+
+
+class _VClock:
+    """Virtual clock the engine stamps from; the bench advances it by the
+    calibrated cost of each tick."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _variant():
+    from repro.configs import get_config, smoke_variant
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=VOCAB, num_layers=2,
+        name="bench-sched-2L")
+    return {"bench-sched-2L": (base, 70.0)}
+
+
+def _engine(policy: str):
+    from repro.serving.engine import InProcessServingEngine
+    clock = _VClock()
+    eng = InProcessServingEngine(
+        _variant(), max_batch=MAX_BATCH, prompt_len=PROMPT_LEN,
+        max_new=MAX_NEW, decode_chunk=DECODE_CHUNK, queue_cap=100_000,
+        scheduler=policy, prefill_chunk=PREFILL_CHUNK, clock=clock)
+    eng.apply_allocation(0.0, {"bench-sched-2L": 1})   # fixed allocation
+    return eng, clock
+
+
+def _median_ms(fn, reps: int = 15) -> float:
+    fn()                                   # ensure warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1000.0)
+    return float(np.median(ts))
+
+
+def _calibrate_costs(fifo_eng, chunked_eng) -> Dict[str, float]:
+    """Median wall cost of each jitted tick body on this host: the
+    monolithic admission prefill, the fused chunk, the decode chunk."""
+    import jax.numpy as jnp
+    bf = next(iter(fifo_eng.backends.values()))
+    bc = next(iter(chunked_eng.backends.values()))
+    toks = jnp.zeros((MAX_BATCH, PROMPT_LEN), jnp.int32)
+
+    def prefill():
+        logits, cache = bf._prefill(bf.params, {"tokens": toks})
+        cache["pos"].block_until_ready()
+
+    def decode():                          # donated: chain the state
+        bf.cur_tok, bf.cache, _ = bf._decode_chunk(bf.params, bf.cache,
+                                                   bf.cur_tok)
+        bf.cur_tok.block_until_ready()
+
+    ck = jnp.zeros((MAX_BATCH, PREFILL_CHUNK), jnp.int32)
+    z = jnp.zeros((MAX_BATCH,), jnp.int32)
+    m = jnp.zeros((MAX_BATCH,), bool)
+
+    def chunk():
+        bc.cur_tok, bc.cache = bc._prefill_chunk(bc.params, bc.cache,
+                                                 bc.cur_tok, ck, z, z, m)
+        bc.cur_tok.block_until_ready()
+
+    return {"prefill_ms": _median_ms(prefill), "decode_ms": _median_ms(decode),
+            "chunk_ms": _median_ms(chunk)}
+
+
+def _drain_capacity(eng, clock, costs: Dict[str, float]) -> float:
+    """Deterministic virtual-clock capacity: drain a closed burst of the
+    bimodal mix, return completions per virtual second. Engine state is
+    wiped after (slots empty by construction of drain)."""
+    from repro.serving.api import Request
+    rng = np.random.default_rng(7)
+    is_long = rng.random(CALIB_REQS) < LONG_FRAC
+    b = next(iter(eng.backends.values()))
+    clock.t = 0.0
+    for i in range(CALIB_REQS):
+        n = PROMPT_LEN if is_long[i] else SHORT_LEN
+        eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, n),
+                           max_new=MAX_NEW, arrival=0.0), None)
+    while eng.backlog(0.0) or eng.in_flight():
+        cost = _tick_cost_s(eng, b, costs)
+        eng.step(clock.t)
+        clock.t += cost
+    cap = CALIB_REQS / max(clock.t, 1e-9)
+    eng.done.clear()
+    eng.rejected = 0
+    clock.t = 0.0
+    return cap
+
+
+def _workload(seed: int, rate_rps: float, short_slo_ms: float,
+              long_slo_ms: float):
+    """One shared bimodal schedule (virtual seconds)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=N_REQUESTS)
+    arrivals = np.cumsum(gaps)
+    is_long = rng.random(len(arrivals)) < LONG_FRAC
+    prompts = [rng.integers(0, VOCAB, PROMPT_LEN if lg else SHORT_LEN)
+               for lg in is_long]
+    slos = np.where(is_long, long_slo_ms, short_slo_ms)
+    return arrivals, is_long, prompts, slos
+
+
+def _tick_cost_s(eng, backend, costs: Dict[str, float]) -> float:
+    """Virtual cost of the tick the engine is ABOUT to run, from the
+    calibrated call costs and the observable pre-tick state (which call
+    the tick will make is deterministic: see engine._tick)."""
+    q = next(iter(eng.queues.values())) if eng.queues else ()
+    admit = min(len(q), len(backend.free_slots)) > 0
+    if eng.sched.chunked:
+        if admit or backend._prefilling:
+            return costs["chunk_ms"] / 1000.0          # fused tick
+        return costs["decode_ms"] / 1000.0 if backend.active_slots \
+            else 0.0
+    cost = costs["prefill_ms"] / 1000.0 if admit else 0.0
+    if backend.active_slots or admit:
+        cost += costs["decode_ms"] / 1000.0
+    return cost
+
+
+def _replay(policy: str, workload, costs: Dict[str, float],
+            engine=None) -> Dict:
+    from repro.serving.api import Request
+
+    arrivals, is_long, prompts, slos = workload
+    eng, clock = engine if engine is not None else _engine(policy)
+    b = next(iter(eng.backends.values()))
+    clock.t = 0.0
+    i = 0
+    while i < len(arrivals) or eng.backlog(0.0) or eng.in_flight():
+        if (i < len(arrivals) and eng.backlog(0.0) == 0
+                and eng.in_flight() == 0 and arrivals[i] > clock.t):
+            clock.t = float(arrivals[i])   # idle: fast-forward to work
+        while i < len(arrivals) and arrivals[i] <= clock.t:
+            eng.submit(Request(rid=i, tokens=prompts[i], max_new=MAX_NEW,
+                               arrival=float(arrivals[i]),
+                               slo_ms=float(slos[i])), None)
+            i += 1
+        cost = _tick_cost_s(eng, b, costs)
+        eng.step(clock.t)
+        clock.t += cost
+    makespan = clock.t
+    s = eng.summarize(slo_ms=float(slos.max()), best_accuracy=70.0)
+    done = {r.rid: r for r in eng.done}
+    short_lat = [done[j].latency_ms for j in range(len(arrivals))
+                 if not is_long[j] and j in done]
+    return {
+        "goodput": s["goodput"],
+        "p99_ms": s["p99_ms"],
+        "mean_latency_ms": s["mean_latency_ms"],
+        "p99_queue_ms": s.get("p99_queue_ms", 0.0),
+        "short_p99_ms": float(np.percentile(short_lat, 99)),
+        "throughput_rps": s["n_requests"] / max(makespan, 1e-9),
+        "n_requests": s["n_requests"],
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    fifo_engine = _engine("fifo")
+    chunked_engine = _engine("chunked")
+    costs = _calibrate_costs(fifo_engine[0], chunked_engine[0])
+    cap_f = _drain_capacity(*fifo_engine, costs)
+    cap_c = _drain_capacity(*chunked_engine, costs)
+    rate = CHUNKED_HEADROOM * cap_c
+    short_slo = SHORT_SLO_TICKS * costs["decode_ms"]
+    long_slo = LONG_SLO_TICKS * costs["decode_ms"]
+    rows.append(("calibration", costs["prefill_ms"] * 1000.0,
+                 f"prefill={costs['prefill_ms']:.1f}ms "
+                 f"chunk={costs['chunk_ms']:.1f}ms "
+                 f"decode={costs['decode_ms']:.1f}ms "
+                 f"cap_fifo={cap_f:.1f}rps cap_chunked={cap_c:.1f}rps "
+                 f"offered={rate:.1f}rps short_slo={short_slo:.0f}ms"))
+    workload = _workload(42, rate, short_slo, long_slo)
+    payload: Dict = {
+        "config": {"costs_ms": costs, "rate_rps": rate,
+                   "fifo_capacity_rps": cap_f, "chunked_capacity_rps": cap_c,
+                   "n_requests": N_REQUESTS,
+                   "short_slo_ms": short_slo, "long_slo_ms": long_slo,
+                   "max_batch": MAX_BATCH, "prompt_len": PROMPT_LEN,
+                   "short_len": SHORT_LEN, "long_frac": LONG_FRAC,
+                   "max_new": MAX_NEW, "decode_chunk": DECODE_CHUNK,
+                   "prefill_chunk": PREFILL_CHUNK, "vocab": VOCAB,
+                   "layers": 2, "d_model": 64},
+        "policies": {}}
+    ready = {"fifo": fifo_engine, "chunked": chunked_engine}
+    for policy in POLICIES:
+        r = _replay(policy, workload, costs, engine=ready.get(policy))
+        payload["policies"][policy] = r
+        rows.append((policy, r["p99_ms"] * 1000.0,
+                     f"goodput={r['goodput']:.3f} p99={r['p99_ms']:.0f}ms "
+                     f"short_p99={r['short_p99_ms']:.0f}ms "
+                     f"thr={r['throughput_rps']:.1f}rps n={r['n_requests']}"))
+    fifo, chunked = payload["policies"]["fifo"], payload["policies"]["chunked"]
+    payload["ratios"] = {
+        "goodput_ratio": chunked["goodput"] / max(fifo["goodput"], 1e-9),
+        "p99_ratio": chunked["p99_ms"] / max(fifo["p99_ms"], 1e-9),
+        "short_p99_ratio": (chunked["short_p99_ms"]
+                            / max(fifo["short_p99_ms"], 1e-9)),
+    }
+    rr = payload["ratios"]
+    # acceptance gate: chunked+EDF >=1.1x goodput, <=0.8x P99 vs FIFO
+    rows.append(("chunked_vs_fifo",
+                 (chunked["p99_ms"] - fifo["p99_ms"]) * 1000.0,
+                 f"goodput_ratio={rr['goodput_ratio']:.2f} (gate >=1.1) "
+                 f"p99_ratio={rr['p99_ratio']:.2f} (gate <=0.8) "
+                 f"short_p99_ratio={rr['short_p99_ratio']:.2f}"))
+    os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

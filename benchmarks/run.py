@@ -10,6 +10,8 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   fig8_nonbursty        non-bursty trace comparison (Fig. 8)
   engine_serving        continuous vs pump + paged vs dense KV cache; writes
                         reports/BENCH_engine.json (DESIGN.md §Paged KV cache)
+  scheduler             FIFO vs EDF vs chunked+EDF on bimodal prompt lengths;
+                        writes reports/BENCH_scheduler.json (§Scheduling)
   cluster_fabric        replica scaling, routing policy, failure recovery
   profiling             measured vs roofline vs paper-calibrated profile error
   forecaster            LSTM vs baselines MAE/under-rate (Fig. 5 top)
@@ -27,8 +29,8 @@ import time
 
 from benchmarks import (bench_cluster, bench_engine, bench_figures,
                         bench_forecaster, bench_kernels, bench_profiling,
-                        bench_robustness, bench_roofline, bench_solver,
-                        bench_table1)
+                        bench_robustness, bench_roofline, bench_scheduler,
+                        bench_solver, bench_table1)
 
 ALL = {
     "fig1_throughput": bench_figures.fig1_throughput,
@@ -39,6 +41,7 @@ ALL = {
     "fig8_nonbursty": bench_figures.fig8_nonbursty,
     "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
     "engine_serving": bench_engine.run,
+    "scheduler": bench_scheduler.run,
     "cluster_fabric": bench_cluster.run,
     "profiling": bench_profiling.run,
     "table1_systems": bench_table1.run,

@@ -4,7 +4,15 @@ Compares InfAdapter vs MS+ vs VPA+{ResNet18,50,152} on the bursty and
 non-bursty traces, printing the accuracy-loss / cost / P99 panels the paper
 plots, plus the beyond-paper reactive+queue-aware InfAdapter.
 
+``--engine`` additionally replays a smoke-scaled slice of the bursty trace
+against the REAL ``InProcessServingEngine`` (continuous batching on actual
+models) through the same control loop, using the shared
+``run_serving_loop`` + ``trace_load`` helpers — the trace drives real
+execution, not just the DES. ``--scheduler`` picks the engine's scheduling
+discipline (fifo / edf / chunked; DESIGN.md §Scheduling).
+
 Run:  PYTHONPATH=src python examples/replay_twitter_trace.py [--beta 0.05]
+          [--engine --engine-seconds 20 --scheduler chunked]
 """
 import argparse
 
@@ -18,10 +26,61 @@ from repro.sim.runner import run_experiment
 REF_ACC = 78.31  # ResNet152 (most accurate variant)
 
 
+def replay_on_engine(seconds: float, scheduler: str, scale: float) -> None:
+    """Drive the real engine with the recorded bursty trace: profile a tiny
+    variant ladder live, then replay ``trace_load(paper_bursty_trace())``
+    (rate scaled to CPU smoke capacity) behind the InfAdapter loop."""
+    from repro.configs import get_config, smoke_variant
+    from repro.profiling.measure import EngineProfiler
+    from repro.serving.driver import (ElapsedClock, run_serving_loop,
+                                      trace_load)
+    from repro.serving.engine import InProcessServingEngine
+
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(d_model=128)
+    variants = {
+        "tiny-2L": (base.replace(num_layers=2, name="tiny-2L"), 70.0),
+        "tiny-4L": (base.replace(num_layers=4, name="tiny-4L"), 75.0),
+    }
+    slo_ms = 2000.0
+    engine = InProcessServingEngine(
+        variants, max_batch=8, prompt_len=16, max_new=8, decode_chunk=4,
+        scheduler=scheduler, clock=ElapsedClock())
+    profiler = EngineProfiler(engine, points=(1, 2), requests_per_point=8,
+                              warmup=2, max_units=3)
+    profiles = {m.profile.name: m.profile
+                for m in profiler.profile_all().values()}
+    cfg = ControllerConfig(interval_s=5.0, budget=3, slo_ms=slo_ms,
+                           beta=0.05, gamma=0.05, reactive=True,
+                           queue_aware=True)
+    ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10), cfg)
+    # the paper trace peaks near 95 rps; scale it into CPU smoke range
+    load_fn = trace_load(paper_bursty_trace(), scale=scale)
+    print(f"\nreplaying bursty trace on the REAL engine for {seconds:.0f}s "
+          f"(scheduler={scheduler}, rate scale {scale})...")
+    n = run_serving_loop(engine, ctrl, seconds=seconds, interval=5.0,
+                         load_fn=load_fn, slo_ms=slo_ms)
+    s = engine.summarize(slo_ms, best_accuracy=75.0)
+    if not s:
+        print(f"no requests completed ({engine.rejected} rejected)")
+        return
+    print(f"engine replay: {s['n_requests']}/{n} served  "
+          f"goodput={s['goodput']:.1%} viol={s['violation_rate']:.1%} "
+          f"p99={s['p99_ms']:.0f}ms queue_p99={s.get('p99_queue_ms', 0):.0f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--beta", type=float, default=0.05)
     ap.add_argument("--budget", type=int, default=20)
+    ap.add_argument("--engine", action="store_true",
+                    help="also replay the bursty trace on the real engine "
+                         "via run_serving_loop + trace_load")
+    ap.add_argument("--engine-seconds", type=float, default=20.0)
+    ap.add_argument("--engine-scale", type=float, default=0.15,
+                    help="trace rate multiplier for the CPU-sized engine")
+    ap.add_argument("--scheduler", default="chunked",
+                    choices=("fifo", "edf", "chunked"),
+                    help="engine scheduling discipline (--engine mode)")
     args = ap.parse_args()
 
     profiles = paper_resnet_profiles()
@@ -56,6 +115,10 @@ def main():
                   f"{s['p99_ms']:8.0f} {s['accuracy_loss']:8.2f}% "
                   f"{s['avg_cost_units']:6.1f}")
         print("(* beyond-paper extension; see EXPERIMENTS.md)")
+
+    if args.engine:
+        replay_on_engine(args.engine_seconds, args.scheduler,
+                         args.engine_scale)
 
 
 if __name__ == "__main__":

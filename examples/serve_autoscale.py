@@ -18,6 +18,7 @@ retry + controller-re-placement path runs on real models.
 
 Run:  PYTHONPATH=src python examples/serve_autoscale.py [--seconds 30]
       [--mode continuous|pump]   (pump = legacy micro-batching baseline)
+      [--scheduler fifo|edf|chunked] [--preemption none|requeue|drop]
       [--replicas 3 --nodes 3 --fail-node-at 12]
 """
 import argparse
@@ -30,7 +31,7 @@ from repro.core.forecaster import MovingMaxForecaster
 from repro.profiling.measure import EngineProfiler
 from repro.profiling.store import DEFAULT_STORE_DIR, ProfileStore
 from repro.serving.api import ClusterAPI, ServingAPI
-from repro.serving.driver import rise_fall_load, run_serving_loop
+from repro.serving.driver import ElapsedClock, rise_fall_load, run_serving_loop
 from repro.serving.engine import InProcessServingEngine
 
 
@@ -67,6 +68,14 @@ def main():
     ap.add_argument("--interval", type=float, default=6.0)
     ap.add_argument("--mode", choices=("continuous", "pump"),
                     default="continuous")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "edf", "chunked"),
+                    help="queue-to-slot scheduling discipline "
+                         "(DESIGN.md §Scheduling)")
+    ap.add_argument("--preemption", default="none",
+                    choices=("none", "requeue", "drop"),
+                    help="retire deadline-hopeless residents for feasible "
+                         "waiters (requeue resumes them, tokens preserved)")
     ap.add_argument("--replicas", type=int, default=0,
                     help="shard variants into single-unit replicas across "
                          "the node set (0 = legacy monolithic backends)")
@@ -83,7 +92,8 @@ def main():
                  or args.fail_node_at is not None)
     budget = max(args.replicas, 2) if fabric_on else 3
     engine_kw = dict(max_batch=8, prompt_len=16, mode=args.mode, max_new=8,
-                     decode_chunk=4)
+                     decode_chunk=4, scheduler=args.scheduler,
+                     preemption=args.preemption, clock=ElapsedClock())
     if fabric_on:
         n_nodes = args.nodes or max(args.replicas, 2)
         # room for create-then-remove surge and for re-placement after a
@@ -127,13 +137,14 @@ def main():
     run_serving_loop(engine, ctrl, seconds=args.seconds,
                      interval=args.interval,
                      load_fn=rise_fall_load(max(args.seconds, 1)),
-                     faults=faults)
+                     faults=faults, slo_ms=slo_ms)
     s = engine.summarize(slo_ms, best_accuracy=78.0)
     if not s:
         print(f"\nno requests completed ({engine.rejected} rejected)")
         return
     print(f"\nserved {s['n_requests']} requests ({s.get('rejected', 0)} "
-          f"rejected): viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
+          f"rejected): goodput={s['goodput']:.1%} "
+          f"viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
           f"mean={s['mean_latency_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
 
 

@@ -179,6 +179,34 @@ def paged_engine_tables(bench_path: str):
     return "\n".join(occ), "\n".join(ctx)
 
 
+def scheduler_table(bench_path: str) -> str:
+    """§Scheduling: per-policy goodput / P99 / short-class P99 / throughput
+    on the bimodal prompt-length workload at fixed allocation, plus the
+    chunked-vs-FIFO acceptance ratios, from BENCH_scheduler.json (written
+    by ``benchmarks/bench_scheduler.py``, a CI artifact)."""
+    out = ["| policy | goodput | p99 ms | short p99 ms | queue p99 ms | "
+           "thr rps |",
+           "|---|---|---|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(out)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    for name, d in data.get("policies", {}).items():
+        out.append(f"| {name} | {d['goodput']:.3f} | {d['p99_ms']:.0f} | "
+                   f"{d['short_p99_ms']:.0f} | {d['p99_queue_ms']:.0f} | "
+                   f"{d['throughput_rps']:.1f} |")
+    rr = data.get("ratios", {})
+    if rr:
+        out.append(f"| **chunked / fifo** | "
+                   f"**{rr['goodput_ratio']:.2f}×** (gate ≥1.1) | "
+                   f"**{rr['p99_ratio']:.2f}×** (gate ≤0.8) | "
+                   f"{rr['short_p99_ratio']:.2f}× | — | — |")
+    return "\n".join(out)
+
+
 def inject(md_path: str, marker: str, table: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -201,6 +229,8 @@ def main():
     ap.add_argument("--profiles-dir", default="reports/profiles")
     ap.add_argument("--cluster-dir", default="reports/cluster")
     ap.add_argument("--bench-engine", default="reports/BENCH_engine.json")
+    ap.add_argument("--bench-scheduler",
+                    default="reports/BENCH_scheduler.json")
     ap.add_argument("--md", default="EXPERIMENTS.md")
     args = ap.parse_args()
     rows = load(args.dir)
@@ -214,6 +244,7 @@ def main():
     occ_tbl, ctx_tbl = paged_engine_tables(args.bench_engine)
     inject(args.md, "PAGED_ENGINE_TABLE", occ_tbl)
     inject(args.md, "PAGED_CONTEXT_TABLE", ctx_tbl)
+    inject(args.md, "SCHEDULER_TABLE", scheduler_table(args.bench_scheduler))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

@@ -384,3 +384,154 @@ def paged_decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array,
     out = out.reshape(B, 1, H * hd)
     attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
     return attn, k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
+# Prefill continuation: one chunk of prompt tokens against the cached prefix
+# ---------------------------------------------------------------------------
+
+def _chunk_qkv(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    """Shared chunk front half: project q/k/v for a (B, ck) chunk and rope
+    them at per-row absolute ``positions`` (B, ck)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)), H, hd)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)), KV, hd)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)), KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunk_attend(cfg: ModelConfig, q: jax.Array, kg: jax.Array, vg: jax.Array,
+                  bias: jax.Array) -> jax.Array:
+    """Chunk queries over a gathered/stored cache: q (B,ck,H,hd),
+    kg/vg (B,KV,T,hd), bias (B,ck,T) additive -> (B,ck,H,hd). Pure-jnp
+    oracle for the per-token Pallas route (fp32 accumulation, softmax in
+    fp32 — the ``gqa_attend`` conventions)."""
+    B, ck, H, hd = q.shape
+    KV = kg.shape[1]
+    qg = q.reshape(B, ck, KV, H // KV, hd)
+    scores = jnp.einsum("bjkgh,bkth->bkgjt", qg, kg,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgjt,bkth->bjkgh", probs.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, ck, H, hd).astype(q.dtype)
+
+
+def chunk_prefill_attention(cfg: ModelConfig, p: Dict, x: jax.Array,
+                            k_cache: jax.Array, v_cache: jax.Array,
+                            start: jax.Array, n_valid: jax.Array,
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill-continuation attention for the dense discipline.
+
+    x: (B, ck, D) — the next ``ck`` prompt tokens of each row (right-padded;
+    ``n_valid`` (B,) counts the real ones, 0 = row not prefilling);
+    k/v_cache: (B, KV, C, hd); start: (B,) absolute position of x[:, 0].
+    The chunk's K/V is scattered at positions ``start..start+n_valid`` (the
+    non-ring dense cache: slot index == absolute position — the engine
+    asserts no sliding window before enabling chunked prefill), then every
+    chunk query attends causally over the cache: key slot ``t`` is valid iff
+    ``t <= start + j`` — exactly the already-written prefix plus the chunk
+    itself, the same stale-entry masking the decode step relies on.
+
+    With ``cfg.use_pallas`` attention routes through the flash decode kernel
+    once per chunk token (the chunk is small and static), reusing its
+    cached-prefix bias masking; otherwise a blockwise jnp einsum.
+
+    Returns (attn_out (B, ck, D), new_k_cache, new_v_cache).
+    """
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    B, ck = x.shape[0], x.shape[1]
+    C = k_cache.shape[2]
+    offs = jnp.arange(ck)
+    positions = start[:, None] + offs[None, :]               # (B, ck)
+    q, k, v = _chunk_qkv(cfg, p, x, positions)
+    dest = jnp.where(offs[None, :] < n_valid[:, None], positions, C)
+    batch_idx = jnp.arange(B)[:, None]
+    k_cache = k_cache.astype(dt).at[batch_idx, :, dest].set(k, mode="drop")
+    v_cache = v_cache.astype(dt).at[batch_idx, :, dest].set(v, mode="drop")
+
+    # causal over absolute positions == cache slots; padded queries (j >=
+    # n_valid) read stale-but-finite entries and their output is discarded
+    valid = jnp.arange(C)[None, None, :] <= positions[:, :, None]
+    bias = jnp.where(valid, 0.0, -1e9).astype(jnp.float32)   # (B, ck, C)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        KV = k_cache.shape[1]
+        qg = q.reshape(B, ck, KV, H // KV, hd)
+        outs = [kops.flash_decode_bkchd(qg[:, j], k_cache, v_cache, bias[:, j],
+                                        softcap=cfg.attn_logit_softcap)
+                for j in range(ck)]
+        out = jnp.stack(outs, axis=1).reshape(B, ck, H, hd)
+    else:
+        out = _chunk_attend(cfg, q, k_cache, v_cache, bias)
+    out = out.reshape(B, ck, H * hd)
+    attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    return attn, k_cache, v_cache
+
+
+def paged_chunk_prefill_attention(cfg: ModelConfig, p: Dict, x: jax.Array,
+                                  k_pages: jax.Array, v_pages: jax.Array,
+                                  page_table: jax.Array, start: jax.Array,
+                                  n_valid: jax.Array,
+                                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill-continuation attention for the paged discipline (one layer's
+    pool leaves — the ``paged_decode_attention`` counterpart of
+    ``chunk_prefill_attention``).
+
+    The chunk's K/V lands at page ``page_table[b, pos // ps]`` offset
+    ``pos % ps`` for each valid position (invalid rows/tail are pointed out
+    of bounds and dropped); attention runs over the row's full block table
+    (chunks are rare next to decode ticks, so no live-page bucketing) with
+    per-query length masking ``t <= start + j``. Pallas path: the paged
+    flash decode kernel per chunk token with per-token lengths.
+
+    Returns (attn_out (B, ck, D), new_k_pages, new_v_pages).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    B, ck = x.shape[0], x.shape[1]
+    ps = k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    T = max_pages * ps
+    offs = jnp.arange(ck)
+    positions = start[:, None] + offs[None, :]               # (B, ck)
+    q, k, v = _chunk_qkv(cfg, p, x, positions)
+
+    page_col = jnp.minimum(positions // ps, max_pages - 1)
+    page = page_table[jnp.arange(B)[:, None], page_col]      # (B, ck)
+    page = jnp.where(offs[None, :] < n_valid[:, None], page,
+                     k_pages.shape[1])                       # OOB: dropped
+    off = positions % ps
+    k_pages = k_pages.astype(dt).at[:, page, off].set(
+        k.transpose(2, 0, 1, 3), mode="drop")                # (KV, B, ck, hd)
+    v_pages = v_pages.astype(dt).at[:, page, off].set(
+        v.transpose(2, 0, 1, 3), mode="drop")
+
+    qg = q.reshape(B, ck, KV, H // KV, hd)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        lengths = jnp.clip(positions + 1, 1, T)              # (B, ck)
+        outs = [kops.paged_flash_decode(qg[:, j], k_pages, v_pages,
+                                        page_table, lengths[:, j],
+                                        softcap=cfg.attn_logit_softcap)
+                for j in range(ck)]
+        out = jnp.stack(outs, axis=1).reshape(B, ck, H, hd)
+    else:
+        kg = jnp.moveaxis(k_pages[:, page_table], 1, 0)      # (B,KV,mp,ps,hd)
+        vg = jnp.moveaxis(v_pages[:, page_table], 1, 0)
+        kg = kg.reshape(B, KV, T, hd)
+        vg = vg.reshape(B, KV, T, hd)
+        valid = jnp.arange(T)[None, None, :] <= positions[:, :, None]
+        bias = jnp.where(valid, 0.0, -1e9).astype(jnp.float32)
+        out = _chunk_attend(cfg, q, kg, vg, bias)
+    out = out.reshape(B, ck, H * hd)
+    attn = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    return attn, k_pages, v_pages

@@ -306,6 +306,13 @@ class LM:
         return (cfg.family in ("dense", "moe", "vlm")
                 and not cfg.is_encoder_decoder and not cfg.sliding_window)
 
+    def supports_chunked_prefill(self) -> bool:
+        """Prefill continuation needs positional KV state and the non-ring
+        slot==position cache discipline — the same predicate as the paged
+        cache (SSM/hybrid recurrent state can't be rebuilt chunk-at-offset;
+        sliding windows make cache slots ambiguous mid-prompt)."""
+        return self.supports_paged_cache()
+
     def init_paged_cache(self, batch_size: int, pool_pages: int,
                          page_size: int, max_pages_per_seq: int) -> Dict:
         """Pool-shaped cache pytree: ``kp``/``vp`` are the shared page pool
@@ -371,6 +378,135 @@ class LM:
         out["pt"] = cache["pt"].at[slot].set(0)
         out["pos"] = cache["pos"].at[slot].set(0)
         return out
+
+    # ------------------------------------------------------------------
+    # prefill continuation: one chunk of prompt tokens at an offset
+    # ------------------------------------------------------------------
+    def _sinusoid_pe(self, positions: jax.Array) -> jax.Array:
+        """Sinusoidal rows for integer ``positions`` of any shape ->
+        ``positions.shape + (d_model,)`` fp32."""
+        cfg = self.cfg
+        half = cfg.d_model // 2
+        inv = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
+        ang = positions[..., None].astype(jnp.float32) * inv
+        pe = jnp.zeros(positions.shape + (cfg.d_model,), jnp.float32)
+        return pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
+
+    def _finish_chunk(self, x: jax.Array, params: Dict, n_valid: jax.Array
+                      ) -> jax.Array:
+        """Final norm + unembed at each row's last valid chunk position ->
+        logits (B, V) (garbage rows where n_valid == 0)."""
+        cfg = self.cfg
+        B, ck = x.shape[0], x.shape[1]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = jnp.clip(n_valid - 1, 0, ck - 1)
+        logits = unembed(cfg, params["embed"], x[jnp.arange(B), last][:, None])
+        return (logits + jnp.asarray(self._vmask, logits.dtype))[:, 0]
+
+    def prefill_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
+                      start: jax.Array, n_valid: jax.Array
+                      ) -> Tuple[jax.Array, Dict]:
+        """Continue prompt prefill by one chunk against the dense cache.
+
+        tokens: (B, ck) int32 — each prefilling row's next chunk of prompt
+        tokens, right-padded; start: (B,) absolute position of tokens[:, 0];
+        n_valid: (B,) count of real tokens this chunk (0 = row inert: no
+        writes, no position advance). Chunk K/V is written at cache slots
+        ``start..start+n_valid`` and every chunk query attends over the
+        already-cached prefix plus the chunk itself — run over the whole
+        prompt in chunks this reproduces ``prefill`` exactly (greedy-parity
+        tested), but interleaves with decode ticks instead of blocking them.
+
+        Returns (logits at each row's last valid token (B, V), new cache);
+        ``cache["pos"]`` advances to ``start + n_valid`` on active rows.
+        """
+        cfg = self.cfg
+        assert self.supports_chunked_prefill(), \
+            f"chunked prefill unsupported for config {cfg.name!r}"
+        dt = self.compute_dtype
+        x = embed(cfg, params["embed"], tokens, dt)
+        if cfg.rope_theta <= 0:
+            positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
+            x = x + self._sinusoid_pe(positions).astype(dt)
+
+        def body(carry, inp):
+            lp, lc = inp
+            x_in = carry
+            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = attn.chunk_prefill_attention(
+                cfg, lp["attn"], h, lc["k"], lc["v"], start, n_valid)
+            x_new = x_in + a
+            h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+            else:
+                y = apply_mlp(cfg, lp["ffn"], h2)
+            return x_new + y, {"k": kc, "v": vc}
+
+        layer_caches = {k: cache[k] for k in ("k", "v")}
+        if not cfg.scan_layers:
+            outs = []
+            for i in range(cfg.num_layers):
+                x, out = body(x, (_layer_slice(params["layers"], i),
+                                  _layer_slice(layer_caches, i)))
+                outs.append(out)
+            new_caches = _stack_layers(outs)
+        else:
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["layers"], layer_caches))
+        logits = self._finish_chunk(x, params, n_valid)
+        new_cache = dict(cache)
+        new_cache.update(new_caches)
+        new_cache["pos"] = jnp.where(n_valid > 0, start + n_valid,
+                                     cache["pos"])
+        return logits, new_cache
+
+    def prefill_chunk_paged(self, params: Dict, cache: Dict,
+                            tokens: jax.Array, start: jax.Array,
+                            n_valid: jax.Array) -> Tuple[jax.Array, Dict]:
+        """``prefill_chunk`` against the paged pool: chunk K/V lands in each
+        row's block-table pages (the pages were allocated at admission);
+        attention masks to the written prefix per query. Same contract and
+        return shape as the dense form."""
+        cfg = self.cfg
+        assert self.supports_chunked_prefill(), cfg.name
+        dt = self.compute_dtype
+        pt = cache["pt"]
+        x = embed(cfg, params["embed"], tokens, dt)
+        if cfg.rope_theta <= 0:
+            positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
+            x = x + self._sinusoid_pe(positions).astype(dt)
+
+        def body(carry, inp):
+            lp, kp_l, vp_l = inp
+            x_in = carry
+            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+            a, kp_l, vp_l = attn.paged_chunk_prefill_attention(
+                cfg, lp["attn"], h, kp_l, vp_l, pt, start, n_valid)
+            x_new = x_in + a
+            h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+            else:
+                y = apply_mlp(cfg, lp["ffn"], h2)
+            return x_new + y, {"kp": kp_l, "vp": vp_l}
+
+        if not cfg.scan_layers:
+            outs = []
+            for i in range(cfg.num_layers):
+                x, out = body(x, (_layer_slice(params["layers"], i),
+                                  cache["kp"][i], cache["vp"][i]))
+                outs.append(out)
+            new_caches = _stack_layers(outs)
+        else:
+            x, new_caches = jax.lax.scan(
+                body, x, (params["layers"], cache["kp"], cache["vp"]))
+        logits = self._finish_chunk(x, params, n_valid)
+        new_cache = dict(cache)
+        new_cache.update(new_caches)
+        new_cache["pos"] = jnp.where(n_valid > 0, start + n_valid,
+                                     cache["pos"])
+        return logits, new_cache
 
     # ------------------------------------------------------------------
     # prefill: run the full prompt, build the cache
@@ -479,19 +615,11 @@ class LM:
         """tokens: (B,) int32 -> (logits (B, V), updated cache)."""
         cfg = self.cfg
         dt = self.compute_dtype
-        B = tokens.shape[0]
         pos = cache["pos"]
         x = embed(cfg, params["embed"], tokens[:, None], dt)
         if cfg.rope_theta <= 0 or cfg.is_encoder_decoder:
-            posenc = jnp.asarray(
-                sinusoidal_positions(1, cfg.d_model))  # slot-0 fallback
-            # gather true sinusoidal row for each position
-            half = cfg.d_model // 2
-            inv = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
-            ang = pos[:, None].astype(jnp.float32) * inv[None]
-            pe = jnp.zeros((B, cfg.d_model), jnp.float32)
-            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-            x = x + pe[:, None, :].astype(dt)
+            # gather the true sinusoidal row for each position
+            x = x + self._sinusoid_pe(pos)[:, None, :].astype(dt)
         enc = cache.get("enc")
         windows = jnp.asarray(_layer_windows(cfg))
 
@@ -572,13 +700,7 @@ class LM:
         pos = cache["pos"]
         x = embed(cfg, params["embed"], tokens[:, None], dt)
         if cfg.rope_theta <= 0:
-            B = tokens.shape[0]
-            half = cfg.d_model // 2
-            inv = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
-            ang = pos[:, None].astype(jnp.float32) * inv[None]
-            pe = jnp.zeros((B, cfg.d_model), jnp.float32)
-            pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-            x = x + pe[:, None, :].astype(dt)
+            x = x + self._sinusoid_pe(pos)[:, None, :].astype(dt)
         pt = cache["pt"]
 
         def body(carry, inp):

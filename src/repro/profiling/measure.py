@@ -164,13 +164,18 @@ class EngineProfiler:
         warm_left = self.warmup
         measured: List[Request] = []
         t_meas0: Optional[float] = time.time() if warm_left == 0 else None
+        # arrivals must come from the SAME clock the backend stamps
+        # service_start/completion with (the engine's injectable clock may
+        # be an elapsed-seconds domain) — mixing domains corrupts the
+        # queue-wait split this profiler fits p(n) from
+        clk = getattr(b, "clock", time.time)
 
         def new_request() -> Request:
             nonlocal rid
             r = Request(rid=rid,
                         tokens=rng.integers(0, self.vocab,
                                             b.prompt_len).astype(np.int64),
-                        max_new=b.max_new, arrival=time.time())
+                        max_new=b.max_new, arrival=clk())
             rid += 1
             return r
 

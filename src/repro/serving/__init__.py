@@ -5,5 +5,6 @@ Only the light-weight protocol module is imported eagerly — the real engine
 (``repro.serving.engine``) pulls in JAX and the model stack, which the
 numpy-only simulator path must not pay for.
 """
-from repro.serving.api import (ClusterAPI, Request, ServingAPI,  # noqa: F401
-                               summarize_requests)
+from repro.serving.api import (ClusterAPI, Request,  # noqa: F401
+                               SchedulerAPI, ServingAPI, summarize_requests)
+from repro.serving.sched import make_scheduler  # noqa: F401

@@ -14,6 +14,11 @@ same controller, dispatcher, and experiment harness:
     depth, used by the beyond-paper queue-aware / reactive controller modes).
   * ``ServingAPI``  — data-plane surface on top of ``ClusterAPI``: request
     submission plus the windowed metric summary both backends report.
+  * ``SchedulerAPI`` — the scheduling discipline between a backend's
+    admission queue and its execution slots (admission order, chunked
+    prefill, preemption); policies live in ``repro.serving.sched`` and both
+    backends accept ``scheduler=`` so DES and real execution queue
+    identically (INFaaS-style SLO awareness in the data plane).
 
 Both backends also accept ``nodes=`` to mount the replica-level cluster
 fabric (``repro.cluster``: placement across nodes, two-level routing via a
@@ -27,7 +32,7 @@ engine are scored identically.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import (Dict, List, Mapping, Optional, Protocol, Sequence, Set,
                     Tuple, runtime_checkable)
 
@@ -45,6 +50,14 @@ class Request:
     real engine, server grab in the DES), splitting end-to-end latency into
     queue wait and *processing* latency — the quantity the paper's profiler
     fits as p_m(n) (§5) and the profiling subsystem measures.
+
+    ``slo_ms`` is the request's latency SLO; ``deadline`` (arrival + SLO) is
+    what deadline-aware schedulers (``repro.serving.sched``) order and
+    preempt on. ``slo_ms <= 0`` means no per-request deadline — the summary's
+    global ``slo_ms`` applies. ``resume_tokens``/``preemptions``/``dropped``
+    are preemption bookkeeping: a preempted request keeps the tokens it
+    already generated and either re-enters the queue (requeue) or finishes
+    early with ``dropped=True`` (drop).
     """
     rid: int
     tokens: np.ndarray          # prompt (prompt_len,)
@@ -55,6 +68,18 @@ class Request:
     completion: float = 0.0
     output: Optional[np.ndarray] = None
     accuracy: float = 0.0
+    slo_ms: float = 0.0         # per-request latency SLO; <=0 = none
+    priority: float = 0.0       # higher = more important (preemption tiebreak)
+    preemptions: int = 0        # times this request was preempted
+    resume_tokens: Optional[List[int]] = field(default=None, repr=False)
+    dropped: bool = False       # preempted-and-dropped: output is partial
+
+    @property
+    def deadline(self) -> float:
+        """Absolute deadline on the backend's clock (inf when no SLO)."""
+        if self.slo_ms <= 0.0:
+            return float("inf")
+        return self.arrival + self.slo_ms / 1000.0
 
     @property
     def latency_ms(self) -> float:
@@ -107,6 +132,41 @@ class ClusterAPI(Protocol):
 
 
 @runtime_checkable
+class SchedulerAPI(Protocol):
+    """Per-backend scheduling discipline — the layer between a backend's
+    admission queue and its execution slots (implementations in
+    ``repro.serving.sched``; DESIGN.md §Scheduling).
+
+    A scheduler makes three decisions each engine tick, all pure functions of
+    the visible queue/slot state (no device work):
+
+      * **admission order** — ``order`` ranks the waiting queue; the backend
+        admits the prefix that fits its free slots (FIFO = arrival order,
+        EDF = earliest ``Request.deadline`` first).
+      * **prefill granularity** — ``chunked`` backends split prompt prefill
+        into fixed-size chunks interleaved with decode ticks, so a long
+        prompt never stalls resident decode slots for a whole prefill.
+      * **preemption** — ``select_victims`` names in-service requests to
+        retire early (slot + pages freed, generated tokens preserved) so a
+        feasible waiter can run; the engine's ``preemption=`` mode decides
+        whether victims are requeued or dropped.
+    """
+
+    name: str
+    chunked: bool        # engine builds the prefill-continuation machinery
+
+    def order(self, queue: Sequence["Request"], now: float) -> List["Request"]:
+        """Rank waiting requests; the backend admits a prefix of this."""
+        ...
+
+    def select_victims(self, resident: Sequence["Request"],
+                       queue: Sequence["Request"], now: float,
+                       free_slots: int) -> List["Request"]:
+        """In-service requests to preempt this tick (may be empty)."""
+        ...
+
+
+@runtime_checkable
 class ServingAPI(ClusterAPI, Protocol):
     """Data-plane surface: what the experiment harness needs beyond control."""
 
@@ -137,7 +197,9 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
                        cost_samples: Optional[Sequence[Tuple[float, int]]] = None,
                        window_s: float = 0.0,
                        queue_ms: Optional[Sequence[float]] = None,
-                       service_ms: Optional[Sequence[float]] = None) -> Dict:
+                       service_ms: Optional[Sequence[float]] = None,
+                       slo_list_ms: Optional[Sequence[float]] = None,
+                       dropped: Optional[Sequence[bool]] = None) -> Dict:
     """The paper's evaluation summary (§6), shared by sim and real engine.
 
     Returns violation rate / P99 / mean latency / average accuracy and the
@@ -149,6 +211,13 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
     ``queue_ms``/``service_ms`` (the queue-wait / processing-latency split of
     each request, paper §5) also mean/P99 of each component — the processing
     side is what profile fits p_m(n) are checked against.
+
+    **Goodput** — the fraction of requests that completed in full (not
+    ``dropped``) within their deadline — is reported next to P99. Each
+    request's effective SLO is its own ``slo_list_ms`` entry when positive,
+    else the global ``slo_ms``; without per-request SLOs and drops, goodput
+    is exactly ``1 - violation_rate``. This is the paper's objective stated
+    per-request (INFaaS/Loki report the same quantity as "SLO attainment").
     """
     if len(arrivals) == 0:
         return {}
@@ -157,9 +226,17 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
     lat = np.asarray(latencies_ms, float)[order]
     acc = np.asarray(accuracies, float)[order]
     viol = lat > slo_ms
+    eff_slo = np.full(len(arr), slo_ms, float)
+    if slo_list_ms is not None and len(slo_list_ms):
+        per = np.asarray(slo_list_ms, float)[order]
+        eff_slo = np.where(per > 0, per, eff_slo)
+    ok = lat <= eff_slo
+    if dropped is not None and len(dropped):
+        ok &= ~np.asarray(dropped, bool)[order]
     out: Dict = {
         "n_requests": int(len(arr)),
         "violation_rate": float(viol.mean()),
+        "goodput": float(ok.mean()),
         "p99_ms": float(np.percentile(lat, 99)),
         "mean_latency_ms": float(lat.mean()),
         "avg_accuracy": float(acc.mean()),

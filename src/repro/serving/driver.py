@@ -1,11 +1,19 @@
 """Shared wall-clock serving loop for the real-execution drivers.
 
 ``examples/serve_autoscale.py`` and ``repro.launch.serve`` both replay a
-synthetic load curve against an ``InProcessServingEngine`` behind the
-InfAdapter control loop; this module holds the one copy of that loop so the
-two drivers can't drift. Poisson arrivals are scaled by the *measured* tick
+load curve against an ``InProcessServingEngine`` behind the InfAdapter
+control loop; this module holds the one copy of that loop so the two
+drivers can't drift. Poisson arrivals are scaled by the *measured* tick
 duration, so offered load tracks λ(t) regardless of how fast the engine
 ticks.
+
+Clock domains: every latency-bearing stamp — ``Request.arrival`` here,
+``service_start``/``completion`` inside the engine — is taken from the
+**engine's own clock** (``engine.clock``, ``time.time`` by default), so
+queue waits and latencies always subtract same-domain values. Construct the
+engine with ``clock=ElapsedClock()`` to put those stamps on the loop's
+elapsed-seconds timeline (the domain control steps, fault schedules, and
+the monitor already use); the loop resets that clock at t=0.
 """
 from __future__ import annotations
 
@@ -17,23 +25,64 @@ import numpy as np
 from repro.serving.api import Request, ServingAPI
 
 
+class ElapsedClock:
+    """Callable clock returning seconds since construction (or the latest
+    ``reset``). Hand one to ``InProcessServingEngine(clock=...)`` so every
+    request stamp shares the serving loop's elapsed-time domain instead of
+    absolute epoch seconds."""
+
+    def __init__(self):
+        self.t0 = time.time()
+
+    def reset(self) -> None:
+        self.t0 = time.time()
+
+    def __call__(self) -> float:
+        return time.time() - self.t0
+
+
+def trace_load(rate: np.ndarray, scale: float = 1.0,
+               repeat: bool = False) -> Callable[[float], float]:
+    """λ(t) from a recorded per-second rate trace (``repro.data.traces``):
+    second ``int(now)`` of the trace, scaled by ``scale`` (smoke-size a
+    Twitter-shaped trace down to what a CPU engine sustains). ``repeat``
+    wraps around instead of holding the last second."""
+    arr = np.asarray(rate, float)
+    assert len(arr) > 0
+
+    def load(now: float) -> float:
+        i = int(max(now, 0.0))
+        i = i % len(arr) if repeat else min(i, len(arr) - 1)
+        return float(arr[i]) * scale
+    return load
+
+
 def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
                      interval: float, load_fn: Callable[[float], float],
                      seed: int = 0, prompt_len: int = 16, max_new: int = 8,
                      vocab: int = 256, tick_sleep: float = 0.05,
-                     faults=None,
+                     faults=None, slo_ms: float = 0.0,
                      log: Optional[Callable[[str], None]] = print) -> int:
     """Drive ``engine`` under ``ctrl`` for ``seconds`` of wall-clock time.
 
     ``load_fn(now)`` gives the offered rate λ (req/s) at elapsed time
-    ``now``. The controller steps every ``interval`` seconds; the engine is
-    ticked (admission + one decode chunk) every ``tick_sleep``, and drained
-    before returning. ``faults`` (a ``repro.cluster.faults.FaultSchedule``
-    with event times in elapsed seconds) is injected into fabric-backed
-    engines as wall-clock time passes. Returns the number of requests
-    submitted.
+    ``now`` (see ``trace_load`` to replay a recorded trace). The controller
+    steps every ``interval`` seconds; the engine is ticked (admission + one
+    decode chunk) every ``tick_sleep``, and drained before returning.
+    ``faults`` (a ``repro.cluster.faults.FaultSchedule`` with event times in
+    elapsed seconds) is injected into fabric-backed engines as wall-clock
+    time passes. ``slo_ms`` stamps each request's deadline (deadline-aware
+    schedulers and the goodput metric read it). Returns the number of
+    requests submitted.
+
+    Arrivals are stamped from the engine's clock — the same clock the
+    engine stamps ``service_start``/``completion`` from — so latencies and
+    queue waits never mix clock domains (regression-tested).
     """
     rng = np.random.default_rng(seed)
+    clk = getattr(engine, "clock", time.time)
+    if isinstance(clk, ElapsedClock):
+        clk.reset()          # elapsed stamps align with the loop's t=0
     t_start = time.time()
     rid = 0
     next_ctrl = 0.0
@@ -60,7 +109,7 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
             engine.submit(
                 Request(rid=rid,
                         tokens=rng.integers(0, vocab, prompt_len).astype(np.int64),
-                        max_new=max_new, arrival=time.time()),
+                        max_new=max_new, arrival=clk(), slo_ms=slo_ms),
                 ctrl.dispatcher.next_backend())
             rid += 1
         last = now

@@ -25,10 +25,22 @@ live context's page count instead of capacity, and pages are allocated at
 admission / freed at retirement so admission respects memory-true capacity
 (DESIGN.md §Paged KV cache).
 
-Admission control: the engine keeps a bounded FIFO queue *per variant*
+Admission control: the engine keeps a bounded queue *per variant*
 (backpressure — ``submit`` returns False and counts a rejection when the
 queue is full), so ``backlog(t)`` reports true queue depth to the
 queue-aware controller mode.
+
+Scheduling (``scheduler=``, DESIGN.md §Scheduling): the order in which
+queued requests claim slots — and how prefill interleaves with decode — is a
+pluggable ``SchedulerAPI`` policy (``repro.serving.sched``): ``"fifo"``
+(default, the legacy tick byte-for-byte), ``"edf"`` (earliest-deadline-first
+admission over ``Request.deadline``), and ``"chunked"`` (EDF + chunked
+prefill: prompts prefill in ``prefill_chunk``-token chunks interleaved with
+decode chunks, so no resident decode step waits longer than one chunk —
+no head-of-line blocking behind long prompts). ``preemption=`` optionally
+retires deadline-hopeless in-service requests so feasible waiters run:
+``"requeue"`` resumes them later via prefill continuation with every
+generated token preserved; ``"drop"`` completes them early as ``dropped``.
 
 Variant loading (init + jit warm-up of prefill, the decode chunk, and the
 slot-admission scatter) happens on first use — that IS the readiness time
@@ -57,7 +69,9 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, field
+from typing import (Callable, Deque, Dict, List, Mapping, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -71,12 +85,28 @@ from repro.configs.base import ModelConfig
 from repro.models.attention import PagedKVCache
 from repro.models.model import build_model
 from repro.serving.api import Request, summarize_requests
+from repro.serving.sched import make_scheduler
 
 __all__ = ["Request", "VariantBackend", "PagedVariantBackend",
            "InProcessServingEngine"]
 
 # Batch axis of each cache leaf (k/v/conv/ssd carry a leading layer axis).
 _CACHE_BATCH_AXIS = {"pos": 0, "k": 1, "v": 1, "conv": 1, "ssd": 1, "enc": 0}
+
+
+@dataclass
+class _PrefillJob:
+    """Host-side progress of one slot's chunked prefill (DESIGN.md
+    §Scheduling): ``seq`` is everything that must be in the cache before
+    decode resumes — the prompt for a fresh request, prompt + all-but-last
+    generated token for a preempted one (``resume_tok`` is that last token,
+    fed to decode instead of the prefill argmax; ``gen`` seeds
+    ``slot_tokens`` so no generated token is lost or duplicated)."""
+    req: Request
+    seq: np.ndarray               # tokens to prefill (int64)
+    pos: int = 0                  # next seq index to feed
+    resume_tok: Optional[int] = None
+    gen: List[int] = field(default_factory=list)
 
 
 class VariantBackend:
@@ -93,7 +123,9 @@ class VariantBackend:
     def __init__(self, name: str, cfg: ModelConfig, accuracy: float,
                  max_batch: int = 8, prompt_len: int = 32, max_new: int = 16,
                  seed: int = 0, decode_chunk: int = 4,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, chunked: bool = False,
+                 prefill_chunk_tokens: int = 16, preemption: str = "none",
+                 clock: Callable[[], float] = time.time):
         self.name = name
         if use_pallas and not cfg.use_pallas:
             cfg = cfg.replace(use_pallas=True)
@@ -103,7 +135,23 @@ class VariantBackend:
         self.prompt_len = prompt_len
         self.max_new = max_new
         self.decode_chunk = max(1, min(decode_chunk, max_new))
+        self.clock = clock       # every service/completion stamp uses this
+        # chunked-prefill machinery is built when the scheduler interleaves
+        # prefill chunks with decode OR when preemption is on (resume = a
+        # prefill continuation over prompt + preserved tokens); right-sized
+        # admission (true prompt length, not padded) only under the chunked
+        # scheduler itself — resume under monolithic admission must rebuild
+        # the padded cache it preempted (see admit_chunked)
+        self.preemption = preemption
+        self.right_sized = chunked
+        self.chunked = chunked or preemption != "none"
+        self.prefill_chunk_tokens = max(1, prefill_chunk_tokens)
         self.model = build_model(cfg)
+        if self.chunked:
+            assert self.model.supports_chunked_prefill(), \
+                (f"scheduler needs prefill continuation, unsupported for "
+                 f"config {cfg.name!r} (needs a pure-attention family "
+                 f"without sliding window)")
         self.units = 1
         self.slot_cap: Optional[int] = None   # units -> concurrency (enforced
         # only when the engine runs with enforce_units; see free_slots)
@@ -111,9 +159,16 @@ class VariantBackend:
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_remaining = np.zeros((max_batch,), np.int64)
         self.slot_tokens: List[List[int]] = [[] for _ in range(max_batch)]
+        # host mirror of each bound row's device position (the paged backend
+        # buckets on it; chunked fused ticks feed it as the continuation
+        # offset) — maintained through admit/chunk/decode for bound rows
+        self.slot_pos = np.zeros((max_batch,), np.int64)
+        self._prefilling: Dict[int, _PrefillJob] = {}   # slot -> progress
         t0 = time.time()
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self._build_state()                  # cache + jit warm-up = readiness
+        if self.chunked:
+            self._build_chunk_state()        # prefill-continuation jits too
         self.readiness_s = time.time() - t0
 
     def _build_state(self) -> None:
@@ -150,6 +205,22 @@ class VariantBackend:
             jnp.zeros((self.max_batch,), bool))
         self.slot_req = [None] * self.max_batch          # warm-up left no state
 
+    def _build_chunk_state(self) -> None:
+        """Chunked-prefill machinery (built only when the scheduler or
+        preemption needs it): ONE prefill-continuation jit, donated and
+        warmed as part of readiness. It serves fused ticks — mid-prefill
+        rows consume a chunk of prompt tokens while decoding rows consume
+        their single current token (decode IS a 1-token continuation), so a
+        tick never pays a prefill call *and* a decode call."""
+        self._prefill_chunk = jax.jit(self._prefill_chunk_fn,
+                                      donate_argnums=(1,))
+        B, ck = self.max_batch, self.prefill_chunk_tokens
+        zeros = jnp.zeros((B,), jnp.int32)
+        self.cur_tok, self.cache = self._prefill_chunk(
+            self.params, self.cache, self.cur_tok,
+            jnp.zeros((B, ck), jnp.int32), zeros, zeros,
+            jnp.zeros((B,), bool))
+
     # ------------------------------------------------------------- jitted fns
     def _chunk_scan(self, cache, tok, step_fn):
         """``decode_chunk`` greedy steps of ``step_fn(cache, tok)`` as one
@@ -173,6 +244,21 @@ class VariantBackend:
     def _decode_chunk_fn(self, params, cache, tok):
         return self._chunk_scan(
             cache, tok, lambda c, t: self.model.decode_step(params, c, t))
+
+    def _model_prefill_chunk(self, params, cache, tokens, start, n_valid):
+        """KV-discipline hook: the paged backend swaps in the pool form."""
+        return self.model.prefill_chunk(params, cache, tokens, start, n_valid)
+
+    def _prefill_chunk_fn(self, params, cache, cur_tok, tokens, start,
+                          n_valid, set_mask):
+        """One prefill-continuation chunk for every mid-prefill row, plus the
+        first greedy token for rows whose prompt completes here
+        (``set_mask``) — one executable regardless of which rows are
+        prefilling."""
+        logits, cache = self._model_prefill_chunk(params, cache, tokens,
+                                                  start, n_valid)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.where(set_mask, tok, cur_tok), cache
 
     @staticmethod
     def _admit_merge_fn(cache, new_cache, cur_tok, new_tok, src, mask):
@@ -231,7 +317,7 @@ class VariantBackend:
         before is queue wait), build the (rows, prompt_len) prompt matrix,
         prefill, take the first greedy token. Returns (first tokens (rows,)
         device, same as np, prefill cache)."""
-        t_service = time.time()
+        t_service = self.clock()
         for r in reqs:                   # service (= prefill + decode) begins
             r.service_start = t_service
         prompts = np.zeros((rows, self.prompt_len), np.int64)
@@ -253,6 +339,7 @@ class VariantBackend:
         self.slot_req[slot] = r
         self.slot_remaining[slot] = self._budget(r) - 1
         self.slot_tokens[slot] = [tok0]
+        self.slot_pos[slot] = self.prompt_len     # device pos after prefill
 
     def admit(self, reqs: List[Request], now: float) -> List[Request]:
         """Prefill ``reqs`` (≤ free slots) and join them to the batch.
@@ -280,8 +367,162 @@ class VariantBackend:
             jnp.asarray(src), jnp.asarray(mask))
         return finished
 
+    # ----------------------------------------------- chunked-prefill path
+    def admit_chunked(self, reqs: List[Request], now: float) -> List[Request]:
+        """Chunked admission: bind a slot and queue the prompt for prefill
+        continuation — no device work here; the prefill advances one chunk
+        per fused tick, interleaved with decode. A preempted request's
+        preserved tokens extend the prefill sequence (see ``_PrefillJob``).
+        Returns [] — nothing finishes at bind time.
+
+        Prefill is **right-sized to the actual prompt** when the scheduler
+        is chunked: a 16-token prompt costs one chunk, not a padded
+        ``prompt_len`` prefill (the monolithic path always pads). When this
+        machinery serves only preemption resume under monolithic admission,
+        the sequence IS zero-padded to ``prompt_len`` so the rebuilt cache
+        bit-matches the original padded prefill and resumed greedy tokens
+        cannot diverge."""
+        free = self.free_slots
+        assert len(reqs) <= len(free)
+        t_service = self.clock()
+        for j, r in enumerate(reqs):
+            slot = free[j]
+            if r.service_start <= 0.0:   # resume keeps the original stamp
+                r.service_start = t_service
+            toks = np.asarray(r.tokens[:self.prompt_len], np.int64)
+            if self.right_sized:
+                seq = toks if len(toks) else np.zeros((1,), np.int64)
+            else:                        # monolithic-parity padded sequence
+                seq = np.zeros((self.prompt_len,), np.int64)
+                seq[:len(toks)] = toks
+            resume_tok: Optional[int] = None
+            gen: List[int] = []
+            if r.resume_tokens:
+                gen = [int(t) for t in r.resume_tokens[:-1]]
+                resume_tok = int(r.resume_tokens[-1])
+                seq = np.concatenate([seq, np.asarray(gen, np.int64)])
+            self.slot_req[slot] = r
+            self.slot_remaining[slot] = 0      # set when prefill completes
+            self.slot_tokens[slot] = []
+            self.slot_pos[slot] = 0
+            self._prefilling[slot] = _PrefillJob(req=r, seq=seq,
+                                                 resume_tok=resume_tok,
+                                                 gen=gen)
+            self._bind_chunked_slot(slot)      # paged: allocate pages now
+        return []
+
+    def _bind_chunked_slot(self, slot: int) -> None:
+        """KV-discipline hook at chunked bind time (dense: nothing to do —
+        the resident cache rows are permanent)."""
+
+    def fused_chunk_step(self, now: float) -> List[Request]:
+        """One fused tick (Sarathi-style stall-free batching): every
+        mid-prefill row advances by one prompt chunk while every decoding
+        row advances by exactly one token — a decode step IS a one-token
+        prefill continuation (feed the current token at the current
+        position, take the argmax of its logits) — all in a single jitted
+        call. A resident decode therefore never waits on more than one
+        chunk of someone else's prompt, and a tick never pays a prefill
+        call *and* a decode call. Returns requests finished here."""
+        B, ck = self.max_batch, self.prefill_chunk_tokens
+        tokens = np.zeros((B, ck), np.int64)
+        start = np.zeros((B,), np.int32)
+        n_valid = np.zeros((B,), np.int32)
+        set_mask = np.zeros((B,), bool)
+        for slot, job in self._prefilling.items():
+            nv = min(len(job.seq) - job.pos, ck)
+            tokens[slot, :nv] = job.seq[job.pos:job.pos + nv]
+            start[slot] = job.pos
+            n_valid[slot] = nv
+            # fresh rows completing here take the chunk's argmax as their
+            # first generated token; resumed rows already know theirs
+            set_mask[slot] = (job.pos + nv >= len(job.seq)
+                              and job.resume_tok is None)
+        decode_rows = [s for s, r in enumerate(self.slot_req)
+                       if r is not None and s not in self._prefilling]
+        for s in decode_rows:
+            tokens[s, 0] = self.slot_tokens[s][-1]   # == cur_tok[s]
+            start[s] = self.slot_pos[s]
+            n_valid[s] = 1
+            set_mask[s] = True                       # argmax = next token
+        self.cur_tok, self.cache = self._prefill_chunk(
+            self.params, self.cache, self.cur_tok, jnp.asarray(tokens),
+            jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(set_mask))
+        tok_np = np.asarray(self.cur_tok)
+        finished: List[Request] = []
+        resume_sets: List[Tuple[int, int]] = []
+        for slot, job in list(self._prefilling.items()):
+            job.pos += int(n_valid[slot])
+            self.slot_pos[slot] = job.pos
+            if job.pos < len(job.seq):
+                continue
+            del self._prefilling[slot]
+            r = job.req
+            if job.resume_tok is not None:
+                tok0 = job.resume_tok
+                resume_sets.append((slot, tok0))
+            else:
+                tok0 = int(tok_np[slot])
+            gen = job.gen + [tok0]
+            if len(gen) >= self._budget(r):
+                self._finish(r, gen, now)
+                finished.append(r)
+                self.slot_req[slot] = None
+                self.slot_tokens[slot] = []
+                self._retire_slot(slot)
+            else:
+                self.slot_remaining[slot] = self._budget(r) - len(gen)
+                self.slot_tokens[slot] = gen
+        for s in decode_rows:
+            self.slot_pos[s] += 1
+            self.slot_tokens[s].append(int(tok_np[s]))
+            self.slot_remaining[s] -= 1
+            if self.slot_remaining[s] <= 0:
+                r = self.slot_req[s]
+                self._finish(r, self.slot_tokens[s], now)
+                finished.append(r)
+                self.slot_req[s] = None
+                self.slot_tokens[s] = []
+                self._retire_slot(s)
+        if resume_sets:    # resumed rows decode from their preserved token
+            self.cur_tok = self.cur_tok.at[
+                jnp.asarray([s for s, _ in resume_sets])].set(
+                jnp.asarray([t for _, t in resume_sets], jnp.int32))
+        return finished
+
+    def preempt(self, r: Request, now: float) -> str:
+        """Retire ``r`` early (scheduler-selected victim): its slot — and
+        pages, for paged backends — is freed, the tokens it generated are
+        preserved on ``r.resume_tokens``. Returns "requeued" (caller puts it
+        back on the queue; it later resumes exactly where it stopped) or
+        "dropped" (completed now with partial output, ``dropped=True``)."""
+        slot = next(s for s, q in enumerate(self.slot_req) if q is r)
+        job = self._prefilling.pop(slot, None)
+        if job is not None:              # mid-prefill: preserved tokens are
+            gen = job.gen + ([] if job.resume_tok is None
+                             else [job.resume_tok])   # whatever it resumed with
+        else:
+            gen = list(self.slot_tokens[slot])
+        self.slot_req[slot] = None
+        self.slot_tokens[slot] = []
+        self.slot_remaining[slot] = 0
+        self._retire_slot(slot)
+        r.preemptions += 1
+        r.resume_tokens = gen
+        if self.preemption == "drop":
+            r.output = np.asarray(gen, np.int64)
+            r.completion = self.clock()
+            r.accuracy = self.accuracy
+            r.dropped = True
+            return "dropped"
+        return "requeued"
+
     def decode_step_batch(self, now: float) -> List[Request]:
-        """One jitted chunk of decode steps; retire finished slots."""
+        """One jitted chunk of decode steps; retire finished slots. Never
+        called with rows mid-prefill — those ticks are fused
+        (``fused_chunk_step``); the plain decode path stays the fast,
+        bucket-aware one."""
+        assert not self._prefilling, "mid-prefill rows need the fused tick"
         if self.active_slots == 0:
             return []
         t0 = time.time()
@@ -307,6 +548,7 @@ class VariantBackend:
     def _run_decode_chunk(self) -> np.ndarray:
         self.cur_tok, self.cache, toks = self._decode_chunk(
             self.params, self.cache, self.cur_tok)
+        self.slot_pos += self.decode_chunk   # device advanced every row
         return np.asarray(toks)
 
     def _retire_slot(self, slot: int) -> None:
@@ -316,17 +558,23 @@ class VariantBackend:
 
     def _finish(self, r: Request, tokens: List[int], now: float) -> None:
         r.output = np.asarray(tokens[:min(r.max_new, self.max_new)], np.int64)
-        r.completion = time.time()
+        r.completion = self.clock()
         r.accuracy = self.accuracy
 
     def drain_slots(self, now: float) -> List[Request]:
-        """Run decode chunks until every in-flight sequence completes
+        """Run prefill/decode until every in-flight sequence completes
         (connection draining before retirement — create-then-remove)."""
         done: List[Request] = []
         steps = 0
         max_steps = self.max_new // self.decode_chunk + 2
+        if self.chunked:   # fused ticks: 1 decode token while chunks finish
+            max_steps += -(-(self.prompt_len + self.max_new)
+                           // self.prefill_chunk_tokens) + self.max_new + 2
         while self.active_slots and steps < max_steps:
-            done.extend(self.decode_step_batch(now))
+            if self._prefilling:
+                done.extend(self.fused_chunk_step(now))
+            else:
+                done.extend(self.decode_step_batch(now))
             steps += 1
         return done
 
@@ -381,10 +629,6 @@ class PagedVariantBackend(VariantBackend):
         self.cache = model.init_paged_cache(
             self.max_batch, pool_pages, ps, self.pages_per_slot)
         self.cur_tok = jnp.zeros((self.max_batch,), jnp.int32)
-        # host mirror of cache["pos"] (the device advances every row by
-        # exactly `decode_chunk` per chunk) — picks the live-page bucket
-        self.slot_pos = np.zeros((self.max_batch,), np.int64)
-
         self.batch_buckets = _bucket_ladder(1, self.max_batch)
         first_pages = self.pool.pages_needed(self.prompt_len + self.decode_chunk)
         self.page_buckets = _bucket_ladder(first_pages, self.pages_per_slot)
@@ -416,6 +660,11 @@ class PagedVariantBackend(VariantBackend):
             self.cur_tok, self.cache, _ = self._decode_chunk_p(
                 self.params, self.cache, self.cur_tok, nb)
 
+    # chunked machinery: the base ``_build_chunk_state`` works unchanged —
+    # ``_model_prefill_chunk`` below is the only paged-specific piece (the
+    # pool-form continuation attends the row's whole block table: one
+    # executable; fused ticks are already bounded by the chunk size)
+
     # ------------------------------------------------------------- jitted fns
     def _paged_chunk_fn(self, params, cache, tok, n_pages: int):
         """``decode_chunk`` paged decode steps as one traced scan at the
@@ -425,6 +674,10 @@ class PagedVariantBackend(VariantBackend):
             cache, tok,
             lambda c, t: self.model.decode_step_paged(params, c, t,
                                                       n_pages=n_pages))
+
+    def _model_prefill_chunk(self, params, cache, tokens, start, n_valid):
+        return self.model.prefill_chunk_paged(params, cache, tokens, start,
+                                              n_valid)
 
     # ------------------------------------------------- continuous-batch path
     @property
@@ -467,12 +720,20 @@ class PagedVariantBackend(VariantBackend):
             assert pages is not None     # free_slots gated on the pool
             page_ids[j] = pages
             dest[j] = slot
-            self._bind_slot(r, slot, tok0)
-            self.slot_pos[slot] = self.prompt_len
+            self._bind_slot(r, slot, tok0)   # slot_pos mirror set there
         self.cache, self.cur_tok = self._paged_admit(
             self.cache, pref, self.cur_tok, first,
             jnp.asarray(page_ids), jnp.asarray(dest))
         return finished
+
+    def _bind_chunked_slot(self, slot: int) -> None:
+        """Chunked admission owns the slot's full page budget up front (the
+        all-or-nothing discipline of ``admit``; ``free_slots`` already gated
+        the bind on pool capacity)."""
+        pages = self.pool.alloc(slot, self.pages_per_slot)
+        assert pages is not None
+        self.cache["pt"] = self.cache["pt"].at[slot].set(
+            jnp.asarray(pages, jnp.int32))
 
     def _run_decode_chunk(self) -> np.ndarray:
         live = [self.slot_pos[s] for s, r in enumerate(self.slot_req)
@@ -515,11 +776,28 @@ class InProcessServingEngine:
                  nodes: Optional[Sequence[Node]] = None,
                  placement="first-fit", router="p2c", replica_size: int = 1,
                  kv_cache: str = "dense", kv_page_size: int = 16,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 scheduler="fifo", prefill_chunk: int = 16,
+                 preemption: str = "none",
+                 clock: Callable[[], float] = time.time):
         assert mode in ("continuous", "pump"), mode
         assert kv_cache in ("dense", "paged"), kv_cache
         assert kv_cache == "dense" or mode == "continuous", \
             "paged KV backends serve in continuous mode only"
+        assert preemption in ("none", "requeue", "drop"), preemption
+        # scheduling discipline between each backend's queue and its slots
+        # (DESIGN.md §Scheduling): "fifo" = the legacy behavior; "edf" =
+        # deadline-order admission; "chunked" = EDF + chunked prefill.
+        # preemption= retires deadline-hopeless residents for feasible
+        # waiters ("requeue" resumes them later with tokens preserved,
+        # "drop" completes them early as dropped).
+        self.sched = make_scheduler(scheduler)
+        self.prefill_chunk = prefill_chunk
+        self.preemption = preemption
+        self.clock = clock   # every arrival/service/completion stamp source
+        assert mode == "continuous" or (
+            not self.sched.chunked and preemption == "none"), \
+            "chunked scheduling/preemption need the continuous engine"
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
         self.prompt_len = prompt_len
@@ -564,7 +842,9 @@ class InProcessServingEngine:
         cfg, acc = self.variant_defs[variant]
         kw = dict(max_batch=self.max_batch, prompt_len=self.prompt_len,
                   max_new=self.max_new, decode_chunk=self.decode_chunk,
-                  use_pallas=self.use_pallas)
+                  use_pallas=self.use_pallas, chunked=self.sched.chunked,
+                  prefill_chunk_tokens=self.prefill_chunk,
+                  preemption=self.preemption, clock=self.clock)
         if self.kv_cache == "paged":
             return PagedVariantBackend(variant, cfg, acc,
                                        page_size=self.kv_page_size,
@@ -768,14 +1048,42 @@ class InProcessServingEngine:
         return self._pump_legacy(now)
 
     def _tick(self, now: float) -> int:
+        """One scheduler-driven engine tick per backend, in four phases:
+        preempt (optional) → admit (scheduler-ordered) → prefill chunk
+        (chunked only) → decode chunk. With the default FIFO scheduler and
+        no preemption this is exactly the legacy admit+decode tick."""
         self._rebalance_queues()
         done_before = len(self.done)
         for name, b in self.backends.items():
             q = self.queues.get(name, deque())
-            joiners = [q.popleft() for _ in range(min(len(q),
-                                                      len(b.free_slots)))]
-            self.done.extend(b.admit(joiners, now))
-            self.done.extend(b.decode_step_batch(now))
+            if self.preemption != "none" and q:
+                resident = [r for r in b.slot_req if r is not None]
+                for v in self.sched.select_victims(resident, list(q), now,
+                                                   len(b.free_slots)):
+                    if b.preempt(v, now) == "dropped":
+                        self.done.append(v)
+                    else:               # resumes later, tokens preserved
+                        q.append(v)
+            free_n = len(b.free_slots)
+            if q and free_n:
+                ordered = self.sched.order(list(q), now)
+                joiners, rest = ordered[:free_n], ordered[free_n:]
+                q.clear()
+                q.extend(rest)
+                if self.sched.chunked:
+                    self.done.extend(b.admit_chunked(joiners, now))
+                else:
+                    # resumed requests need prefill continuation even under
+                    # monolithic admission (preemption builds the machinery)
+                    fresh = [r for r in joiners if not r.resume_tokens]
+                    self.done.extend(b.admit(fresh, now))
+                    resumed = [r for r in joiners if r.resume_tokens]
+                    if resumed:
+                        self.done.extend(b.admit_chunked(resumed, now))
+            if b._prefilling:     # fused tick: prefill chunks + 1-token decodes
+                self.done.extend(b.fused_chunk_step(now))
+            else:                 # pure decode: the fast bucket-aware chunk
+                self.done.extend(b.decode_step_batch(now))
         return len(self.done) - done_before
 
     def drain(self, now: float, max_ticks: int = 10_000) -> int:
@@ -802,7 +1110,7 @@ class InProcessServingEngine:
             q.clear()
             for i in range(0, len(reqs), b.max_batch):
                 chunk = reqs[i:i + b.max_batch]
-                t_service = time.time()
+                t_service = self.clock()
                 for r in chunk:
                     r.service_start = t_service
                 prompts = np.stack([
@@ -811,7 +1119,7 @@ class InProcessServingEngine:
                     for r in chunk])
                 gen = min(max(r.max_new for r in chunk), self.max_new)
                 out = b.generate(prompts, max_new=gen)
-                tdone = time.time()
+                tdone = self.clock()
                 for j, r in enumerate(chunk):
                     r.output = out[j, :min(r.max_new, self.max_new)]
                     r.completion = tdone
@@ -829,7 +1137,9 @@ class InProcessServingEngine:
             slo_ms=slo_ms, best_accuracy=best_accuracy,
             cost_samples=self.cost_log,
             queue_ms=[r.queue_wait_ms for r in self.done],
-            service_ms=[r.service_ms for r in self.done])
+            service_ms=[r.service_ms for r in self.done],
+            slo_list_ms=[r.slo_ms for r in self.done],
+            dropped=[r.dropped for r in self.done])
         if out:
             out["rejected"] = self.rejected
             # accepted but not yet served (queued + in flight) — nonzero when

@@ -29,10 +29,24 @@ is rolling create-then-remove at replica granularity, and faults
 dispatches from the crash instant forward; requests the DES already
 scheduled keep their computed completions (synchronous-serve limitation,
 noted in DESIGN.md §Cluster fabric).
+
+Scheduling (``scheduler=``): the queue discipline mirrors the real engine's
+scheduler layer (DESIGN.md §Scheduling) so controller experiments see the
+same queueing semantics in DES and real execution. ``"fifo"`` (default)
+serves at submit time in arrival order — the original behavior,
+byte-for-byte. ``"edf"``/``"chunked"`` hold arrivals in per-backend
+pending heaps and assign them to servers in **earliest-deadline-first**
+order at each server-free instant — already-expired deadlines after every
+still-feasible one (the engine's expired-last EDF), and only requests
+already arrived by that instant are eligible (no lookahead). Chunked
+prefill itself is a real-execution concern (DES service times are scalar),
+so ``"chunked"`` maps to EDF ordering here; preemption is likewise
+engine-only.
 """
 from __future__ import annotations
 
 import heapq
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Set
 
@@ -44,6 +58,7 @@ from repro.cluster.replicas import Replica, ReplicaFabric
 from repro.cluster.router import ReplicaView, RoutingAPI, make_router
 from repro.core.profiles import VariantProfile
 from repro.serving.api import Request, summarize_requests
+from repro.serving.sched import make_scheduler
 
 RESIZE_DELAY_S = 1.0
 # Profiled th(n) is the *SLO-sustained* rate (the paper measures throughput at
@@ -128,6 +143,7 @@ class ServedRequest:
     backend: str
     accuracy: float
     service_start: float = 0.0   # 0.0 = dropped/never served
+    slo_ms: float = 0.0          # per-request SLO (goodput metric); <=0=none
 
     @property
     def latency_ms(self) -> float:
@@ -163,11 +179,22 @@ class SimCluster:
     def __init__(self, profiles: Mapping[str, VariantProfile],
                  nodes: Optional[Sequence[Node]] = None,
                  placement="first-fit", router="p2c",
-                 replica_size: int = 4):
+                 replica_size: int = 4, scheduler="fifo"):
         self.profiles = dict(profiles)
         self.backends: Dict[str, Backend] = {}
         self.requests: List[ServedRequest] = []
         self.cost_samples: List[tuple] = []    # (t, provisioned units)
+        # queue discipline mirroring the engine's scheduler layer (module
+        # docstring): "fifo" serves at submit; "edf"/"chunked" hold arrivals
+        # in per-backend pending heaps assigned deadline-first
+        self.sched = make_scheduler(scheduler)
+        self._edf = self.sched.name != "fifo"
+        # per backend key: two heaps of (deadline, seq, arrival, slo_ms) —
+        # still-feasible vs already-expired entries (the engine's EDF serves
+        # expired requests LAST; see _flush_pending) — plus an arrival heap
+        # and a live-seq set for lazy deletion
+        self._pending: Dict[str, Dict[str, object]] = {}
+        self._pseq = itertools.count()
         self.fabric: Optional[ReplicaFabric] = None
         self.router: Optional[RoutingAPI] = None
         if nodes is not None:
@@ -223,12 +250,14 @@ class SimCluster:
 
     def backlog(self, t: float) -> float:
         """Queued-not-in-service requests (shared ``ClusterAPI`` semantics:
-        admitted work not yet being processed — see ``serving/api.py``)."""
+        admitted work not yet being processed — see ``serving/api.py``).
+        Under deadline-aware scheduling, still-pending (unassigned) requests
+        count too — they are admitted work waiting for a server."""
         if self.fabric is not None:
             return sum(r.handle.queued(t) for r in self.fabric.replicas.values()
-                       if r.live(t))
+                       if r.live(t)) + self._pending_depth()
         return sum(b.queued(t) for b in self.backends.values()
-                   if b.retire_at > t)
+                   if b.retire_at > t) + self._pending_depth()
 
     def capacity_factor(self, t: float) -> float:
         """Fraction of the target allocation actually live (1.0 without a
@@ -272,8 +301,9 @@ class SimCluster:
     # ---------------------------------------------------------------- serving
     def submit(self, req: Request, backend: Optional[str]) -> bool:
         """ServingAPI parity with the real engine: a simulated request needs
-        only its arrival time — prompt tokens don't affect queueing."""
-        self.dispatch(req.arrival, backend or None)
+        only its arrival time (and SLO, for deadline-aware scheduling) —
+        prompt tokens don't affect queueing."""
+        self.dispatch(req.arrival, backend or None, slo_ms=req.slo_ms)
         return True
 
     def step(self, now: float) -> int:
@@ -281,23 +311,135 @@ class SimCluster:
         return 0
 
     def drain(self, now: float) -> int:
-        """No-op: nothing is ever left in flight between submits."""
-        return 0
+        """FIFO: no-op (nothing is left in flight between submits). EDF:
+        assign every still-pending request to its backend's servers."""
+        if not self._edf:
+            return 0
+        n0 = len(self.requests)
+        self._flush_all()
+        return len(self.requests) - n0
+
+    # ----------------------------------------- deadline-aware pending queues
+    @staticmethod
+    def _pop_eligible(heap: List[tuple], live: set, t: float):
+        """Earliest-deadline entry with ``arrival <= t``, removed from the
+        heap; None if no such entry. Dead (already-assigned) tops are
+        dropped lazily. A top that arrived after ``t`` falls back to a
+        linear scan — rare, because flushes run at every dispatch so pending
+        arrivals almost always precede the assignment instant."""
+        while heap and heap[0][1] not in live:
+            heapq.heappop(heap)
+        if not heap:
+            return None
+        if heap[0][2] <= t:
+            return heapq.heappop(heap)
+        elig = [e for e in heap if e[1] in live and e[2] <= t]
+        if not elig:
+            return None
+        e = min(elig)
+        heap.remove(e)
+        heapq.heapify(heap)
+        return e
+
+    def _flush_pending(self, key: str, b: Backend, upto: float,
+                       accuracy: float) -> None:
+        """Assign pending requests to ``b``'s servers up to time ``upto``.
+        At each assignment instant — the later of the earliest-free server
+        and the earliest pending arrival — the earliest-deadline request
+        *already arrived by that instant* is served, with already-expired
+        deadlines served after every still-feasible one (the engine's
+        ``_edf_key`` semantics: spending a server on a hopeless request
+        before a feasible one converts one violation into two). No
+        lookahead: later arrivals were not in the queue when the server
+        came free, whatever their deadline."""
+        pend = self._pending.get(key)
+        if not pend:
+            return
+        feas, exp, arr, live = (pend["feas"], pend["exp"], pend["arr"],
+                                pend["live"])
+        while live:
+            t_free = max(b.server_free[0], b.ready_at)
+            while arr and arr[0][1] not in live:
+                heapq.heappop(arr)
+            t_assign = max(t_free, arr[0][0])
+            if t_assign > upto:
+                break
+            # deadlines that have passed by the assignment instant migrate
+            # to the expired heap (one-way: t_assign is non-decreasing)
+            while feas:
+                if feas[0][1] not in live:
+                    heapq.heappop(feas)
+                elif feas[0][0] <= t_assign:
+                    heapq.heappush(exp, heapq.heappop(feas))
+                else:
+                    break
+            e = self._pop_eligible(feas, live, t_assign)
+            if e is None:
+                e = self._pop_eligible(exp, live, t_assign)
+            assert e is not None   # the min-arrival live entry is eligible
+            live.discard(e[1])
+            start, done = b.serve_timed(e[2])
+            self.requests.append(ServedRequest(e[2], done, key, accuracy,
+                                               service_start=start,
+                                               slo_ms=e[3]))
+
+    def _enqueue_pending(self, key: str, arrival: float, slo_ms: float
+                        ) -> None:
+        dl = arrival + slo_ms / 1000.0 if slo_ms > 0 else float("inf")
+        pend = self._pending.setdefault(
+            key, {"feas": [], "exp": [], "arr": [], "live": set()})
+        seq = next(self._pseq)
+        heapq.heappush(pend["feas"], (dl, seq, arrival, slo_ms))
+        heapq.heappush(pend["arr"], (arrival, seq))
+        pend["live"].add(seq)
+
+    def _flush_all(self) -> None:
+        for key, pend in self._pending.items():
+            if not pend["live"]:
+                continue
+            if self.fabric is not None:
+                rep = self.fabric.replicas.get(key)
+                if rep is not None and rep.handle is not None:
+                    self._flush_pending(key, rep.handle, float("inf"),
+                                        self.profiles[rep.variant].accuracy)
+                    continue
+            elif key in self.backends:
+                b = self.backends[key]
+                self._flush_pending(key, b, float("inf"), b.profile.accuracy)
+                continue
+            live = pend["live"]          # backend gone: orphaned pendings
+            for e in list(pend["feas"]) + list(pend["exp"]):
+                if e[1] in live:
+                    self.requests.append(ServedRequest(e[2], e[2] + 10.0,
+                                                       "none", 0.0,
+                                                       slo_ms=e[3]))
+            pend["feas"].clear()
+            pend["exp"].clear()
+            pend["arr"].clear()
+            live.clear()
+
+    def _pending_depth(self) -> float:
+        return float(sum(len(p["live"]) for p in self._pending.values()))
 
     def _purge(self, t: float) -> None:
         for m in [m for m, b in self.backends.items() if b.retire_at <= t]:
+            b = self.backends[m]
+            # a retiring backend first serves what was assigned to it —
+            # accepted work is never dropped by a switch (engine parity)
+            self._flush_pending(m, b, float("inf"), b.profile.accuracy)
             del self.backends[m]
 
-    def dispatch(self, arrival: float, backend_name: Optional[str]) -> None:
+    def dispatch(self, arrival: float, backend_name: Optional[str],
+                 slo_ms: float = 0.0) -> None:
         if self.fabric is not None:
-            self._dispatch_fabric(arrival, backend_name)
+            self._dispatch_fabric(arrival, backend_name, slo_ms)
             return
         self._purge(arrival)
         candidates = {m: b for m, b in self.backends.items()
                       if b.retire_at > arrival}
         if not candidates:
             self.requests.append(ServedRequest(arrival, arrival + 10.0,
-                                               "none", 0.0))
+                                               "none", 0.0, slo_ms=slo_ms))
             return
         b = candidates.get(backend_name) if backend_name else None
         if b is None or not b.ready(arrival):
@@ -306,10 +448,15 @@ class SimCluster:
             name = min(pool, key=lambda m: pool[m].queue_delay(arrival))
             b = pool[name]
             backend_name = name
+        if self._edf:
+            self._enqueue_pending(backend_name, arrival, slo_ms)
+            self._flush_pending(backend_name, b, arrival, b.profile.accuracy)
+            return
         start, done = b.serve_timed(arrival)
         self.requests.append(ServedRequest(arrival, done, backend_name,
                                            b.profile.accuracy,
-                                           service_start=start))
+                                           service_start=start,
+                                           slo_ms=slo_ms))
 
     # ----------------------------------------------------- two-level routing
     def _pick_replica(self, variant: str, arrival: float) -> Optional[Replica]:
@@ -325,13 +472,13 @@ class SimCluster:
         rid = self.router.pick(views)
         return self.fabric.replicas[rid]
 
-    def _dispatch_fabric(self, arrival: float,
-                         backend_name: Optional[str]) -> None:
+    def _dispatch_fabric(self, arrival: float, backend_name: Optional[str],
+                         slo_ms: float = 0.0) -> None:
         self.fabric.purge(arrival)
         live = [r for r in self.fabric.replicas.values() if r.live(arrival)]
         if not live:
             self.requests.append(ServedRequest(arrival, arrival + 10.0,
-                                               "none", 0.0))
+                                               "none", 0.0, slo_ms=slo_ms))
             return
         variant = backend_name
         ready = [r for r in live if r.ready(arrival)]
@@ -343,10 +490,15 @@ class SimCluster:
             variant = min(pool,
                           key=lambda r: r.handle.queue_delay(arrival)).variant
         rep = self._pick_replica(variant, arrival)
+        if self._edf:
+            self._enqueue_pending(rep.rid, arrival, slo_ms)
+            self._flush_pending(rep.rid, rep.handle, arrival,
+                                self.profiles[rep.variant].accuracy)
+            return
         start, done = rep.handle.serve_timed(arrival)
         self.requests.append(ServedRequest(
             arrival, done, rep.rid, self.profiles[rep.variant].accuracy,
-            service_start=start))
+            service_start=start, slo_ms=slo_ms))
 
     def dispatch_fanout(self, arrival: float, backend_names, accuracy: float
                         ) -> None:
@@ -399,6 +551,8 @@ class SimCluster:
     def summarize(self, slo_ms: float, best_accuracy: float,
                   window_s: float = 10.0) -> Dict:
         """Paper evaluation summary (§6) via the shared metric helper."""
+        if self._edf:
+            self._flush_all()            # score still-pending work too
         return summarize_requests(
             [r.arrival for r in self.requests],
             [r.latency_ms for r in self.requests],
@@ -406,4 +560,5 @@ class SimCluster:
             slo_ms=slo_ms, best_accuracy=best_accuracy,
             cost_samples=self.cost_samples, window_s=window_s,
             queue_ms=[r.queue_wait_ms for r in self.requests],
-            service_ms=[r.service_ms for r in self.requests])
+            service_ms=[r.service_ms for r in self.requests],
+            slo_list_ms=[r.slo_ms for r in self.requests])

@@ -125,9 +125,12 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
             backend = controller.dispatcher.next_backend()
             # Rejected submissions (backpressure on the real engine) are
             # counted by that backend's summary ("rejected"); they are not
-            # scored as served requests. SimCluster never rejects.
+            # scored as served requests. SimCluster never rejects. Each
+            # request carries the experiment SLO as its deadline so
+            # deadline-aware schedulers (scheduler="edf"/"chunked" on the
+            # cluster) and the goodput metric see per-request deadlines.
             cluster.submit(Request(rid=rid, tokens=_NO_TOKENS, max_new=1,
-                                   arrival=a), backend)
+                                   arrival=a, slo_ms=slo_ms), backend)
             cluster.step(a)       # no-op on synchronous backends
 
     cluster.drain(arrivals[-1] if len(arrivals) else 0.0)

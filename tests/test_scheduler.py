@@ -1,0 +1,432 @@
+"""SLO-aware scheduling layer (DESIGN.md §Scheduling).
+
+Covers the scheduler contract across both backends:
+  * greedy-token parity: every kv_cache ∈ {dense, paged} × scheduler ∈
+    {fifo, edf, chunked} serves the same tokens as the seed FIFO path
+    (scheduling reorders and interleaves; it must never change outputs),
+  * EDF admission favors tight deadlines; property: no request starves
+    beyond a bounded number of ticks under random arrival orders/SLOs,
+  * preemption/resume preserves every generated token exactly (dense and
+    paged, pool leak-free at every tick), bounded by MAX_PREEMPTIONS,
+  * the chunked scheduler interleaves prefill with decode so resident
+    sequences progress while a long prompt is still prefilling,
+  * the wall-clock serving loop stamps arrival/service/completion from ONE
+    clock (regression: no cross-domain latencies),
+  * the DES mirrors the discipline: scheduler="edf" assigns pending work
+    deadline-first at each server-free instant.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.serving.api import Request, summarize_requests
+from repro.serving.driver import ElapsedClock, run_serving_loop, trace_load
+from repro.serving.engine import InProcessServingEngine
+from repro.serving.sched import (MAX_PREEMPTIONS, ChunkedScheduler,
+                                 EDFScheduler, FIFOScheduler, make_scheduler)
+
+VOCAB = 128
+MAX_NEW = 6
+
+
+def _variants(d_model=64):
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=d_model, d_ff=128, vocab_size=VOCAB)
+    return {"small": (base.replace(num_layers=2, name="small"), 70.0)}
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_new", MAX_NEW)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("kv_page_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    eng = InProcessServingEngine(_variants(), **kw)
+    eng.apply_allocation(0.0, {"small": 1})
+    return eng
+
+
+def _req(rid, prompt, slo_ms=0.0, arrival=0.0, max_new=MAX_NEW):
+    return Request(rid=rid, tokens=prompt, max_new=max_new, arrival=arrival,
+                   slo_ms=slo_ms)
+
+
+_RNG = np.random.default_rng(11)
+PROMPTS = [_RNG.integers(0, VOCAB, 8) for _ in range(6)]
+SLOS = [200.0, 50.0, 1000.0, 30.0, 500.0, 80.0]
+
+
+# ---------------------------------------------------------------- policies
+def test_make_scheduler_specs():
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("edf"), EDFScheduler)
+    ch = make_scheduler("chunked")
+    assert isinstance(ch, ChunkedScheduler) and ch.chunked
+    assert make_scheduler("chunked-fifo").name == "chunked-fifo"
+    assert make_scheduler(ch) is ch          # pass-through
+    with pytest.raises(ValueError):
+        make_scheduler("lifo")
+
+
+def test_edf_order_feasible_first_then_expired():
+    s = EDFScheduler()
+    now = 10.0
+    feas_late = _req(0, PROMPTS[0], slo_ms=90_000.0, arrival=5.0)
+    feas_soon = _req(1, PROMPTS[1], slo_ms=6_000.0, arrival=9.0)
+    expired = _req(2, PROMPTS[2], slo_ms=1_000.0, arrival=1.0)
+    ordered = s.order([feas_late, expired, feas_soon], now)
+    assert [r.rid for r in ordered] == [1, 0, 2]   # expired sorts last
+
+
+def test_fifo_order_is_identity_and_never_preempts():
+    s = FIFOScheduler()
+    reqs = [_req(i, PROMPTS[i], slo_ms=SLOS[i]) for i in range(4)]
+    assert s.order(reqs, 99.0) == reqs
+    assert s.select_victims(reqs, reqs, 99.0, 0) == []
+
+
+def test_edf_victims_bounded_and_only_hopeless():
+    s = EDFScheduler()
+    now = 100.0
+    hopeless = _req(0, PROMPTS[0], slo_ms=1_000.0, arrival=0.0)
+    capped = _req(1, PROMPTS[1], slo_ms=1_000.0, arrival=0.0)
+    capped.preemptions = MAX_PREEMPTIONS
+    feasible = _req(2, PROMPTS[2], slo_ms=1e9, arrival=0.0)
+    waiting = [_req(3, PROMPTS[3], slo_ms=1e9, arrival=90.0)]
+    victims = s.select_victims([hopeless, capped, feasible], waiting, now, 0)
+    assert victims == [hopeless]             # not the capped, not the feasible
+    assert s.select_victims([hopeless], waiting, now, 1) == []  # slot is free
+
+
+# ------------------------------------------------------- parity (engine)
+@pytest.mark.parametrize("kv_cache", ["dense", "paged"])
+def test_scheduler_matrix_greedy_parity(kv_cache):
+    """kv × scheduler all serve the seed FIFO path's exact greedy tokens."""
+    outs = {}
+    for sched in ("fifo", "edf", "chunked"):
+        eng = _engine(kv_cache=kv_cache, scheduler=sched)
+        for i, p in enumerate(PROMPTS):
+            assert eng.submit(_req(i, p, slo_ms=SLOS[i]), "small")
+        eng.drain(0.0)
+        assert len(eng.done) == len(PROMPTS)
+        assert all(r.output.shape == (MAX_NEW,) for r in eng.done)
+        outs[sched] = {r.rid: np.asarray(r.output) for r in eng.done}
+    for sched in ("edf", "chunked"):
+        for i in range(len(PROMPTS)):
+            np.testing.assert_array_equal(outs["fifo"][i], outs[sched][i])
+
+
+def test_chunked_paged_pallas_parity():
+    """The Pallas prefill-continuation route (flash/paged decode kernels'
+    cached-prefix masking, interpret mode on CPU) matches the jnp path."""
+    outs = {}
+    for pallas in (False, True):
+        eng = _engine(kv_cache="paged", scheduler="chunked",
+                      use_pallas=pallas, max_new=4)
+        for i, p in enumerate(PROMPTS[:2]):
+            eng.submit(_req(i, p, max_new=4), "small")
+        eng.drain(0.0)
+        outs[pallas] = {r.rid: np.asarray(r.output) for r in eng.done}
+    for i in range(2):
+        np.testing.assert_array_equal(outs[False][i], outs[True][i])
+
+
+def test_edf_admits_tight_deadline_first():
+    """Under a backlog, the tight-SLO request leaves the queue before
+    looser ones that arrived earlier."""
+    eng = _engine(scheduler="edf", clock=lambda: 50.0)
+    for i in range(4):
+        eng.submit(_req(i, PROMPTS[i], slo_ms=1e6, arrival=float(i)), "small")
+    tight = _req(9, PROMPTS[4], slo_ms=60_000.0, arrival=4.0)
+    eng.submit(tight, "small")
+    eng.step(50.0)                           # admits 2 of 5 queued
+    admitted = {r.rid for r in eng.backends["small"].slot_req
+                if r is not None} | {r.rid for r in eng.done}
+    assert 9 in admitted
+
+
+def test_chunked_interleaves_decode_with_long_prefill():
+    """While a long prompt prefills chunk-by-chunk, the resident sequence
+    keeps emitting tokens — no head-of-line blocking inside the backend."""
+    eng = _engine(scheduler="chunked", prompt_len=32, prefill_chunk=4,
+                  max_new=24, decode_chunk=1)
+    b = eng.backends["small"]
+    rng = np.random.default_rng(3)
+    # rid0 prefills 32 tokens in 8 chunks; rid1 arrives 4 ticks later, so
+    # once rid0 decodes, rid1 is still prefilling for several ticks
+    eng.submit(_req(0, rng.integers(0, VOCAB, 32), max_new=24), "small")
+    for _ in range(4):
+        eng.step(0.0)
+    assert b._prefilling                     # rid0 still mid-prefill
+    eng.submit(_req(1, rng.integers(0, VOCAB, 32), max_new=24), "small")
+    grown = []
+    for _ in range(20):
+        decoding = [s for s, r in enumerate(b.slot_req)
+                    if r is not None and s not in b._prefilling
+                    and b.slot_remaining[s] > 1]
+        if decoding and b._prefilling:       # overlap window: decode + prefill
+            before = [len(b.slot_tokens[s]) for s in decoding]
+            eng.step(0.0)
+            after = [len(b.slot_tokens[s]) for s in decoding]
+            grown.append(all(a > bo for a, bo in zip(after, before)))
+        else:
+            eng.step(0.0)
+        if not b._prefilling and len({r.rid for r in eng.done}
+                                     | {r.rid for r in b.slot_req
+                                        if r is not None}) == 2:
+            break
+    eng.drain(0.0)
+    assert len(eng.done) == 2
+    assert grown and all(grown)              # decode progressed during prefill
+
+
+# ------------------------------------- scheduling invariants (deterministic
+# seeded sweeps here; the hypothesis-driven versions live in
+# tests/test_scheduler_property.py, skipped when hypothesis is absent)
+def test_edf_bounded_wait_no_starvation_seeded():
+    """Random arrival orders and deadlines: every request completes within
+    a tick bound, exactly once — EDF (with expired-last ordering) never
+    starves anyone indefinitely."""
+    eng = _engine(scheduler="edf")
+    rng = np.random.default_rng(7)
+    for trial in range(4):
+        eng.done.clear()
+        order = rng.permutation(6)
+        slos = rng.choice([20.0, 100.0, 1000.0, 1e6], size=6)
+        for j, i in enumerate(order):
+            assert eng.submit(_req(int(i), PROMPTS[i], slo_ms=float(slos[j]),
+                                   arrival=float(j)), "small")
+        # 6 requests, 2 slots, MAX_NEW tokens in chunks of 2: << 60 ticks
+        for _ in range(60):
+            eng.step(1e6)
+            if len(eng.done) == 6:
+                break
+        assert sorted(r.rid for r in eng.done) == list(range(6))
+        assert all(r.output is not None and len(r.output) == MAX_NEW
+                   for r in eng.done)
+
+
+@pytest.mark.parametrize("kv_cache", ["dense", "paged"])
+def test_preemption_resume_never_loses_tokens_seeded(kv_cache):
+    """Random mixes of hopeless/feasible deadlines in random order, with
+    preemption on: every request's final tokens equal the unpressured
+    reference (nothing lost, nothing duplicated), preemptions stay bounded,
+    and the paged pool never leaks at any tick."""
+    ref_eng = _engine(kv_cache=kv_cache, max_new=10)
+    for i, p in enumerate(PROMPTS):
+        ref_eng.submit(_req(i, p, max_new=10), "small")
+    ref_eng.drain(0.0)
+    ref = {r.rid: np.asarray(r.output) for r in ref_eng.done}
+
+    eng = _engine(kv_cache=kv_cache, scheduler="edf", preemption="requeue",
+                  max_new=10, clock=lambda: 0.0)
+    b = eng.backends["small"]
+    rng = np.random.default_rng(13)
+    now = 100.0    # every "hopeless" deadline (arrival+slo < now) has passed
+    preempted_any = False
+    for trial in range(3):
+        eng.done.clear()
+        # hopeless requests grab the slots first; feasible ones then arrive
+        # and the scheduler must preempt to serve them
+        ids = rng.permutation(6)
+        hopeless, feasible = ids[:2], ids[2:]
+        for i in hopeless:
+            assert eng.submit(_req(int(i), PROMPTS[i], slo_ms=1.0,
+                                   max_new=10, arrival=0.0), "small")
+        eng.step(now)                        # admit the hopeless pair
+        for i in feasible:
+            assert eng.submit(_req(int(i), PROMPTS[i], slo_ms=1e9,
+                                   max_new=10, arrival=0.0), "small")
+        for _ in range(200):
+            eng.step(now)
+            if hasattr(b, "pool"):
+                assert b.pool.used_pages == b.active_slots * b.pages_per_slot
+            if len(eng.done) == 6:
+                break
+        assert sorted(r.rid for r in eng.done) == list(range(6))
+        for r in eng.done:
+            assert r.preemptions <= MAX_PREEMPTIONS
+            preempted_any |= r.preemptions > 0
+            np.testing.assert_array_equal(ref[r.rid], np.asarray(r.output))
+        if hasattr(b, "pool"):
+            assert b.pool.used_pages == 0
+    assert preempted_any          # the invariants were actually exercised
+
+
+def test_preemption_drop_completes_early_with_partial_output():
+    eng = _engine(scheduler="edf", preemption="drop", max_new=10,
+                  clock=lambda: 0.0)
+    eng.submit(_req(0, PROMPTS[0], slo_ms=1.0, max_new=10), "small")
+    eng.submit(_req(1, PROMPTS[1], slo_ms=1.0, max_new=10), "small")
+    eng.step(100.0)                          # admit both (slots free)
+    for i in range(2, 6):
+        eng.submit(_req(i, PROMPTS[i], slo_ms=1e9, max_new=10,
+                        arrival=100.0), "small")
+    for _ in range(100):
+        eng.step(100.0)
+        if len(eng.done) == 6:
+            break
+    done = {r.rid: r for r in eng.done}
+    dropped = [r for r in eng.done if r.dropped]
+    assert dropped and all(r.rid in (0, 1) for r in dropped)
+    assert all(len(done[i].output) == 10 and not done[i].dropped
+               for i in range(2, 6))
+    s = eng.summarize(slo_ms=1e12, best_accuracy=70.0)
+    assert s["goodput"] < 1.0                # drops can't count as goodput
+
+
+# ------------------------------------------------------------ one clock
+def test_serving_loop_single_clock_sane_latencies():
+    """Regression (clock-domain mismatch): the wall-clock loop stamps
+    arrival from the same clock the engine stamps service/completion, so
+    latencies are non-negative and bounded by the run length."""
+    from repro.core.adapter import ControllerConfig, InfAdapterController
+    from repro.core.forecaster import MovingMaxForecaster
+    from repro.core.profiles import VariantProfile
+
+    seconds = 2.0
+    profiles = {"small": VariantProfile(
+        name="small", accuracy=70.0, rt=0.1, th_slope=30.0, th_intercept=5.0,
+        lat_base_ms=30.0, lat_k_ms=10.0)}
+    eng = InProcessServingEngine(_variants(), max_batch=4, prompt_len=8,
+                                 max_new=4, decode_chunk=2,
+                                 scheduler="chunked", clock=ElapsedClock())
+    eng.apply_allocation(0.0, {"small": 1})   # pre-warm: the measured loop
+    # below must spend its seconds serving, not compiling
+    ctrl = InfAdapterController(
+        profiles, MovingMaxForecaster(),
+        ControllerConfig(interval_s=1.0, budget=2, slo_ms=5_000.0))
+    n = run_serving_loop(eng, ctrl, seconds=seconds, interval=1.0,
+                         load_fn=lambda now: 6.0, tick_sleep=0.01,
+                         slo_ms=5_000.0, log=None)
+    assert n > 0 and eng.done
+    for r in eng.done:
+        assert 0.0 <= r.arrival <= seconds + 1.0       # elapsed domain
+        assert 0.0 <= r.latency_ms <= (seconds + 10.0) * 1000.0
+        assert r.queue_wait_ms >= 0.0
+        assert r.service_ms >= 0.0
+        assert r.completion >= r.service_start >= 0.0
+
+
+def test_trace_load_indexing():
+    arr = np.array([1.0, 2.0, 3.0])
+    f = trace_load(arr, scale=2.0)
+    assert f(0.0) == 2.0 and f(1.9) == 4.0
+    assert f(10.0) == 6.0                    # holds last second
+    assert trace_load(arr, repeat=True)(4.2) == 2.0
+
+
+# ------------------------------------------------------------------ metric
+def test_goodput_per_request_slo_and_drops():
+    lat = [100.0, 400.0, 100.0, 100.0]
+    s = summarize_requests([0, 1, 2, 3], lat, [70] * 4, slo_ms=200.0,
+                           best_accuracy=70.0,
+                           slo_list_ms=[0.0, 500.0, 50.0, 300.0],
+                           dropped=[False, False, False, True])
+    # r0: global 200 ok; r1: own 500 ok; r2: own 50 missed; r3: dropped
+    assert s["goodput"] == pytest.approx(0.5)
+    assert s["violation_rate"] == pytest.approx(0.25)   # global-SLO metric
+    s2 = summarize_requests([0], [100.0], [70], slo_ms=200.0,
+                            best_accuracy=70.0)
+    assert s2["goodput"] == 1.0              # degenerates to 1 - viol rate
+
+
+# --------------------------------------------------------------- DES mirror
+def test_sim_edf_assigns_deadline_first():
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.sim.cluster import SimCluster
+    profiles = {"resnet18": paper_resnet_profiles()["resnet18"]}
+    waits = {}
+    for sched in ("fifo", "edf"):
+        c = SimCluster(profiles, scheduler=sched)
+        c.apply_allocation(0.0, {"resnet18": 1})
+        c.mark_warm(t=0.0)
+        for i in range(30):
+            c.dispatch(0.001 * i, "resnet18", slo_ms=60_000.0)
+        c.dispatch(0.05, "resnet18", slo_ms=100.0)     # tight straggler
+        c.drain(1e9)
+        s = c.summarize(60_000.0, 72.0, window_s=0)
+        assert s["n_requests"] == 31
+        tight = [r for r in c.requests if r.slo_ms == 100.0][0]
+        waits[sched] = tight.latency_ms
+    assert waits["edf"] < waits["fifo"] * 0.5          # jumped the queue
+
+
+def test_sim_edf_no_lookahead_and_conservation():
+    """EDF assignment may not peek at requests that had not arrived by the
+    server-free instant, and every submission is served exactly once."""
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.sim.cluster import SimCluster
+    profiles = {"resnet18": paper_resnet_profiles()["resnet18"]}
+    c = SimCluster(profiles, scheduler="edf")
+    c.apply_allocation(0.0, {"resnet18": 1})
+    c.mark_warm(t=0.0)
+    c.dispatch(0.0, "resnet18", slo_ms=60_000.0)       # served immediately
+    served_first = c.requests[-1] if c.requests else None
+    c.dispatch(100.0, "resnet18", slo_ms=1.0)          # arrives much later
+    c.drain(1e9)
+    assert len(c.requests) == 2
+    # the first request was not delayed waiting for the tighter future one
+    first = min(c.requests, key=lambda r: r.arrival)
+    assert first.service_start < 1.0
+    assert served_first is None or served_first.arrival == 0.0
+
+
+def test_sim_edf_serves_expired_deadlines_last():
+    """DES parity with the engine's expired-last EDF: a request whose
+    deadline already passed must not absorb a server ahead of
+    still-feasible waiters (one violation must not become two)."""
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.sim.cluster import SimCluster
+    profiles = {"resnet18": paper_resnet_profiles()["resnet18"]}
+    c = SimCluster(profiles, scheduler="edf")
+    c.apply_allocation(0.0, {"resnet18": 1})
+    c.mark_warm(t=0.0)
+    # saturate so a queue forms, then add one long-expired request and a
+    # batch of feasible ones — all pending at the same instant
+    for i in range(40):
+        c.dispatch(0.0, "resnet18", slo_ms=60_000.0)
+    c.dispatch(0.01, "resnet18", slo_ms=0.001)     # deadline already gone
+    for i in range(10):
+        c.dispatch(0.02, "resnet18", slo_ms=60_000.0)
+    c.drain(1e9)
+    expired = [r for r in c.requests if r.slo_ms == 0.001][0]
+    feasible_after = [r for r in c.requests
+                      if r.slo_ms == 60_000.0 and r.arrival == 0.02]
+    assert all(r.service_start <= expired.service_start
+               for r in feasible_after)
+
+
+def test_profiler_arrivals_share_engine_clock():
+    """Regression (review finding): EngineProfiler stamps arrivals from the
+    backend's own clock, so profiling an ElapsedClock engine yields sane,
+    non-negative queue waits instead of epoch-minus-elapsed garbage."""
+    from repro.profiling.measure import EngineProfiler
+    eng = InProcessServingEngine(_variants(), max_batch=2, prompt_len=8,
+                                 max_new=4, decode_chunk=2,
+                                 clock=ElapsedClock())
+    prof = EngineProfiler(eng, points=(1, 2), requests_per_point=4, warmup=1)
+    m = prof.profile_variant("small", points=(1, 2), requests_per_point=4)
+    for p in m.points:
+        assert 0.0 <= p.mean_queue_ms < 60_000.0
+        assert 0.0 <= p.mean_service_ms < 60_000.0
+
+
+def test_sim_experiment_end_to_end_with_edf():
+    """run_experiment drives a scheduler-mirrored cluster unchanged and the
+    summary carries goodput."""
+    from repro.core.adapter import ControllerConfig, InfAdapterController
+    from repro.core.forecaster import MovingMaxForecaster
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.sim.cluster import SimCluster
+    from repro.sim.runner import run_experiment
+    profiles = paper_resnet_profiles()
+    trace = np.full(60, 30.0, np.float32)
+    cfg = ControllerConfig(budget=20, beta=0.05, gamma=0.2)
+    ctrl = InfAdapterController(profiles, MovingMaxForecaster(), cfg)
+    res = run_experiment("edf-sim", ctrl, profiles, trace,
+                         cluster=SimCluster(profiles, scheduler="edf"),
+                         warm_start={"resnet18": 8})
+    assert res.summary["n_requests"] > 1000
+    assert 0.0 <= res.summary["goodput"] <= 1.0
