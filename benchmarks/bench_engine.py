@@ -53,6 +53,17 @@ PG_PAGE = 128
 PG_CHUNK = 1
 PG_BATCH = 16           # 16 slots × 1024 tokens: capacity reads dominate
 OCCUPANCIES = (0.25, 0.5, 0.75)
+
+# prefix-sharing study (DESIGN.md §Prefix sharing): every prompt opens with
+# the same PS_SHARED-token system prefix (3 of 4 prompt blocks at page 8),
+# admissions staggered one per tick so lifetimes overlap — sharing only
+# happens between live requests (index entries die with their pages)
+PS_PROMPT = 32
+PS_PAGE = 8
+PS_SHARED = 24
+PS_N = 20
+PS_MAX_NEW = 16
+PS_BATCH = 4
 BENCH_JSON = os.path.join("reports", "BENCH_engine.json")
 
 
@@ -262,6 +273,69 @@ def paged_vs_dense() -> Tuple[List[Tuple[str, float, str]], Dict]:
     return rows, payload
 
 
+def prefix_sharing() -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """The §Prefix sharing study: the SAME shared-system-prompt workload on
+    a sharing-on and a sharing-off paged engine. Records admission hit
+    rate, prefill-token reduction (the engines count every prompt token
+    they actually prefilled), and effective-capacity uplift (worst-case
+    page budget vs fresh pages actually allocated)."""
+    from repro.serving.api import Request
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(0, VOCAB, PS_SHARED)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, VOCAB, PS_PROMPT - PS_SHARED)])
+               for _ in range(PS_N)]
+
+    def serve(sharing: bool) -> Dict:
+        from repro.serving.engine import InProcessServingEngine
+        eng = InProcessServingEngine(
+            _paged_variant(), max_batch=PS_BATCH, prompt_len=PS_PROMPT,
+            max_new=PS_MAX_NEW, decode_chunk=2, queue_cap=100_000,
+            kv_cache="paged", kv_page_size=PS_PAGE,
+            kv_prefix_sharing=sharing)
+        eng.apply_allocation(0.0, {"bench-paged-2L": 1})
+        b = eng.backends["bench-paged-2L"]
+        t0 = time.time()
+        for i, p in enumerate(prompts):   # staggered: one admission per tick
+            eng.submit(Request(rid=i, tokens=p, max_new=PS_MAX_NEW,
+                               arrival=time.time()), None)
+            eng.step(0.0)
+        eng.drain(0.0)
+        makespan = time.time() - t0
+        assert len(eng.done) == PS_N
+        assert b.pool.used_pages == 0     # shared pages all returned
+        stats = eng.kv_pool_stats()
+        return {"prefill_tokens": b.prefill_tokens_total,
+                "prefix_lookups": stats["prefix_lookups"],
+                "prefix_hits": stats["prefix_hits"],
+                "prefix_hit_rate": stats["prefix_hit_rate"],
+                "fresh_pages_allocated": stats["fresh_pages_allocated"],
+                "worst_case_pages": PS_N * b.pages_per_slot,
+                "makespan_s": makespan}
+
+    cell: Dict = {"config": {"prompt_len": PS_PROMPT, "page_size": PS_PAGE,
+                             "shared_prefix": PS_SHARED, "n_requests": PS_N,
+                             "max_new": PS_MAX_NEW, "max_batch": PS_BATCH},
+                  "off": serve(False), "on": serve(True)}
+    on, off = cell["on"], cell["off"]
+    cell["prefill_token_reduction"] = (off["prefill_tokens"]
+                                       / max(on["prefill_tokens"], 1))
+    cell["capacity_uplift"] = (on["worst_case_pages"]
+                               / max(on["fresh_pages_allocated"], 1))
+    rows = [
+        ("prefix_hit_rate", on["prefix_hit_rate"] * 1e6,
+         f"hits={on['prefix_hits']}/{on['prefix_lookups']} "
+         f"rate={on['prefix_hit_rate']:.2f}"),
+        ("prefix_prefill_reduction", cell["prefill_token_reduction"] * 1e6,
+         f"prefill_tokens off/on={off['prefill_tokens']}/"
+         f"{on['prefill_tokens']} = {cell['prefill_token_reduction']:.2f}x"),
+        ("prefix_capacity_uplift", cell["capacity_uplift"] * 1e6,
+         f"worst_case/fresh={on['worst_case_pages']}/"
+         f"{on['fresh_pages_allocated']} = {cell['capacity_uplift']:.2f}x"),
+    ]
+    return rows, cell
+
+
 def run() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     for rate in RATES_RPS:
@@ -283,6 +357,9 @@ def run() -> List[Tuple[str, float, str]]:
 
     paged_rows, payload = paged_vs_dense()
     rows.extend(paged_rows)
+    sharing_rows, sharing_cell = prefix_sharing()
+    rows.extend(sharing_rows)
+    payload["prefix_sharing"] = sharing_cell
     os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

@@ -179,6 +179,39 @@ def paged_engine_tables(bench_path: str):
     return "\n".join(occ), "\n".join(ctx)
 
 
+def prefix_sharing_table(bench_path: str) -> str:
+    """§Prefix sharing: sharing-off vs sharing-on on the shared-prefix
+    workload — prefill tokens actually computed, fresh pages allocated vs
+    the worst-case (refcount-free) footprint, and the index hit rate —
+    from the ``prefix_sharing`` cell of BENCH_engine.json."""
+    out = ["| metric | sharing off | sharing on | ratio |",
+           "|---|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(out)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    c = data.get("prefix_sharing")
+    if not c:
+        return "\n".join(out)
+    off, on = c["off"], c["on"]
+    out.append(f"| prefill tokens | {off['prefill_tokens']} | "
+               f"{on['prefill_tokens']} | "
+               f"**{c['prefill_token_reduction']:.2f}×** (gate ≥2) |")
+    out.append(f"| fresh pages allocated | {off['fresh_pages_allocated']} | "
+               f"{on['fresh_pages_allocated']} | "
+               f"{c['capacity_uplift']:.2f}× fewer |")
+    out.append(f"| prefix hit rate | — | "
+               f"{on['prefix_hits']}/{on['prefix_lookups']} = "
+               f"**{on['prefix_hit_rate']:.2f}** (gate ≥0.8) | — |")
+    out.append(f"| makespan s | {off['makespan_s']:.2f} | "
+               f"{on['makespan_s']:.2f} | "
+               f"{off['makespan_s'] / max(on['makespan_s'], 1e-9):.2f}× |")
+    return "\n".join(out)
+
+
 def scheduler_table(bench_path: str) -> str:
     """§Scheduling: per-policy goodput / P99 / short-class P99 / throughput
     on the bimodal prompt-length workload at fixed allocation, plus the
@@ -244,6 +277,8 @@ def main():
     occ_tbl, ctx_tbl = paged_engine_tables(args.bench_engine)
     inject(args.md, "PAGED_ENGINE_TABLE", occ_tbl)
     inject(args.md, "PAGED_CONTEXT_TABLE", ctx_tbl)
+    inject(args.md, "PREFIX_SHARING_TABLE",
+           prefix_sharing_table(args.bench_engine))
     inject(args.md, "SCHEDULER_TABLE", scheduler_table(args.bench_scheduler))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))

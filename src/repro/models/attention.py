@@ -9,7 +9,8 @@ Two execution paths throughout:
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -234,12 +235,26 @@ def decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array, k_cache: jax.Array
 # Paged KV cache: pool bookkeeping + decode against block-table pages
 # ---------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class PrefixPlan:
+    """How one admission maps onto the prefix index (``PagedKVCache.
+    prefix_plan``): ``shared`` pages are mapped read-only by reference
+    (refcount bumped at ``alloc``); ``cow_src`` is the page to copy into the
+    admission's first fresh page when the boundary block fully matched but
+    the request will write into it (the copy-on-write resolved at admission
+    — see DESIGN.md §Prefix sharing); ``tail_start`` is the first sequence
+    position the request must still prefill itself."""
+    shared: Tuple[int, ...]
+    cow_src: Optional[int]
+    tail_start: int
+
+
 class PagedKVCache:
     """Host-side bookkeeping for one replica's shared KV page pool.
 
     The device arrays (the ``(L, KV, P, page_size, hd)`` pool leaves and the
     per-slot block table) live in the engine's cache pytree; this object
-    tracks which pool pages are free and which slot owns which pages, so
+    tracks which pool pages are free and which slot maps which pages, so
     admission can be gated on *memory-true* capacity and retirement returns
     pages for reuse.
 
@@ -248,10 +263,27 @@ class PagedKVCache:
     harmless instead of corrupting a live sequence's pages. ``alloc`` never
     hands it out and ``usable_pages`` excludes it.
 
-    Invariants (property-tested in ``tests/test_kernels_paged.py``): every
-    usable page is either free or owned by exactly one slot; ``alloc`` is
-    all-or-nothing; double-``alloc`` on a live slot and double-``free`` of a
-    page are errors, not silent corruption.
+    **Prefix sharing** (DESIGN.md §Prefix sharing): pages carry refcounts,
+    and a prefix index maps the rolling hash of each ``page_size``-token
+    prompt block chain to the live page holding that block's K/V. A new
+    request's admission asks ``prefix_plan`` which existing pages cover its
+    prompt: fully-covered blocks below every position the request will write
+    are mapped read-only (``alloc(..., shared=...)`` bumps their refcount);
+    a fully-matched boundary block that the request *will* write into is
+    copied into a fresh page (copy-on-write, resolved at admission — after
+    admission a request only ever appends at ``pos // page_size``, so shared
+    pages are never written). ``free`` decrements refcounts and returns a
+    page to the free list — invalidating its index entry — only when the
+    last holder lets go. Index entries are published by the owner once the
+    block's K/V is fully written (``publish_prefix``), never before, so a
+    sharer can never gather unwritten pages.
+
+    Invariants (property-tested in ``tests/test_kernels_paged.py`` and the
+    stateful harness in ``tests/test_paged_prefix.py``): every usable page
+    is either free or refcounted ≥ 1 by the slots mapping it; ``alloc`` is
+    all-or-nothing; double-``alloc`` on a live slot and ``free`` of a
+    never-admitted slot are errors, not silent corruption; index entries
+    always point at live pages. See ``assert_invariants``.
     """
 
     TRASH_PAGE = 0
@@ -264,7 +296,17 @@ class PagedKVCache:
         # LIFO free list: recently freed pages are reused first (their pool
         # rows are warm in cache)
         self._free: List[int] = list(range(total_pages - 1, 0, -1))
-        self._owned: Dict[int, List[int]] = {}     # slot -> page ids
+        self._owned: Dict[int, List[int]] = {}     # slot -> mapped page ids
+        self._ref: Dict[int, int] = {}             # page -> slots mapping it
+        self._index: Dict[bytes, int] = {}         # block-chain digest -> page
+        self._page_key: Dict[int, bytes] = {}      # published page -> digest
+        # sharing telemetry (surfaced via kv_pool_stats()/summarize and the
+        # prefix_sharing bench): lookups/hits at admission, fresh pages
+        # actually allocated vs the worst-case budget callers reserved
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.fresh_pages_allocated = 0
+        self.shared_page_maps = 0
 
     @property
     def usable_pages(self) -> int:
@@ -279,8 +321,17 @@ class PagedKVCache:
         return self.usable_pages - len(self._free)
 
     @property
+    def shared_pages(self) -> int:
+        """Pages currently mapped by more than one slot."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
+    @property
     def occupancy(self) -> float:
-        """Fraction of usable pool pages currently owned by live slots."""
+        """Fraction of usable pool pages currently mapped by live slots."""
         return self.used_pages / max(self.usable_pages, 1)
 
     def pages_needed(self, tokens: int) -> int:
@@ -289,30 +340,152 @@ class PagedKVCache:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, slot: int, n: int) -> Optional[List[int]]:
-        """Give ``slot`` ownership of ``n`` pages; None if the pool can't
-        satisfy the whole request (all-or-nothing — a partial grant would
-        admit a sequence the pool cannot finish)."""
+    def alloc(self, slot: int, n: int,
+              shared: Sequence[int] = ()) -> Optional[List[int]]:
+        """Give ``slot`` ``n`` fresh pages plus read-only references to the
+        ``shared`` pages (their refcount is bumped); None if the free list
+        can't satisfy the whole fresh request (all-or-nothing — a partial
+        grant would admit a sequence the pool cannot finish). Returns the
+        fresh pages only; the slot's full positional mapping is
+        ``list(shared) + returned``."""
         if slot in self._owned:
             raise ValueError(f"slot {slot} already owns pages (double alloc)")
+        for pg in shared:                          # validate before mutating
+            if pg == self.TRASH_PAGE or pg not in self._ref:
+                raise ValueError(f"cannot share dead page {pg}")
         if n > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(n)]
-        self._owned[slot] = pages
-        return list(pages)
+        fresh = [self._free.pop() for _ in range(n)]
+        for pg in fresh:
+            self._ref[pg] = 1
+        for pg in shared:
+            self._ref[pg] += 1
+        self.fresh_pages_allocated += n
+        self.shared_page_maps += len(shared)
+        self._owned[slot] = list(shared) + fresh
+        return list(fresh)
 
     def free(self, slot: int) -> List[int]:
-        """Return ``slot``'s pages to the pool; [] if it owns none (retiring
-        a never-admitted slot is a no-op, not an error)."""
-        pages = self._owned.pop(slot, [])
-        for pg in pages:
+        """Drop ``slot``'s page references. Each page returns to the free
+        list — and its prefix-index entry is invalidated — only when its
+        refcount hits zero; pages still shared by other slots stay live.
+        Returns the pages actually released. Freeing a never-admitted slot
+        is an error (it means the caller lost track of the slot lifecycle —
+        the bug class the poisoned-page tests guard against)."""
+        if slot not in self._owned:
+            raise ValueError(f"slot {slot} owns no pages "
+                             f"(double free or never admitted)")
+        released = []
+        for pg in self._owned.pop(slot):
             if pg == self.TRASH_PAGE or pg in self._free:
                 raise ValueError(f"double free of page {pg}")
-            self._free.append(pg)
-        return pages
+            self._ref[pg] -= 1
+            if self._ref[pg] == 0:
+                del self._ref[pg]
+                key = self._page_key.pop(pg, None)
+                if key is not None:
+                    del self._index[key]
+                self._free.append(pg)
+                released.append(pg)
+        return released
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, []))
+
+    # -------------------------------------------------- prefix index (sharing)
+    def _block_digests(self, tokens) -> List[bytes]:
+        """Rolling digest per complete ``page_size``-token block: digest i
+        covers tokens ``[0, (i+1)·page_size)``, so a chain match means the
+        whole prefix matches, not just one block."""
+        import hashlib
+        toks = np.asarray(tokens, np.int64)
+        h = hashlib.sha256()
+        out = []
+        for i in range(len(toks) // self.page_size):
+            h.update(toks[i * self.page_size:(i + 1) * self.page_size]
+                     .tobytes())
+            out.append(h.digest())
+        return out
+
+    def lookup_prefix(self, tokens, count: bool = True) -> List[int]:
+        """Longest chain of fully-matched prompt blocks -> their live page
+        ids (index entries are invalidated at release, so every returned
+        page is live). ``count=False`` re-checks a plan without skewing the
+        hit-rate telemetry."""
+        pages = []
+        for d in self._block_digests(tokens):
+            pg = self._index.get(d)
+            if pg is None:
+                break
+            pages.append(pg)
+        if count:
+            self.prefix_lookups += 1
+            self.prefix_hits += bool(pages)
+        return pages
+
+    def prefix_plan(self, tokens, count: bool = True) -> PrefixPlan:
+        """Resolve how a sequence maps onto the index. All writes a request
+        performs after admission sit at positions ``>= len(tokens) - 1``
+        (the tail prefill re-feeds at least the final token to regenerate
+        its logits; decode appends after it), so matched blocks strictly
+        below that position are shared read-only. A fully-matched *boundary*
+        block containing position ``len(tokens) - 1`` cannot be shared — the
+        re-fed final token writes into it — so it is CoW-copied into the
+        admission's first fresh page and only that one token is re-fed."""
+        pages = self.lookup_prefix(tokens, count=count)
+        last_write = max(len(tokens) - 1, 0)
+        ro = min(len(pages), last_write // self.page_size)
+        cow = pages[ro] if len(pages) > ro else None
+        tail = last_write if cow is not None else ro * self.page_size
+        return PrefixPlan(shared=tuple(pages[:ro]), cow_src=cow,
+                          tail_start=tail)
+
+    def publish_prefix(self, slot: int, tokens) -> int:
+        """Register ``slot``'s fully-written prompt blocks in the index
+        (called by the owner once prefill completes — never earlier, so a
+        sharer cannot map pages whose K/V is still being written). Blocks
+        whose chain is already indexed (the shared prefix itself, or a CoW
+        copy whose source is published) are skipped. Returns #entries
+        added."""
+        pages = self._owned.get(slot)
+        if pages is None:
+            raise ValueError(f"slot {slot} owns no pages to publish")
+        added = 0
+        for i, d in enumerate(self._block_digests(tokens)):
+            if i >= len(pages):
+                break
+            pg = pages[i]
+            if d in self._index or pg in self._page_key:
+                continue
+            self._index[d] = pg
+            self._page_key[pg] = d
+            added += 1
+        return added
+
+    def assert_invariants(self) -> None:
+        """Pool-wide consistency (the stateful harness calls this after
+        every step): refcount conservation, free/live partition, no
+        double-grants, index liveness."""
+        mapped = [p for pages in self._owned.values() for p in pages]
+        # refcount conservation: total refcounts == total slot->page maps,
+        # and each page's refcount equals the number of slots mapping it
+        assert sum(self._ref.values()) == len(mapped)
+        counts: Dict[int, int] = {}
+        for p in mapped:
+            counts[p] = counts.get(p, 0) + 1
+        assert counts == self._ref
+        # free list and live pages partition the usable pool; no duplicates
+        assert len(self._free) == len(set(self._free))
+        assert self.TRASH_PAGE not in self._free
+        assert self.TRASH_PAGE not in self._ref
+        live = set(self._ref)
+        assert not (live & set(self._free))
+        assert len(live) + len(self._free) == self.usable_pages
+        # the prefix index only ever points at live pages, bidirectionally
+        for key, pg in self._index.items():
+            assert pg in live
+            assert self._page_key.get(pg) == key
+        assert len(self._page_key) == len(self._index)
 
 
 def paged_decode_attention(cfg: ModelConfig, p: Dict, x: jax.Array,

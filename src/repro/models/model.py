@@ -370,6 +370,19 @@ class LM:
         out.update(kp=kp, vp=vp, pt=pt, pos=pos)
         return out, tok
 
+    def paged_cow_copy(self, cache: Dict, src, dst) -> Dict:
+        """Copy one pool page's K/V across every layer: the device half of
+        admission-time copy-on-write (DESIGN.md §Prefix sharing). A new
+        request whose prompt fully matches a published boundary block gets
+        that block's K/V duplicated into its own fresh page ``dst`` instead
+        of re-prefilling it, because its tail prefill / decode will write
+        into the block and the shared source must stay immutable. ``src``/
+        ``dst`` are traced scalars — one executable serves every copy."""
+        out = dict(cache)
+        out["kp"] = cache["kp"].at[:, :, dst].set(cache["kp"][:, :, src])
+        out["vp"] = cache["vp"].at[:, :, dst].set(cache["vp"][:, :, src])
+        return out
+
     def paged_retire(self, cache: Dict, slot: int) -> Dict:
         """Point a retiring slot's block-table row back at the trash page and
         reset its position, so the batch row decodes harmlessly until the

@@ -125,6 +125,7 @@ class VariantBackend:
                  seed: int = 0, decode_chunk: int = 4,
                  use_pallas: bool = False, chunked: bool = False,
                  prefill_chunk_tokens: int = 16, preemption: str = "none",
+                 prefix_sharing: bool = False,
                  clock: Callable[[], float] = time.time):
         self.name = name
         if use_pallas and not cfg.use_pallas:
@@ -137,14 +138,17 @@ class VariantBackend:
         self.decode_chunk = max(1, min(decode_chunk, max_new))
         self.clock = clock       # every service/completion stamp uses this
         # chunked-prefill machinery is built when the scheduler interleaves
-        # prefill chunks with decode OR when preemption is on (resume = a
-        # prefill continuation over prompt + preserved tokens); right-sized
+        # prefill chunks with decode, when preemption is on (resume = a
+        # prefill continuation over prompt + preserved tokens), or when
+        # prefix sharing is on (a shared-prefix admission prefills only the
+        # novel tail — a continuation starting mid-sequence); right-sized
         # admission (true prompt length, not padded) only under the chunked
         # scheduler itself — resume under monolithic admission must rebuild
         # the padded cache it preempted (see admit_chunked)
         self.preemption = preemption
+        self.prefix_sharing = prefix_sharing   # honored by paged backends
         self.right_sized = chunked
-        self.chunked = chunked or preemption != "none"
+        self.chunked = chunked or preemption != "none" or prefix_sharing
         self.prefill_chunk_tokens = max(1, prefill_chunk_tokens)
         self.model = build_model(cfg)
         if self.chunked:
@@ -164,6 +168,10 @@ class VariantBackend:
         # offset) — maintained through admit/chunk/decode for bound rows
         self.slot_pos = np.zeros((max_batch,), np.int64)
         self._prefilling: Dict[int, _PrefillJob] = {}   # slot -> progress
+        # prompt tokens this backend actually prefilled (monolithic admits
+        # + continuation chunks) — the prefix_sharing bench's reduction
+        # metric compares this between sharing on/off on the same workload
+        self.prefill_tokens_total = 0
         t0 = time.time()
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self._build_state()                  # cache + jit warm-up = readiness
@@ -323,6 +331,7 @@ class VariantBackend:
         prompts = np.zeros((rows, self.prompt_len), np.int64)
         for j, r in enumerate(reqs):
             prompts[j, :len(r.tokens)] = r.tokens[:self.prompt_len]
+        self.prefill_tokens_total += len(reqs) * self.prompt_len
         logits, new_cache = self._prefill(self.params,
                                           {"tokens": jnp.asarray(prompts)})
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -389,12 +398,7 @@ class VariantBackend:
             slot = free[j]
             if r.service_start <= 0.0:   # resume keeps the original stamp
                 r.service_start = t_service
-            toks = np.asarray(r.tokens[:self.prompt_len], np.int64)
-            if self.right_sized:
-                seq = toks if len(toks) else np.zeros((1,), np.int64)
-            else:                        # monolithic-parity padded sequence
-                seq = np.zeros((self.prompt_len,), np.int64)
-                seq[:len(toks)] = toks
+            seq = self._effective_seq(r)
             resume_tok: Optional[int] = None
             gen: List[int] = []
             if r.resume_tokens:
@@ -411,9 +415,28 @@ class VariantBackend:
             self._bind_chunked_slot(slot)      # paged: allocate pages now
         return []
 
+    def _effective_seq(self, r: Request) -> np.ndarray:
+        """The sequence chunked admission must put in the cache for ``r``'s
+        prompt: right-sized to the true prompt under the chunked scheduler,
+        zero-padded to ``prompt_len`` otherwise (monolithic parity — see
+        ``admit_chunked``). Prefix-index hashes are computed over exactly
+        this sequence, so sharing matches whatever discipline admits."""
+        toks = np.asarray(r.tokens[:self.prompt_len], np.int64)
+        if self.right_sized:
+            return toks if len(toks) else np.zeros((1,), np.int64)
+        seq = np.zeros((self.prompt_len,), np.int64)
+        seq[:len(toks)] = toks
+        return seq
+
     def _bind_chunked_slot(self, slot: int) -> None:
         """KV-discipline hook at chunked bind time (dense: nothing to do —
         the resident cache rows are permanent)."""
+
+    def _prefill_complete(self, slot: int, job: _PrefillJob) -> None:
+        """KV-discipline hook when a slot's chunked prefill finishes (paged
+        backends with prefix sharing publish the slot's fully-written prompt
+        blocks to the prefix index here — never earlier, so a sharer cannot
+        map pages whose K/V is still being written)."""
 
     def fused_chunk_step(self, now: float) -> List[Request]:
         """One fused tick (Sarathi-style stall-free batching): every
@@ -453,10 +476,12 @@ class VariantBackend:
         resume_sets: List[Tuple[int, int]] = []
         for slot, job in list(self._prefilling.items()):
             job.pos += int(n_valid[slot])
+            self.prefill_tokens_total += int(n_valid[slot])
             self.slot_pos[slot] = job.pos
             if job.pos < len(job.seq):
                 continue
             del self._prefilling[slot]
+            self._prefill_complete(slot, job)
             r = job.req
             if job.resume_tok is not None:
                 tok0 = job.resume_tok
@@ -659,6 +684,14 @@ class PagedVariantBackend(VariantBackend):
         for nb in self.page_buckets:
             self.cur_tok, self.cache, _ = self._decode_chunk_p(
                 self.params, self.cache, self.cur_tok, nb)
+        # prefix sharing: the admission-time CoW page copy (one executable —
+        # src/dst are traced scalars) and the per-request plans stashed
+        # between the admit-time lookup and the slot bind (same tick)
+        self._admit_plans: Dict[int, "object"] = {}
+        if self.prefix_sharing:
+            self._cow_copy = jax.jit(self.model.paged_cow_copy,
+                                     donate_argnums=(0,))
+            self.cache = self._cow_copy(self.cache, 0, 0)   # warm: trash->trash
 
     # chunked machinery: the base ``_build_chunk_state`` works unchanged —
     # ``_model_prefill_chunk`` below is the only paged-specific piece (the
@@ -697,7 +730,29 @@ class PagedVariantBackend(VariantBackend):
     def admit(self, reqs: List[Request], now: float) -> List[Request]:
         """Right-sized admission: prefill only the actual joiners (bucketed),
         allocate each a full page budget, scatter the prefilled KV into its
-        pages. Shared stamping/budget semantics live in the base helpers."""
+        pages. With prefix sharing on, joiners whose prompt hits the prefix
+        index are peeled off onto the continuation path instead — their
+        indexed prefix is mapped by reference at bind and only the novel
+        tail is prefilled (the monolithic batch prefill would recompute the
+        whole prompt)."""
+        if not self.prefix_sharing:
+            return self._admit_monolithic(reqs, now)
+        hits, misses = [], []
+        for r in reqs:
+            plan = self.pool.prefix_plan(self._effective_seq(r)) \
+                if self._budget(r) > 1 else None   # budget-1: no pages at all
+            if plan is not None and (plan.shared or plan.cow_src is not None):
+                self._admit_plans[id(r)] = plan
+                hits.append(r)
+            else:
+                misses.append(r)
+        finished = self._admit_monolithic(misses, now)
+        if hits:                     # binds slots; nothing finishes at bind
+            self.admit_chunked(hits, now)
+        return finished
+
+    def _admit_monolithic(self, reqs: List[Request],
+                          now: float) -> List[Request]:
         free = self.free_slots
         assert len(reqs) <= len(free)
         if not reqs:
@@ -724,16 +779,60 @@ class PagedVariantBackend(VariantBackend):
         self.cache, self.cur_tok = self._paged_admit(
             self.cache, pref, self.cur_tok, first,
             jnp.asarray(page_ids), jnp.asarray(dest))
+        if self.prefix_sharing:
+            # the scatter above wrote every bound row's full prompt K/V, so
+            # those blocks are publishable to the prefix index immediately
+            for j, r in enumerate(reqs):
+                if int(dest[j]) < self.max_batch:
+                    self.pool.publish_prefix(int(dest[j]),
+                                             self._effective_seq(r))
         return finished
 
     def _bind_chunked_slot(self, slot: int) -> None:
         """Chunked admission owns the slot's full page budget up front (the
         all-or-nothing discipline of ``admit``; ``free_slots`` already gated
-        the bind on pool capacity)."""
-        pages = self.pool.alloc(slot, self.pages_per_slot)
-        assert pages is not None
+        the bind on pool capacity — worst-case, so sharing savings are
+        realized here, never promised in advance).
+
+        With prefix sharing, the plan's matched blocks are mapped by
+        reference (refcount bump) and only the remainder is allocated
+        fresh; a fully-matched boundary block is copied on write into the
+        first fresh page so the re-fed final prompt token's K/V write
+        cannot touch the shared original. The prefill job then starts at
+        ``plan.tail_start`` instead of 0 — shared tokens are never
+        recomputed."""
+        job = self._prefilling[slot]
+        plan = self._admit_plans.pop(id(job.req), None)
+        if plan is None and self.prefix_sharing:
+            # direct admit_chunked entry (chunked scheduler, preemption
+            # resume): no admit()-time lookup happened — plan here. Resume
+            # lookups stay out of the admission hit-rate telemetry.
+            plan = self.pool.prefix_plan(self._effective_seq(job.req),
+                                         count=job.resume_tok is None)
+        shared = tuple(plan.shared) if plan is not None else ()
+        fresh = self.pool.alloc(slot, self.pages_per_slot - len(shared),
+                                shared=shared)
+        assert fresh is not None
         self.cache["pt"] = self.cache["pt"].at[slot].set(
-            jnp.asarray(pages, jnp.int32))
+            jnp.asarray(list(shared) + list(fresh), jnp.int32))
+        if plan is not None and plan.tail_start > 0:
+            if plan.cow_src is not None:
+                self.cache = self._cow_copy(self.cache, plan.cow_src,
+                                            fresh[0])
+            job.pos = plan.tail_start
+            self.slot_pos[slot] = plan.tail_start
+
+    def _prefill_complete(self, slot: int, job: "_PrefillJob") -> None:
+        """Publish the slot's fully-written prompt blocks to the prefix
+        index — only now, so a sharer can never map pages whose K/V is
+        still being written by an in-flight continuation. Resume jobs
+        publish just the prompt portion of the rebuilt sequence (generated
+        tokens live past the prompt and their final page keeps being
+        appended to)."""
+        if not self.prefix_sharing:
+            return
+        prompt = job.seq[:len(job.seq) - len(job.gen)]
+        self.pool.publish_prefix(slot, prompt)
 
     def _run_decode_chunk(self) -> np.ndarray:
         live = [self.slot_pos[s] for s, r in enumerate(self.slot_req)
@@ -777,6 +876,7 @@ class InProcessServingEngine:
                  placement="first-fit", router="p2c", replica_size: int = 1,
                  kv_cache: str = "dense", kv_page_size: int = 16,
                  kv_pool_pages: Optional[int] = None,
+                 kv_prefix_sharing: bool = False,
                  scheduler="fifo", prefill_chunk: int = 16,
                  preemption: str = "none",
                  clock: Callable[[], float] = time.time):
@@ -785,6 +885,9 @@ class InProcessServingEngine:
         assert kv_cache == "dense" or mode == "continuous", \
             "paged KV backends serve in continuous mode only"
         assert preemption in ("none", "requeue", "drop"), preemption
+        assert not (kv_prefix_sharing and kv_cache != "paged"), \
+            "kv_prefix_sharing requires kv_cache='paged' (the prefix index " \
+            "maps shared blocks onto pool pages)"
         # scheduling discipline between each backend's queue and its slots
         # (DESIGN.md §Scheduling): "fifo" = the legacy behavior; "edf" =
         # deadline-order admission; "chunked" = EDF + chunked prefill.
@@ -812,6 +915,7 @@ class InProcessServingEngine:
         self.kv_cache = kv_cache
         self.kv_page_size = kv_page_size
         self.kv_pool_pages = kv_pool_pages
+        self.kv_prefix_sharing = kv_prefix_sharing
         # enforce_units: an allocation of n units caps the variant at n
         # concurrent slots — the same units -> concurrency mapping the
         # profiling subsystem measures th(n) under, so measured profiles
@@ -848,7 +952,9 @@ class InProcessServingEngine:
         if self.kv_cache == "paged":
             return PagedVariantBackend(variant, cfg, acc,
                                        page_size=self.kv_page_size,
-                                       pool_pages=self.kv_pool_pages, **kw)
+                                       pool_pages=self.kv_pool_pages,
+                                       prefix_sharing=self.kv_prefix_sharing,
+                                       **kw)
         return VariantBackend(variant, cfg, acc, **kw)
 
     # ------------------------------------------------------------ ClusterAPI
@@ -948,8 +1054,15 @@ class InProcessServingEngine:
             return None
         used = sum(p.used_pages for p in pools)
         usable = sum(p.usable_pages for p in pools)
+        lookups = sum(p.prefix_lookups for p in pools)
+        hits = sum(p.prefix_hits for p in pools)
         return {"used_pages": used, "usable_pages": usable,
-                "occupancy": used / max(usable, 1)}
+                "occupancy": used / max(usable, 1),
+                "shared_pages": sum(p.shared_pages for p in pools),
+                "prefix_lookups": lookups, "prefix_hits": hits,
+                "prefix_hit_rate": hits / max(lookups, 1),
+                "fresh_pages_allocated": sum(p.fresh_pages_allocated
+                                             for p in pools)}
 
     # ----------------------------------------------------------------- faults
     def inject_fault(self, now: float, event: FaultEvent) -> None:
@@ -1149,4 +1262,6 @@ class InProcessServingEngine:
             pool = self.kv_pool_stats()
             if pool is not None:
                 out["kv_pool_occupancy"] = pool["occupancy"]
+                out["kv_shared_pages"] = pool["shared_pages"]
+                out["kv_prefix_hit_rate"] = pool["prefix_hit_rate"]
         return out

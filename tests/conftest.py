@@ -1,6 +1,102 @@
+"""Shared test scaffolding.
+
+Bootstraps ``src/`` onto ``sys.path`` (no install needed; smoke tests must
+see ONE device — the 512-device XLA flag is set only inside
+launch/dryrun.py), then provides the **tiny smoke geometry** used by the
+engine-level test modules (test_paged_engine, test_scheduler,
+test_cluster_engine carried three slightly-divergent copies of the same
+constants before this conftest became the single source of truth), and
+registers the hypothesis profiles the CI workflow selects via
+``HYPOTHESIS_PROFILE``.
+"""
 import os
 import sys
+import time
 
-# Make src/ importable without install; smoke tests must see ONE device
-# (the 512-device XLA flag is set only inside launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+# ----------------------------------------------------------- tiny geometry
+# One smoke-sized serving setup: big enough to exercise paging/scheduling
+# (2 slots, multi-page sequences), small enough that every jit warms in
+# seconds on CPU.
+VOCAB = 128
+PROMPT_LEN = 8
+MAX_NEW = 6
+
+
+def tiny_variants(n=1, d_model=64, **overrides):
+    """1–2 tiny tinyllama-derived variants: "small" (2 layers, 70.0 acc)
+    and optionally "big" (3 layers, 75.0 acc). ``overrides`` are extra
+    ``ModelConfig.replace`` fields (e.g. ``num_kv_heads`` for GQA
+    matrices)."""
+    from repro.configs import get_config, smoke_variant
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=d_model, d_ff=128, vocab_size=VOCAB, **overrides)
+    out = {"small": (base.replace(num_layers=2, name="small"), 70.0)}
+    if n > 1:
+        out["big"] = (base.replace(num_layers=3, name="big"), 75.0)
+    return out
+
+
+def tiny_requests(n, rng, max_new=MAX_NEW, prompt_len=PROMPT_LEN):
+    """``n`` random-prompt requests at the tiny geometry."""
+    from repro.serving.api import Request
+    return [Request(rid=i, tokens=rng.integers(0, VOCAB, prompt_len),
+                    max_new=max_new, arrival=time.time())
+            for i in range(n)]
+
+
+def tiny_engine(n_variants=1, nodes=None, variant_overrides=None, **kw):
+    """``InProcessServingEngine`` at the tiny geometry; every parameter
+    remains overridable. ``nodes=`` switches on the replica fabric (the
+    cluster tests' spread placement default applies only then);
+    ``variant_overrides`` are ModelConfig fields forwarded to
+    ``tiny_variants``."""
+    from repro.serving.engine import InProcessServingEngine
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prompt_len", PROMPT_LEN)
+    kw.setdefault("max_new", MAX_NEW)
+    kw.setdefault("decode_chunk", 2)
+    kw.setdefault("kv_page_size", 4)
+    if nodes is not None:
+        kw.setdefault("placement", "spread")
+        kw.setdefault("replica_size", 1)
+        kw["nodes"] = nodes
+    variants = tiny_variants(n_variants, **(variant_overrides or {}))
+    return InProcessServingEngine(variants, **kw)
+
+
+# Fixture forms for tests that prefer injection over imports; the plain
+# functions above stay importable for module-level use.
+@pytest.fixture
+def make_tiny_variants():
+    return tiny_variants
+
+
+@pytest.fixture
+def make_tiny_requests():
+    return tiny_requests
+
+
+@pytest.fixture
+def make_tiny_engine():
+    return tiny_engine
+
+
+# ------------------------------------------------------ hypothesis profiles
+# "ci" (selected by the workflow via HYPOTHESIS_PROFILE=ci): fixed seed
+# (derandomize) and the raised example count the acceptance gate requires;
+# "dev" keeps local runs fast. hypothesis itself is optional outside CI —
+# the property tests fall back to seeded loops when it is absent.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", max_examples=500, derandomize=True, deadline=None,
+        suppress_health_check=list(HealthCheck))
+    settings.register_profile("dev", max_examples=25, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass

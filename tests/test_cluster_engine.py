@@ -5,36 +5,16 @@ import time
 
 import numpy as np
 
+from conftest import tiny_engine, tiny_requests
 from repro.cluster import make_nodes, node_crash, replica_slowdown
-from repro.configs import get_config, smoke_variant
-from repro.serving.api import ClusterAPI, Request, ServingAPI
-from repro.serving.engine import InProcessServingEngine
+from repro.serving.api import ClusterAPI, ServingAPI
 
-MAX_NEW = 6
-
-
-def _variants(n=1):
-    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
-        d_model=64, d_ff=128, vocab_size=128)
-    out = {"small": (base.replace(num_layers=2, name="small"), 70.0)}
-    if n > 1:
-        out["big"] = (base.replace(num_layers=3, name="big"), 75.0)
-    return out
-
-def _reqs(n, rng, prompt_len=8):
-    return [Request(rid=i, tokens=rng.integers(0, 128, prompt_len),
-                    max_new=MAX_NEW, arrival=time.time()) for i in range(n)]
+_reqs = tiny_requests
 
 
 def _engine(n_variants=1, n_nodes=2, node_cap=2, **kw):
-    kw.setdefault("max_batch", 2)
-    kw.setdefault("prompt_len", 8)
-    kw.setdefault("max_new", MAX_NEW)
-    kw.setdefault("decode_chunk", 2)
-    kw.setdefault("placement", "spread")
-    return InProcessServingEngine(_variants(n_variants),
-                                  nodes=make_nodes(n_nodes, node_cap),
-                                  replica_size=1, **kw)
+    return tiny_engine(n_variants=n_variants,
+                       nodes=make_nodes(n_nodes, node_cap), **kw)
 
 
 def test_allocation_materializes_as_engine_replicas():

@@ -7,7 +7,11 @@ Covers the DESIGN.md §Paged KV cache contract at the kernel layer:
   * length-0 rows are numerically inert (zeros, no NaN),
   * table entries beyond a row's live pages are never read,
   * ``PagedKVCache`` alloc/free never leaks or double-frees pages under
-    random admission/retirement sequences (hypothesis property test).
+    random admission/retirement sequences (hypothesis property test);
+    freeing a never-admitted slot raises instead of masking a caller bug,
+  * refcounted prefix sharing keeps shared pages live until the last
+    holder retires (poisoned-page regression; the full sharing lifecycle
+    is state-machine-tested in tests/test_paged_prefix.py).
 """
 import jax
 import jax.numpy as jnp
@@ -121,6 +125,42 @@ def test_paged_decode_ignores_unreachable_pages():
     np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
 
 
+def test_shared_pages_survive_sharer_retirement_poisoned():
+    """Refcounted sharing at the kernel boundary (the shared-page mirror of
+    the unreachable-page test above): two rows map the same prefix pages;
+    when one retires, ``free`` must release only its private pages. Poison
+    everything it released — simulating reuse by a later admission — and
+    the survivor's decode output must not move. A pool that released
+    shared pages at first retirement would hand the survivor garbage."""
+    B, ps, n_pages, H, KV, hd = 2, 8, 4, 4, 2, 32
+    G = H // KV
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(ks[0], (B, KV, G, hd), jnp.float32)
+
+    pool = PagedKVCache(total_pages=2 * n_pages + 1, page_size=ps)
+    a = pool.alloc(0, n_pages)
+    shared = a[:2]                            # row 1 maps row 0's prefix
+    b = pool.alloc(1, n_pages - len(shared), shared=shared)
+    P = pool.total_pages
+    kp = _rand(ks[1], (KV, P, ps, hd), jnp.float32)
+    vp = _rand(ks[2], (KV, P, ps, hd), jnp.float32)
+    tables = jnp.asarray([a, shared + b], jnp.int32)
+    lengths = jnp.full((B,), n_pages * ps, jnp.int32)
+    base = ops.paged_flash_decode(q, kp, vp, tables, lengths)
+
+    released = pool.free(0)
+    assert sorted(released) == sorted(a[2:])  # shared pages stayed live
+    assert all(pg in pool.owned(1) for pg in shared)
+    pool.assert_invariants()
+    hot = jnp.asarray(released)
+    kp = kp.at[:, hot].set(1e4)
+    vp = vp.at[:, hot].set(1e4)
+    out = ops.paged_flash_decode(q, kp, vp, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(out[1]))
+    assert sorted(pool.free(1)) == sorted(set(shared) | set(b))
+    pool.assert_invariants()
+
+
 # ---------------------------------------------------------------------------
 # pool bookkeeping: alloc/free safety
 # ---------------------------------------------------------------------------
@@ -140,8 +180,12 @@ def test_pool_alloc_free_basics():
         pool.alloc(0, 1)                      # slot 0 already owns pages
     pool.free(0)
     assert pool.free_pages == 3 and sorted(pool.free(1)) == sorted(b)
-    assert pool.free(5) == []                 # never-admitted slot: no-op
+    with pytest.raises(ValueError, match="owns no pages"):
+        pool.free(5)                          # never admitted: a caller bug
+    with pytest.raises(ValueError, match="owns no pages"):
+        pool.free(0)                          # double free: same error class
     assert pool.occupancy == 0.0
+    pool.assert_invariants()
 
 
 def test_pool_random_admission_retirement_never_leaks():

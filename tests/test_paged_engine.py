@@ -13,35 +13,17 @@ Covers the DESIGN.md §Paged KV cache engine contract:
 import time
 
 import numpy as np
+import pytest
 
-from repro.configs import get_config, smoke_variant
+from conftest import MAX_NEW, tiny_engine, tiny_requests
 from repro.serving.api import Request
-from repro.serving.engine import InProcessServingEngine, PagedVariantBackend
+from repro.serving.engine import PagedVariantBackend
 
-MAX_NEW = 6
-
-
-def _variants(n=1):
-    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
-        d_model=64, d_ff=128, vocab_size=128)
-    out = {"small": (base.replace(num_layers=2, name="small"), 70.0)}
-    if n > 1:
-        out["big"] = (base.replace(num_layers=3, name="big"), 75.0)
-    return out
-
-
-def _reqs(n, rng, max_new=MAX_NEW, prompt_len=8):
-    return [Request(rid=i, tokens=rng.integers(0, 128, prompt_len),
-                    max_new=max_new, arrival=time.time()) for i in range(n)]
+_reqs = tiny_requests
 
 
 def _engine(kv_cache="paged", **kw):
-    kw.setdefault("max_batch", 2)
-    kw.setdefault("prompt_len", 8)
-    kw.setdefault("max_new", MAX_NEW)
-    kw.setdefault("decode_chunk", 2)
-    kw.setdefault("kv_page_size", 4)
-    return InProcessServingEngine(_variants(), kv_cache=kv_cache, **kw)
+    return tiny_engine(kv_cache=kv_cache, **kw)
 
 
 def test_paged_matches_dense_outputs():
@@ -164,9 +146,7 @@ def test_profiler_builds_paged_backend_on_paged_engine():
 
 
 def test_variant_switch_drains_paged_slots_and_frees_pages():
-    eng = InProcessServingEngine(_variants(2), max_batch=2, prompt_len=8,
-                                 max_new=MAX_NEW, decode_chunk=2,
-                                 kv_cache="paged", kv_page_size=4)
+    eng = _engine(n_variants=2)
     eng.apply_allocation(0.0, {"small": 1})
     rng = np.random.default_rng(6)
     for r in _reqs(4, rng):
@@ -180,3 +160,73 @@ def test_variant_switch_drains_paged_slots_and_frees_pages():
     assert len(eng.done) == 4
     assert sum(1 for r in eng.done if r.accuracy == 75.0) == 2
     assert eng.backends["big"].pool.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# prefix-sharing greedy-parity matrix (DESIGN.md §Prefix sharing)
+# ---------------------------------------------------------------------------
+
+_SHARED_PROMPT_LEN = 16
+# budget must outlive several decode chunks: sharing needs the seed request
+# still resident (pages live, prefix published) when the others admit
+_SHARED_MAX_NEW = 6
+
+
+def _shared_prefix_workload(pallas, page, gqa, sched, sharing):
+    """Serve a shared-prefix workload and return {rid: tokens}, hit count.
+
+    Five 16-token prompts over one 8-token system prefix, three of them
+    byte-identical (the full-prompt match that exercises the CoW boundary
+    at page size 16). Request 0 is admitted one tick early so the rest
+    overlap a live, published prefix — sharing only happens between
+    overlapping requests (index entries die with their pages)."""
+    eng = tiny_engine(max_batch=3, prompt_len=_SHARED_PROMPT_LEN,
+                      max_new=_SHARED_MAX_NEW, kv_cache="paged",
+                      kv_page_size=page, kv_prefix_sharing=sharing,
+                      scheduler=sched, use_pallas=pallas,
+                      variant_overrides={"num_kv_heads": 2 if gqa else 4})
+    eng.apply_allocation(0.0, {"small": 1})
+    rng = np.random.default_rng(9)
+    pre = rng.integers(0, 128, 8)
+    p0 = np.concatenate([pre, rng.integers(0, 128, 8)])
+    prompts = [p0, np.concatenate([pre, rng.integers(0, 128, 8)]), p0,
+               np.concatenate([pre, rng.integers(0, 128, 8)]), p0]
+    eng.submit(Request(rid=0, tokens=prompts[0], max_new=_SHARED_MAX_NEW,
+                       arrival=time.time()), "small")
+    eng.step(0.0)
+    for i in range(1, len(prompts)):
+        eng.submit(Request(rid=i, tokens=prompts[i], max_new=_SHARED_MAX_NEW,
+                           arrival=time.time()), "small")
+    eng.drain(0.0)
+    assert len(eng.done) == len(prompts)
+    b = eng.backends["small"]
+    b.pool.assert_invariants()
+    assert b.pool.used_pages == 0          # every page returned, shared too
+    return ({r.rid: np.asarray(r.output) for r in eng.done},
+            b.pool.prefix_hits)
+
+
+_PARITY_REF = {}                           # (gqa, sched) -> sharing-off tokens
+
+
+@pytest.mark.parametrize("sched", ["fifo", "chunked"])
+@pytest.mark.parametrize("gqa", [True, False])
+@pytest.mark.parametrize("page", [8, 16])
+@pytest.mark.parametrize("pallas", [False, True])
+def test_prefix_sharing_parity_matrix(pallas, page, gqa, sched):
+    """Shared-prefix admission is bitwise-identical to sharing disabled
+    across {jnp, Pallas} x {page 8/16} x {GQA on/off} x {chunked/monolithic
+    prefill}. The sharing-off reference is computed once per model/schedule
+    (jnp, page 8) — the repo's existing parity suites establish that greedy
+    tokens do not move across kernel or page-size choices, so every cell
+    here also re-checks that invariance."""
+    on, hits = _shared_prefix_workload(pallas, page, gqa, sched, True)
+    assert hits > 0                        # parity must not hold vacuously
+    key = (gqa, sched)
+    if key not in _PARITY_REF:
+        _PARITY_REF[key] = _shared_prefix_workload(False, 8, gqa, sched,
+                                                   False)[0]
+    off = _PARITY_REF[key]
+    assert sorted(on) == sorted(off)
+    for rid in on:
+        np.testing.assert_array_equal(on[rid], off[rid])

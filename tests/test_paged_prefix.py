@@ -1,0 +1,256 @@
+"""Stateful property harness for prefix-sharing ``PagedKVCache``.
+
+Refcounted pages + copy-on-write are a classic source of *silent*
+corruption: an aliased write poisons someone else's attention, a missed
+decrement leaks pages, a stale index entry maps a sharer onto reused
+memory. This harness drives random admit / decode / fork / preempt /
+resume / retire sequences against the pool plus a host-side simulation of
+the device page arrays (each written position stores a known token value),
+and after **every** step asserts the DESIGN.md §Prefix sharing invariants:
+
+  * refcount conservation — sum of refcounts == slot->page mappings, and
+    every usable page is either free or refcounted by the slots mapping it
+    (no leaks, no double frees),
+  * CoW isolation — gathering any live slot's pages yields exactly the
+    token values that slot wrote or shared; writes on behalf of one
+    request never mutate another's gathered K/V (released pages are
+    poisoned to catch dangling references),
+  * prefix-index entries always point at live pages (bidirectionally).
+
+hypothesis (RuleBasedStateMachine) drives the schedule when installed —
+the CI profile runs it at 500 examples with a fixed seed (see
+tests/conftest.py) — and a seeded random driver keeps the same core
+exercised without it.
+"""
+import numpy as np
+
+from repro.models.attention import PagedKVCache
+
+PS = 4                                   # page size (tokens)
+MAX_PROMPT_BLOCKS = 3
+MAX_DECODE = 4
+PAGES_PER_SLOT = -(-(MAX_PROMPT_BLOCKS * PS + MAX_DECODE) // PS)
+TOTAL_PAGES = 3 * PAGES_PER_SLOT + 3     # ~3 concurrent slots + slack
+POISON = -1
+
+# canonical prompt blocks: a tiny alphabet makes chain matches (and the
+# full-prefix CoW case) common instead of astronomically rare
+_PATTERNS = [np.arange(i * 10, i * 10 + PS, dtype=np.int64)
+             for i in range(3)]
+
+
+class _HarnessCore:
+    """The model under test plus its host-side mirror.
+
+    ``kv[page, offset]`` simulates the device K/V pool: a written position
+    holds the token value whose K/V it would carry (token values are unique
+    per (slot, position) for generated tokens, so any aliased write shows
+    up in a gather check)."""
+
+    def __init__(self):
+        self.pool = PagedKVCache(TOTAL_PAGES, PS)
+        self.kv = np.full((TOTAL_PAGES, PS), POISON, np.int64)
+        self.live = {}          # slot -> {"seq", "prompt_len", "table"}
+        self.preempted = []     # [(seq, prompt_len)] awaiting resume
+        self.next_slot = 0
+        self.capacity = PAGES_PER_SLOT * PS
+
+    # ------------------------------------------------------------- actions
+    def admit(self, prompt, gen=()):
+        """Admit ``prompt`` (+ ``gen`` for a resume) the way the engine
+        does: plan against the index, map shared blocks by reference, CoW
+        the fully-matched boundary block, write only the tail, publish the
+        prompt blocks once fully written. Returns the slot or None when
+        the pool refuses (nothing may have changed)."""
+        seq = np.concatenate([np.asarray(prompt, np.int64),
+                              np.asarray(gen, np.int64)])
+        assert 1 <= len(seq) <= self.capacity
+        plan = self.pool.prefix_plan(prompt, count=False)
+        slot = self.next_slot
+        fresh = self.pool.alloc(slot, PAGES_PER_SLOT - len(plan.shared),
+                                shared=plan.shared)
+        if fresh is None:
+            return None
+        self.next_slot += 1
+        table = list(plan.shared) + fresh
+        if plan.cow_src is not None:
+            self.kv[fresh[0]] = self.kv[plan.cow_src]
+        for pos in range(plan.tail_start, len(seq)):
+            self.kv[table[pos // PS], pos % PS] = seq[pos]
+        self.pool.publish_prefix(slot, prompt)
+        self.live[slot] = {"seq": seq, "prompt_len": len(prompt),
+                           "table": table}
+        return slot
+
+    def decode(self, slot):
+        """Append one generated token (value unique to (slot, position))."""
+        rec = self.live[slot]
+        pos = len(rec["seq"])
+        if pos >= self.capacity:
+            return
+        tok = 10_000 + slot * 100 + pos
+        self.kv[rec["table"][pos // PS], pos % PS] = tok
+        rec["seq"] = np.append(rec["seq"], tok)
+
+    def fork(self, slot):
+        """Admit a fresh request with a live slot's exact prompt — the
+        full-chain match that exercises the CoW boundary case."""
+        rec = self.live[slot]
+        return self.admit(rec["seq"][:rec["prompt_len"]])
+
+    def release(self, slot, keep: bool):
+        """Retire (or preempt, ``keep=True``) a slot: refcounts drop and
+        every page actually released is poisoned — if anyone still gathers
+        through it, the next check sees POISON."""
+        rec = self.live.pop(slot)
+        released = self.pool.free(slot)
+        for pg in released:
+            assert pg not in {p for r in self.live.values()
+                              for p in r["table"]}
+            self.kv[pg] = POISON
+        if keep:
+            self.preempted.append((rec["seq"], rec["prompt_len"]))
+
+    def resume(self):
+        """Re-admit a preempted request: prompt + preserved tokens rebuild
+        through the same sharing path (plan over the prompt only)."""
+        seq, plen = self.preempted.pop()
+        if self.admit(seq[:plen], seq[plen:]) is None:
+            self.preempted.append((seq, plen))
+
+    # -------------------------------------------------------------- checks
+    def check(self):
+        self.pool.assert_invariants()
+        for slot, rec in self.live.items():
+            assert self.pool.owned(slot) == rec["table"]
+            got = np.array([self.kv[rec["table"][p // PS], p % PS]
+                            for p in range(len(rec["seq"]))])
+            np.testing.assert_array_equal(got, rec["seq"])
+
+
+def _make_prompt(pattern_ids, tail_seed):
+    blocks = [_PATTERNS[i] for i in pattern_ids]
+    prompt = np.concatenate(blocks) if blocks else _PATTERNS[0]
+    if tail_seed >= 0:       # ragged tail: unpublishable partial block
+        rng = np.random.default_rng(tail_seed)
+        prompt = np.concatenate(
+            [prompt, rng.integers(0, 100, 1 + tail_seed % (PS - 1))])
+    return prompt[:MAX_PROMPT_BLOCKS * PS]
+
+
+def _drive(core, rng, steps):
+    """Seeded random schedule over the core (the non-hypothesis driver)."""
+    for _ in range(steps):
+        op = rng.integers(0, 6)
+        slots = sorted(core.live)
+        if op == 0 or not slots:
+            ids = list(rng.integers(0, len(_PATTERNS),
+                                    1 + rng.integers(0, MAX_PROMPT_BLOCKS)))
+            core.admit(_make_prompt(ids, int(rng.integers(-1, 40))))
+        elif op == 1:
+            core.fork(slots[rng.integers(0, len(slots))])
+        elif op == 2:
+            core.decode(slots[rng.integers(0, len(slots))])
+        elif op == 3:
+            core.release(slots[rng.integers(0, len(slots))], keep=True)
+        elif op == 4 and core.preempted:
+            core.resume()
+        else:
+            core.release(slots[rng.integers(0, len(slots))], keep=False)
+        core.check()
+
+
+def test_prefix_pool_seeded_schedules():
+    """Deterministic fallback sweep (always runs, hypothesis or not)."""
+    for seed in range(4):
+        core = _HarnessCore()
+        _drive(core, np.random.default_rng(seed), 300)
+        for slot in sorted(core.live):
+            core.release(slot, keep=False)
+            core.check()
+        assert core.pool.free_pages == core.pool.usable_pages
+
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                     precondition, rule)
+    _HAVE_HYPOTHESIS = True
+except ImportError:                      # optional outside CI — the seeded
+    _HAVE_HYPOTHESIS = False             # sweep above still ran
+
+if not _HAVE_HYPOTHESIS:
+    class RuleBasedStateMachine:         # placeholder so the class parses
+        TestCase = None
+
+    def _noop(*a, **k):
+        return lambda f: f
+    rule = invariant = precondition = _noop
+
+    class st:                            # never called without hypothesis
+        @staticmethod
+        def integers(*a, **k):
+            return None
+
+        @staticmethod
+        def lists(*a, **k):
+            return None
+
+
+class PrefixPoolMachine(RuleBasedStateMachine):
+    """hypothesis drives the same core through arbitrary interleavings;
+    every rule ends with the full invariant check (the @invariant below
+    re-runs it between rules)."""
+
+    def __init__(self):
+        super().__init__()
+        self.core = _HarnessCore()
+
+    @rule(ids=st.lists(st.integers(0, len(_PATTERNS) - 1), min_size=1,
+                       max_size=MAX_PROMPT_BLOCKS),
+          tail=st.integers(-1, 40))
+    def admit(self, ids, tail):
+        self.core.admit(_make_prompt(ids, tail))
+
+    @precondition(lambda self: self.core.live)
+    @rule(k=st.integers(0, 7))
+    def fork(self, k):
+        slots = sorted(self.core.live)
+        self.core.fork(slots[k % len(slots)])
+
+    @precondition(lambda self: self.core.live)
+    @rule(k=st.integers(0, 7))
+    def decode(self, k):
+        slots = sorted(self.core.live)
+        self.core.decode(slots[k % len(slots)])
+
+    @precondition(lambda self: self.core.live)
+    @rule(k=st.integers(0, 7))
+    def preempt(self, k):
+        slots = sorted(self.core.live)
+        self.core.release(slots[k % len(slots)], keep=True)
+
+    @precondition(lambda self: self.core.preempted)
+    @rule()
+    def resume(self):
+        self.core.resume()
+
+    @precondition(lambda self: self.core.live)
+    @rule(k=st.integers(0, 7))
+    def retire(self, k):
+        slots = sorted(self.core.live)
+        self.core.release(slots[k % len(slots)], keep=False)
+
+    @invariant()
+    def pool_consistent(self):
+        self.core.check()
+
+    def teardown(self):
+        for slot in sorted(self.core.live):
+            self.core.release(slot, keep=False)
+        self.core.check()
+        assert self.core.pool.free_pages == self.core.pool.usable_pages
+
+
+if _HAVE_HYPOTHESIS:
+    TestPrefixPoolStateful = PrefixPoolMachine.TestCase

@@ -18,31 +18,16 @@ Covers the scheduler contract across both backends:
 import numpy as np
 import pytest
 
-from repro.configs import get_config, smoke_variant
+from conftest import MAX_NEW, VOCAB, tiny_engine
 from repro.serving.api import Request, summarize_requests
 from repro.serving.driver import ElapsedClock, run_serving_loop, trace_load
-from repro.serving.engine import InProcessServingEngine
 from repro.serving.sched import (MAX_PREEMPTIONS, ChunkedScheduler,
                                  EDFScheduler, FIFOScheduler, make_scheduler)
 
-VOCAB = 128
-MAX_NEW = 6
-
-
-def _variants(d_model=64):
-    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
-        d_model=d_model, d_ff=128, vocab_size=VOCAB)
-    return {"small": (base.replace(num_layers=2, name="small"), 70.0)}
-
 
 def _engine(**kw):
-    kw.setdefault("max_batch", 2)
-    kw.setdefault("prompt_len", 8)
-    kw.setdefault("max_new", MAX_NEW)
-    kw.setdefault("decode_chunk", 2)
-    kw.setdefault("kv_page_size", 4)
     kw.setdefault("prefill_chunk", 4)
-    eng = InProcessServingEngine(_variants(), **kw)
+    eng = tiny_engine(**kw)
     eng.apply_allocation(0.0, {"small": 1})
     return eng
 
@@ -289,10 +274,8 @@ def test_serving_loop_single_clock_sane_latencies():
     profiles = {"small": VariantProfile(
         name="small", accuracy=70.0, rt=0.1, th_slope=30.0, th_intercept=5.0,
         lat_base_ms=30.0, lat_k_ms=10.0)}
-    eng = InProcessServingEngine(_variants(), max_batch=4, prompt_len=8,
-                                 max_new=4, decode_chunk=2,
-                                 scheduler="chunked", clock=ElapsedClock())
-    eng.apply_allocation(0.0, {"small": 1})   # pre-warm: the measured loop
+    eng = _engine(max_batch=4, max_new=4, scheduler="chunked",
+                  clock=ElapsedClock())       # pre-warm: the measured loop
     # below must spend its seconds serving, not compiling
     ctrl = InfAdapterController(
         profiles, MovingMaxForecaster(),
@@ -403,9 +386,7 @@ def test_profiler_arrivals_share_engine_clock():
     backend's own clock, so profiling an ElapsedClock engine yields sane,
     non-negative queue waits instead of epoch-minus-elapsed garbage."""
     from repro.profiling.measure import EngineProfiler
-    eng = InProcessServingEngine(_variants(), max_batch=2, prompt_len=8,
-                                 max_new=4, decode_chunk=2,
-                                 clock=ElapsedClock())
+    eng = tiny_engine(max_new=4, clock=ElapsedClock())
     prof = EngineProfiler(eng, points=(1, 2), requests_per_point=4, warmup=1)
     m = prof.profile_variant("small", points=(1, 2), requests_per_point=4)
     for p in m.points:
