@@ -304,8 +304,13 @@ def prefix_sharing() -> Tuple[List[Tuple[str, float, str]], Dict]:
         makespan = time.time() - t0
         assert len(eng.done) == PS_N
         assert b.pool.used_pages == 0     # shared pages all returned
+        # gated numbers come from the metrics registry; the backend's
+        # attribute counter must agree (single prefill-accounting path)
         stats = eng.kv_pool_stats()
-        return {"prefill_tokens": b.prefill_tokens_total,
+        prefill_tokens = int(eng.metrics.value("engine.prefill_tokens_total"))
+        assert prefill_tokens == b.prefill_tokens_total, \
+            (prefill_tokens, b.prefill_tokens_total)
+        return {"prefill_tokens": prefill_tokens,
                 "prefix_lookups": stats["prefix_lookups"],
                 "prefix_hits": stats["prefix_hits"],
                 "prefix_hit_rate": stats["prefix_hit_rate"],
@@ -336,6 +341,119 @@ def prefix_sharing() -> Tuple[List[Tuple[str, float, str]], Dict]:
     return rows, cell
 
 
+def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """The §Observability overhead study + trace artifact production.
+
+    Three identical paged engines differing only in observability level —
+    fully disabled, metrics-only (the default), and full tracing — run the
+    same closed loop through ``_closed_loop_pair``; the payload records the
+    per-tick cost ratios. A no-op-hook microbench then times the disabled
+    instruments directly: ``disabled_hook_frac`` is the fraction of a
+    disabled-mode tick a *generous* per-tick hook budget would cost, and
+    the acceptance gate requires it ≤ 2% (``gate_frac``). Finally a small
+    virtual-clock traced run exports ``reports/TRACE_engine.json`` +
+    ``METRICS_engine.jsonl`` and schema-validates both (the CI gate
+    re-validates the shipped artifacts via ``python -m repro.obs.export``).
+    """
+    from repro.obs import Observability
+    from repro.obs.export import (validate_metrics_file, validate_trace_file,
+                                  write_chrome_trace, write_metrics_jsonl)
+    from repro.serving.api import Request
+    from repro.serving.engine import InProcessServingEngine
+
+    def mk(**kw):
+        eng = InProcessServingEngine(
+            _paged_variant(), max_batch=PG_BATCH, prompt_len=PG_PROMPT,
+            max_new=PG_MAX_NEW, decode_chunk=PG_CHUNK, queue_cap=100_000,
+            kv_cache="paged", kv_page_size=PG_PAGE, **kw)
+        eng.apply_allocation(0.0, {"bench-paged-2L": 1})
+        return eng
+
+    engines = {"disabled": mk(obs=Observability.disabled()),
+               "metrics": mk(),
+               "traced": mk(trace=True)}
+
+    def short(rng):
+        return int(rng.integers(PG_SHORT_NEW - 4, PG_SHORT_NEW + 5))
+
+    ticks = _closed_loop_pair(engines, k=PG_BATCH // 2, max_new=short,
+                              n_steps=60, seed=3)
+    base_ms = max(ticks["disabled"]["mean_step_ms"], 1e-9)
+    payload: Dict = {
+        "ticks": ticks,
+        "metrics_over_disabled": ticks["metrics"]["mean_step_ms"] / base_ms,
+        "traced_over_disabled": ticks["traced"]["mean_step_ms"] / base_ms,
+    }
+
+    # --- no-op hook microbench: what do the disabled instruments cost? ---
+    obs = Observability.disabled()
+    m, tr = obs.metrics, obs.tracer
+    c, h, g = m.counter("noop.c"), m.histogram("noop.h"), m.gauge("noop.g")
+    n_iter, calls_per_iter = 20_000, 10
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        c.inc(); c.inc(4); h.observe(1.0); g.set(2.0)       # noqa: E702
+        m.inc("noop.c"); m.observe("noop.h", 1.0)           # noqa: E702
+        tr.event(0, "x", 0.0); tr.event(1, "y", 1.0)        # noqa: E702
+        if tr.on:
+            pass
+        if m.enabled:
+            pass
+    per_hook_s = (time.perf_counter() - t0) / (n_iter * calls_per_iter)
+    # generous per-tick budget: a few per-phase hooks + a handful per slot
+    hooks_per_tick = 8 + 6 * PG_BATCH
+    frac = per_hook_s * hooks_per_tick / (base_ms / 1e3)
+    payload.update({"noop_hook_ns": per_hook_s * 1e9,
+                    "hooks_per_tick_budget": hooks_per_tick,
+                    "disabled_hook_frac": frac, "gate_frac": 0.02})
+
+    # --- artifact run: small traced workload on one virtual clock ---
+    t_art = [0.0]
+    art = InProcessServingEngine(
+        _paged_variant(), max_batch=8, prompt_len=32, max_new=16,
+        decode_chunk=4, queue_cap=100_000, kv_cache="paged", kv_page_size=8,
+        scheduler="chunked", preemption="requeue",
+        clock=lambda: t_art[0], trace=True)
+    art.apply_allocation(0.0, {"bench-paged-2L": 1})
+    rng = np.random.default_rng(5)
+    for i in range(24):
+        art.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, 32),
+                           max_new=int(rng.integers(4, 16)),
+                           arrival=t_art[0], slo_ms=500.0), None)
+        art.step(t_art[0])
+        t_art[0] += 0.01
+    while art.backlog(t_art[0]) or art.in_flight():
+        art.step(t_art[0])
+        t_art[0] += 0.01
+    os.makedirs("reports", exist_ok=True)
+    tp = os.path.join("reports", "TRACE_engine.json")
+    mp = os.path.join("reports", "METRICS_engine.jsonl")
+    n_ev = write_chrome_trace(tp, art.tracer, label="bench_engine")
+    n_m = write_metrics_jsonl(
+        mp, art.metrics,
+        extra=[{"name": "run.config", "kind": "meta",
+                "bench": "engine_serving.observability",
+                "scheduler": "chunked", "kv_cache": "paged"}])
+    payload["artifacts"] = {"trace": tp, "trace_events": n_ev,
+                            "trace_valid": validate_trace_file(tp),
+                            "metrics": mp, "metric_rows": n_m,
+                            "metrics_valid": validate_metrics_file(mp),
+                            "requests": len(art.done),
+                            "trace_summary": art.tracer.summary()}
+
+    rows = [
+        ("obs_disabled_hook_frac", frac * 1e6,
+         f"hook={per_hook_s * 1e9:.0f}ns x{hooks_per_tick}/tick "
+         f"= {frac:.4f} of a {base_ms:.2f}ms tick (gate<=0.02)"),
+        ("obs_metrics_tick_ratio", payload["metrics_over_disabled"] * 1e6,
+         f"metrics/disabled={payload['metrics_over_disabled']:.3f}"),
+        ("obs_traced_tick_ratio", payload["traced_over_disabled"] * 1e6,
+         f"traced/disabled={payload['traced_over_disabled']:.3f} "
+         f"({n_ev} events exported)"),
+    ]
+    return rows, payload
+
+
 def run() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     for rate in RATES_RPS:
@@ -360,6 +478,9 @@ def run() -> List[Tuple[str, float, str]]:
     sharing_rows, sharing_cell = prefix_sharing()
     rows.extend(sharing_rows)
     payload["prefix_sharing"] = sharing_cell
+    obs_rows, obs_cell = observability()
+    rows.extend(obs_rows)
+    payload["observability"] = obs_cell
     os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

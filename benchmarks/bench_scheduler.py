@@ -201,6 +201,7 @@ def _replay(policy: str, workload, costs: Dict[str, float],
     eng, clock = engine if engine is not None else _engine(policy)
     b = next(iter(eng.backends.values()))
     clock.t = 0.0
+    eng.metrics.reset()       # capacity-calibration traffic must not leak
     i = 0
     while i < len(arrivals) or eng.backlog(0.0) or eng.in_flight():
         if (i < len(arrivals) and eng.backlog(0.0) == 0
@@ -219,14 +220,24 @@ def _replay(policy: str, workload, costs: Dict[str, float],
     done = {r.rid: r for r in eng.done}
     short_lat = [done[j].latency_ms for j in range(len(arrivals))
                  if not is_long[j] and j in done]
+    # gated numbers come from the metrics registry (per-request SLO
+    # goodput, latency histogram, completion counter) — summarize() reads
+    # the same underlying requests, so the two must agree (cross-checked)
+    m = eng.metrics
+    n_reg = int(m.value("requests.completed"))
+    goodput_reg = m.value("requests.goodput_ok") / max(n_reg, 1)
+    p99_reg = float(m.get("request.latency_ms").percentile(99))
+    assert n_reg == s["n_requests"], (n_reg, s["n_requests"])
     return {
-        "goodput": s["goodput"],
-        "p99_ms": s["p99_ms"],
+        "goodput": goodput_reg,
+        "p99_ms": p99_reg,
         "mean_latency_ms": s["mean_latency_ms"],
         "p99_queue_ms": s.get("p99_queue_ms", 0.0),
         "short_p99_ms": float(np.percentile(short_lat, 99)),
-        "throughput_rps": s["n_requests"] / max(makespan, 1e-9),
-        "n_requests": s["n_requests"],
+        "throughput_rps": n_reg / max(makespan, 1e-9),
+        "n_requests": n_reg,
+        "summary_goodput": s["goodput"],   # summarize() parity reference
+        "summary_p99_ms": s["p99_ms"],
     }
 
 

@@ -85,6 +85,13 @@ def main():
     ap.add_argument("--fail-node-at", type=float, default=None,
                     help="crash node0 this many seconds in (recovers 8 s "
                          "later) — exercises retry + re-placement")
+    ap.add_argument("--trace", action="store_true",
+                    help="record request lifecycle spans + per-tick phase "
+                         "costs and export reports/TRACE_engine.json "
+                         "(Perfetto-loadable), METRICS_engine.jsonl, and "
+                         "AUDIT_decisions.jsonl")
+    ap.add_argument("--report-dir", default="reports",
+                    help="where --trace writes its artifacts")
     args = ap.parse_args()
 
     variants = build_ladder()
@@ -93,7 +100,8 @@ def main():
     budget = max(args.replicas, 2) if fabric_on else 3
     engine_kw = dict(max_batch=8, prompt_len=16, mode=args.mode, max_new=8,
                      decode_chunk=4, scheduler=args.scheduler,
-                     preemption=args.preemption, clock=ElapsedClock())
+                     preemption=args.preemption, clock=ElapsedClock(),
+                     trace=args.trace)
     if fabric_on:
         n_nodes = args.nodes or max(args.replicas, 2)
         # room for create-then-remove surge and for re-placement after a
@@ -146,6 +154,28 @@ def main():
           f"rejected): goodput={s['goodput']:.1%} "
           f"viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
           f"mean={s['mean_latency_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
+
+    if args.trace:
+        from repro.obs.export import (write_audit_jsonl, write_chrome_trace,
+                                      write_metrics_jsonl)
+        os.makedirs(args.report_dir, exist_ok=True)
+        tp = os.path.join(args.report_dir, "TRACE_engine.json")
+        mp = os.path.join(args.report_dir, "METRICS_engine.jsonl")
+        ap_ = os.path.join(args.report_dir, "AUDIT_decisions.jsonl")
+        n_ev = write_chrome_trace(tp, engine.tracer, label="serve_autoscale")
+        n_m = write_metrics_jsonl(
+            mp, engine.metrics,
+            extra=[{"name": "run.config", "kind": "meta",
+                    "scheduler": args.scheduler, "mode": args.mode,
+                    "seconds": args.seconds, "slo_ms": slo_ms}])
+        n_d = write_audit_jsonl(ap_, ctrl.audit)
+        asum = ctrl.audit.summary()
+        print(f"\ntrace: {tp} ({n_ev} events; load in Perfetto/chrome://tracing)")
+        print(f"metrics: {mp} ({n_m} series)")
+        print(f"audit: {ap_} ({n_d} decisions, "
+              f"{asum.get('n_measured', 0):.0f} measured; "
+              f"goodput regret {asum.get('mean_abs_goodput_regret', float('nan')):.3f}, "
+              f"p99 regret {asum.get('mean_p99_regret_ms', float('nan')):+.0f} ms)")
 
 
 if __name__ == "__main__":

@@ -240,6 +240,88 @@ def scheduler_table(bench_path: str) -> str:
     return "\n".join(out)
 
 
+def observability_table(bench_path: str) -> str:
+    """§Observability: per-tick cost at each instrumentation level
+    (disabled / metrics-only / traced), the no-op-hook overhead gate, and
+    the exported artifact inventory — from the ``observability`` cell of
+    BENCH_engine.json."""
+    out = ["| level | mean tick ms | p99 tick ms | vs disabled |",
+           "|---|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(out)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    c = data.get("observability")
+    if not c:
+        return "\n".join(out)
+    ticks = c.get("ticks", {})
+    ratios = {"disabled": 1.0, "metrics": c.get("metrics_over_disabled"),
+              "traced": c.get("traced_over_disabled")}
+    for level in ("disabled", "metrics", "traced"):
+        t = ticks.get(level)
+        if not t:
+            continue
+        out.append(f"| {level} | {t['mean_step_ms']:.2f} | "
+                   f"{t['p99_step_ms']:.2f} | {ratios[level]:.3f}× |")
+    out.append(f"| no-op hook budget | "
+               f"{c.get('noop_hook_ns', float('nan')):.0f} ns × "
+               f"{c.get('hooks_per_tick_budget', 0)}/tick | — | "
+               f"**{c.get('disabled_hook_frac', float('nan')):.4f}** "
+               f"(gate ≤{c.get('gate_frac', 0.02)}) |")
+    art = c.get("artifacts", {})
+    if art:
+        out.append(f"| artifacts | {art.get('trace', '—')} "
+                   f"({art.get('trace_events', 0)} events) | "
+                   f"{art.get('metrics', '—')} "
+                   f"({art.get('metric_rows', 0)} rows) | "
+                   f"{art.get('requests', 0)} traced requests |")
+    return "\n".join(out)
+
+
+def audit_table(audit_path: str, max_rows: int = 12) -> str:
+    """§Observability: controller decisions with predicted vs measured
+    latency/goodput and the regret per decision window — from the
+    AUDIT_decisions.jsonl a traced driver run exports (empty table until
+    one has been run)."""
+    out = ["| t | reason | units | pred p99 / meas p99 ms | "
+           "pred / meas goodput | p99 regret ms |",
+           "|---|---|---|---|---|---|"]
+    if not os.path.exists(audit_path):
+        return "\n".join(out)
+    rows = []
+    try:
+        with open(audit_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    for d in rows[:max_rows]:
+        units = {m: n for m, n in d.get("outputs", {}).get("units", {}).items()
+                 if n}
+        pred = d.get("outputs", {}).get("predicted", {})
+        meas = d.get("measured") or {}
+        reg = d.get("regret") or {}
+        ustr = ",".join(f"{m}:{n}" for m, n in sorted(units.items())) or "—"
+
+        def num(v, fmt="{:.0f}"):
+            return fmt.format(v) if isinstance(v, (int, float)) else "—"
+        out.append(
+            f"| {d['t']:.0f} | {d.get('reason', '?')} | {ustr} | "
+            f"{num(pred.get('p99_ms'))} / {num(meas.get('p99_ms'))} | "
+            f"{num(pred.get('goodput'), '{:.2f}')} / "
+            f"{num(meas.get('goodput'), '{:.2f}')} | "
+            f"{num(reg.get('p99_ms'), '{:+.0f}')} |")
+    if len(rows) > max_rows:
+        out.append(f"| … | {len(rows) - max_rows} more decisions "
+                   f"in {audit_path} | | | | |")
+    return "\n".join(out)
+
+
 def inject(md_path: str, marker: str, table: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -264,6 +346,7 @@ def main():
     ap.add_argument("--bench-engine", default="reports/BENCH_engine.json")
     ap.add_argument("--bench-scheduler",
                     default="reports/BENCH_scheduler.json")
+    ap.add_argument("--audit", default="reports/AUDIT_decisions.jsonl")
     ap.add_argument("--md", default="EXPERIMENTS.md")
     args = ap.parse_args()
     rows = load(args.dir)
@@ -280,6 +363,9 @@ def main():
     inject(args.md, "PREFIX_SHARING_TABLE",
            prefix_sharing_table(args.bench_engine))
     inject(args.md, "SCHEDULER_TABLE", scheduler_table(args.bench_scheduler))
+    inject(args.md, "OBS_OVERHEAD_TABLE",
+           observability_table(args.bench_engine))
+    inject(args.md, "OBS_AUDIT_TABLE", audit_table(args.audit))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

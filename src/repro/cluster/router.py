@@ -26,7 +26,8 @@ import numpy as np
 
 __all__ = ["ReplicaView", "RoutingAPI", "PowerOfTwoChoicesRouter",
            "LeastOutstandingRouter", "RoundRobinReplicaRouter",
-           "RandomReplicaRouter", "ROUTERS", "make_router"]
+           "RandomReplicaRouter", "InstrumentedRouter", "ROUTERS",
+           "make_router"]
 
 
 @dataclass
@@ -106,16 +107,44 @@ class RandomReplicaRouter:
         return replicas[int(self._rng.integers(len(replicas)))].rid
 
 
+class InstrumentedRouter:
+    """Delegating wrapper that publishes routing decisions into a metrics
+    registry (``repro.obs``): total picks, picks with no candidate, and a
+    histogram of the chosen replica's load — enough to see whether level-2
+    routing is actually balancing without threading counters by hand."""
+
+    def __init__(self, inner: RoutingAPI, metrics):
+        self.inner = inner
+        self.metrics = metrics
+
+    def pick(self, replicas: Sequence[ReplicaView]) -> Optional[str]:
+        rid = self.inner.pick(replicas)
+        m = self.metrics
+        if rid is None:
+            m.inc("router.no_candidate")
+            return None
+        m.inc("router.picks")
+        for r in replicas:
+            if r.rid == rid:
+                m.observe("router.picked_load", r.load)
+                break
+        return rid
+
+
 ROUTERS = {"p2c": PowerOfTwoChoicesRouter, "least": LeastOutstandingRouter,
            "rr": RoundRobinReplicaRouter, "random": RandomReplicaRouter}
 
 
-def make_router(router) -> RoutingAPI:
-    """Accept a router name or an instance (pluggable routing)."""
+def make_router(router, metrics=None) -> RoutingAPI:
+    """Accept a router name or an instance (pluggable routing). With a
+    ``metrics`` registry, the router is wrapped in ``InstrumentedRouter``
+    so every pick lands in the engine-wide registry."""
     if isinstance(router, str):
         try:
-            return ROUTERS[router]()
+            router = ROUTERS[router]()
         except KeyError:
             raise ValueError(f"unknown router {router!r} "
                              f"(available: {sorted(ROUTERS)})")
+    if metrics is not None and getattr(metrics, "enabled", False):
+        return InstrumentedRouter(router, metrics)
     return router

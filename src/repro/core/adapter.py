@@ -26,6 +26,7 @@ from repro.core.monitoring import RateMonitor
 from repro.core.objective import Allocation, evaluate
 from repro.core.profiles import VariantProfile
 from repro.core.solver import SOLVERS
+from repro.obs.audit import DecisionAudit, predict_outputs
 from repro.serving.api import ClusterAPI  # noqa: F401  (re-export: public API)
 
 
@@ -57,13 +58,16 @@ class InfAdapterController:
 
     def __init__(self, profiles: Mapping[str, VariantProfile],
                  forecaster, cfg: ControllerConfig,
-                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None):
+                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None,
+                 audit: Optional[DecisionAudit] = None):
         self.profiles = dict(profiles)
         self.forecaster = forecaster
         self.cfg = cfg
         self.dispatcher = dispatcher or WeightedRoundRobinDispatcher()
         self.monitor = RateMonitor()
         self.decisions: List[Decision] = []
+        self.audit = audit if audit is not None else DecisionAudit()
+        self._decide_reason = "interval"
 
     def update_profiles(self, updates: Mapping[str, VariantProfile]) -> None:
         """Online recalibration hook (``repro.profiling.drift``): swap in
@@ -86,17 +90,51 @@ class InfAdapterController:
         (paper §4.1) and solve Eq. 1 — maximize α·AA − β·RC − γ·LC subject to
         the latency SLO and budget — seeding LC with the cluster's currently
         loaded variants."""
-        lam = self.predict()
+        lam_forecast = self.predict()
+        lam = lam_forecast
+        backlog = cluster.backlog(t)
         if self.cfg.queue_aware:
-            lam += cluster.backlog(t) / self.cfg.interval_s  # drain in one interval
+            lam += backlog / self.cfg.interval_s  # drain in one interval
+        loaded = cluster.loaded_variants(t)
         solver = SOLVERS[self.cfg.solver]
         alloc = solver(self.profiles, lam, self.cfg.budget, self.cfg.slo_ms,
                        alpha=self.cfg.alpha, beta=self.cfg.beta,
-                       gamma=self.cfg.gamma,
-                       loaded=cluster.loaded_variants(t))
+                       gamma=self.cfg.gamma, loaded=loaded)
         d = Decision(t=t, predicted_load=lam, allocation=alloc)
         self.decisions.append(d)
+        self._audit(t, cluster, lam_forecast, lam, backlog, loaded, alloc)
         return d
+
+    def _audit(self, t: float, cluster: ClusterAPI, lam_forecast: float,
+               lam: float, backlog: float, loaded: Set[str],
+               alloc: Allocation) -> None:
+        """Append this adaptation's inputs/outputs to the decision audit
+        log (``repro.obs.audit``), including the profile-implied predicted
+        p99/goodput so post-run ``attach_measured`` can compute regret."""
+        cap_fn = getattr(cluster, "capacity_factor", None)
+        inputs = {
+            "lam_forecast": float(lam_forecast),
+            "lam": float(lam),
+            "backlog": float(backlog),
+            "capacity_factor": (float(cap_fn(t)) if cap_fn is not None
+                                else 1.0),
+            "loaded": sorted(loaded),
+            "solver": self.cfg.solver,
+            "budget": self.cfg.budget,
+            "slo_ms": self.cfg.slo_ms,
+        }
+        outputs = {
+            "units": dict(alloc.units),
+            "quotas": {m: float(q) for m, q in alloc.quotas.items()},
+            "objective": float(alloc.objective),
+            "aa": float(alloc.aa), "rc": float(alloc.rc),
+            "lc": float(alloc.lc), "feasible": bool(alloc.feasible),
+            "predicted": predict_outputs(self.profiles, alloc, lam,
+                                         self.cfg.slo_ms),
+        }
+        reason, self._decide_reason = self._decide_reason, "interval"
+        self.audit.record(t, type(self).__name__, inputs, outputs,
+                          reason=reason)
 
     def step(self, t: float, cluster: ClusterAPI) -> Decision:
         """One full control iteration (paper Fig. 3, every ``interval_s``):
@@ -129,6 +167,7 @@ class InfAdapterController:
         observed = self.monitor.current_rate(window=5) * 1.1
         backlog = cluster.backlog(t)
         if observed > cap or backlog > cap * 2.0:
+            self._decide_reason = "reactive"
             return self.step(t, cluster)
         return None
 
@@ -156,7 +195,8 @@ class VPAPlusController:
     def __init__(self, profile: VariantProfile, cfg: ControllerConfig,
                  target_util: float = 0.8, peak_window_s: int = 120,
                  downscale_patience: int = 4,
-                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None):
+                 dispatcher: Optional[WeightedRoundRobinDispatcher] = None,
+                 audit: Optional[DecisionAudit] = None):
         self.profile = profile
         self.cfg = cfg
         self.target_util = target_util
@@ -165,6 +205,7 @@ class VPAPlusController:
         self.dispatcher = dispatcher or WeightedRoundRobinDispatcher()
         self.monitor = RateMonitor()
         self.decisions: List[Decision] = []
+        self.audit = audit if audit is not None else DecisionAudit()
         self._below_count = 0
         self._last_units = 0
 
@@ -201,4 +242,12 @@ class VPAPlusController:
         self.dispatcher.set_weights({self.profile.name: 1.0})
         d = Decision(t=t, predicted_load=lam, allocation=alloc)
         self.decisions.append(d)
+        profs = {self.profile.name: self.profile}
+        self.audit.record(
+            t, type(self).__name__,
+            inputs={"lam": float(lam), "target_util": self.target_util,
+                    "slo_ms": self.cfg.slo_ms, "budget": self.cfg.budget},
+            outputs={"units": dict(units),
+                     "predicted": predict_outputs(profs, alloc, lam,
+                                                  self.cfg.slo_ms)})
         return d

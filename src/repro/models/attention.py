@@ -288,11 +288,19 @@ class PagedKVCache:
 
     TRASH_PAGE = 0
 
-    def __init__(self, total_pages: int, page_size: int):
+    def __init__(self, total_pages: int, page_size: int, metrics=None):
         assert total_pages >= 2, "need at least one usable page + trash"
         assert page_size >= 1
         self.total_pages = total_pages
         self.page_size = page_size
+        # registry hook (repro.obs): pool telemetry counters are mirrored
+        # into the engine-wide registry at the increment site, so
+        # kv_pool_stats / benchmarks read them there even after this pool's
+        # backend retires. Defaults to the shared no-op registry.
+        if metrics is None:
+            from repro.obs.registry import NULL_REGISTRY
+            metrics = NULL_REGISTRY
+        self.metrics = metrics
         # LIFO free list: recently freed pages are reused first (their pool
         # rows are warm in cache)
         self._free: List[int] = list(range(total_pages - 1, 0, -1))
@@ -362,6 +370,9 @@ class PagedKVCache:
             self._ref[pg] += 1
         self.fresh_pages_allocated += n
         self.shared_page_maps += len(shared)
+        self.metrics.inc("kv.pages_allocated", n)
+        if shared:
+            self.metrics.inc("kv.shared_page_maps", len(shared))
         self._owned[slot] = list(shared) + fresh
         return list(fresh)
 
@@ -421,6 +432,9 @@ class PagedKVCache:
         if count:
             self.prefix_lookups += 1
             self.prefix_hits += bool(pages)
+            self.metrics.inc("kv.prefix_lookups")
+            if pages:
+                self.metrics.inc("kv.prefix_hits")
         return pages
 
     def prefix_plan(self, tokens, count: bool = True) -> PrefixPlan:

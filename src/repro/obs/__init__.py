@@ -1,0 +1,53 @@
+"""Observability layer: metrics registry, request lifecycle tracing, and
+controller decision audit (DESIGN.md §Observability).
+
+Everything funnels through one ``Observability`` bundle — a metrics
+registry plus a tracer — constructed once per serving backend (engine or
+SimCluster) and handed down to schedulers, variant backends, the paged-KV
+pool, and routers. Metrics are on by default (counter bumps cost what the
+old ad-hoc attribute counters cost); tracing is opt-in (``trace=True``)
+because it allocates per-request event lists. ``Observability.disabled()``
+turns the whole layer into shared no-op singletons for overhead studies.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .audit import (DecisionAudit, DecisionRecord, attach_from_requests,
+                    predict_outputs)
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       NullInstrument, NULL_REGISTRY)
+from .trace import (EVENT_TAXONOMY, NULL_TRACER, SpanEvent, TickRecord,
+                    Tracer, to_chrome_trace, validate_chrome_trace)
+
+__all__ = ["Observability", "MetricsRegistry", "NULL_REGISTRY", "Counter",
+           "Gauge", "Histogram", "NullInstrument", "Tracer", "NULL_TRACER",
+           "SpanEvent", "TickRecord", "EVENT_TAXONOMY", "to_chrome_trace",
+           "validate_chrome_trace", "DecisionAudit", "DecisionRecord",
+           "predict_outputs", "attach_from_requests"]
+
+
+class Observability:
+    """One registry + one tracer, the unit components are wired with.
+
+    Hot paths should cache ``obs.metrics`` / ``obs.tracer`` locally and
+    call the instruments directly — the bundle is plumbing, not a hop.
+    """
+
+    def __init__(self, trace: bool = False, metrics: bool = True,
+                 max_events: int = 200_000):
+        self.metrics = MetricsRegistry() if metrics else NULL_REGISTRY
+        self.tracer = (Tracer(enabled=True, max_events=max_events)
+                       if trace else NULL_TRACER)
+
+    @classmethod
+    def disabled(cls) -> "Observability":
+        return cls(trace=False, metrics=False)
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer.on
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"Observability(metrics={self.metrics.enabled}, "
+                f"trace={self.tracer.on})")

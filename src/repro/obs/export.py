@@ -1,0 +1,114 @@
+"""File exporters + schema validators for the observability artifacts.
+
+Three artifact kinds, all written under ``reports/`` by benchmarks and
+``examples/serve_autoscale.py --trace``:
+
+* ``TRACE_engine.json``    — Chrome ``trace_event`` JSON (Perfetto-loadable)
+* ``METRICS_engine.jsonl`` — one registry instrument snapshot per line
+* ``AUDIT_decisions.jsonl``— one controller decision per line
+
+The module doubles as the CI schema gate::
+
+    python -m repro.obs.export --validate-trace reports/TRACE_engine.json \
+                               --validate-metrics reports/METRICS_engine.jsonl
+
+exits non-zero on the first malformed artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, Iterable, Optional
+
+from .audit import DecisionAudit
+from .registry import MetricsRegistry
+from .trace import Tracer, to_chrome_trace, validate_chrome_trace
+
+__all__ = ["write_chrome_trace", "write_metrics_jsonl", "write_audit_jsonl",
+           "validate_trace_file", "validate_metrics_file"]
+
+
+def write_chrome_trace(path: str, tracer: Tracer,
+                       label: str = "repro") -> int:
+    """Render ``tracer`` to Chrome trace_event JSON at ``path``. The
+    object is validated before writing — we never emit a malformed trace.
+    Returns the event count."""
+    obj = to_chrome_trace(tracer, label=label)
+    n = validate_chrome_trace(obj)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return n
+
+
+def write_metrics_jsonl(path: str, registry: MetricsRegistry,
+                        extra: Optional[Iterable[Dict]] = None) -> int:
+    """Dump every registry instrument as one JSON object per line."""
+    return registry.dump_jsonl(path, extra=extra)
+
+
+def write_audit_jsonl(path: str, audit: DecisionAudit) -> int:
+    """Dump the controller decision log, one decision per line."""
+    return audit.to_jsonl(path)
+
+
+# ------------------------------------------------------------- validation
+def validate_trace_file(path: str) -> int:
+    """Load + schema-check a trace_event JSON file. Returns event count;
+    raises ``ValueError`` on malformed content."""
+    with open(path) as f:
+        obj = json.load(f)
+    return validate_chrome_trace(obj)
+
+
+def validate_metrics_file(path: str) -> int:
+    """Schema-check a metrics JSONL dump: every line a JSON object with a
+    ``name`` and a known ``kind``. Returns the row count."""
+    kinds = {"counter", "gauge", "histogram", "meta"}
+    n = 0
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            if not isinstance(row, dict):
+                raise ValueError(f"{path}:{i + 1}: row is not an object")
+            if not isinstance(row.get("name"), str):
+                raise ValueError(f"{path}:{i + 1}: missing 'name'")
+            if row.get("kind") not in kinds:
+                raise ValueError(f"{path}:{i + 1}: unknown kind "
+                                 f"{row.get('kind')!r}")
+            n += 1
+    if n == 0:
+        raise ValueError(f"{path}: empty metrics dump")
+    return n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--validate-trace", action="append", default=[],
+                    help="trace_event JSON file(s) to schema-check")
+    ap.add_argument("--validate-metrics", action="append", default=[],
+                    help="metrics JSONL file(s) to schema-check")
+    args = ap.parse_args(argv)
+    ok = True
+    for path in args.validate_trace:
+        try:
+            n = validate_trace_file(path)
+            print(f"OK {path}: {n} trace events")
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            ok = False
+    for path in args.validate_metrics:
+        try:
+            n = validate_metrics_file(path)
+            print(f"OK {path}: {n} metric rows")
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

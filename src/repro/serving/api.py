@@ -73,6 +73,11 @@ class Request:
     preemptions: int = 0        # times this request was preempted
     resume_tokens: Optional[List[int]] = field(default=None, repr=False)
     dropped: bool = False       # preempted-and-dropped: output is partial
+    # lifecycle span events (repro.obs.trace.SpanEvent), mounted by the
+    # backend's tracer when tracing is on — the request accumulates its own
+    # typed timeline (queued → admitted → prefill chunks → … → complete),
+    # every stamp from the backend's one clock. None when tracing is off.
+    spans: Optional[List] = field(default=None, repr=False, compare=False)
 
     @property
     def deadline(self) -> float:
@@ -218,6 +223,13 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
     else the global ``slo_ms``; without per-request SLOs and drops, goodput
     is exactly ``1 - violation_rate``. This is the paper's objective stated
     per-request (INFaaS/Loki report the same quantity as "SLO attainment").
+
+    Latency, queue wait, and service time each report p50/p95 alongside the
+    p99 the paper headlines (tail shape, not just the tail point). When
+    ``slo_list_ms`` is heterogeneous — more than one distinct positive SLO —
+    ``slo_classes`` breaks n/goodput/p50/p99 out per SLO class, keyed by the
+    class's SLO in ms (the multi-tenant view a per-class-aware controller
+    consumes).
     """
     if len(arrivals) == 0:
         return {}
@@ -237,6 +249,8 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
         "n_requests": int(len(arr)),
         "violation_rate": float(viol.mean()),
         "goodput": float(ok.mean()),
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p95_ms": float(np.percentile(lat, 95)),
         "p99_ms": float(np.percentile(lat, 99)),
         "mean_latency_ms": float(lat.mean()),
         "avg_accuracy": float(acc.mean()),
@@ -245,11 +259,29 @@ def summarize_requests(arrivals: Sequence[float], latencies_ms: Sequence[float],
     if queue_ms is not None and len(queue_ms):
         q = np.asarray(queue_ms, float)
         out["mean_queue_ms"] = float(q.mean())
+        out["p50_queue_ms"] = float(np.percentile(q, 50))
+        out["p95_queue_ms"] = float(np.percentile(q, 95))
         out["p99_queue_ms"] = float(np.percentile(q, 99))
     if service_ms is not None and len(service_ms):
         s = np.asarray(service_ms, float)
         out["mean_service_ms"] = float(s.mean())
+        out["p50_service_ms"] = float(np.percentile(s, 50))
+        out["p95_service_ms"] = float(np.percentile(s, 95))
         out["p99_service_ms"] = float(np.percentile(s, 99))
+    if slo_list_ms is not None and len(slo_list_ms):
+        classes = sorted({float(v) for v in np.asarray(slo_list_ms, float)
+                          if v > 0})
+        if len(classes) > 1:        # heterogeneous SLOs: per-class breakdown
+            per = np.asarray(slo_list_ms, float)[order]
+            out["slo_classes"] = {}
+            for c in classes:
+                m = per == c
+                out["slo_classes"][f"{c:g}"] = {
+                    "n_requests": int(m.sum()),
+                    "goodput": float(ok[m].mean()),
+                    "p50_ms": float(np.percentile(lat[m], 50)),
+                    "p99_ms": float(np.percentile(lat[m], 99)),
+                }
     if cost_samples is not None:
         cost_t = np.array([c[0] for c in cost_samples], float)
         cost_v = np.array([c[1] for c in cost_samples], float)

@@ -22,6 +22,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.audit import attach_from_requests
 from repro.serving.api import Request, ServingAPI
 
 
@@ -116,6 +117,11 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
         engine.step(now)   # one engine tick: admit into free slots + decode
         time.sleep(tick_sleep)
     engine.drain(seconds)  # finish whatever is still queued/in flight
+    # Close the audit loop: bucket realized latencies/goodput back onto the
+    # controller decisions that governed them (predicted vs measured).
+    attach_from_requests(getattr(ctrl, "audit", None),
+                         getattr(engine, "done", ()),
+                         default_slo_ms=slo_ms)
     return rid
 
 

@@ -84,6 +84,8 @@ from repro.cluster.router import ReplicaView, make_router
 from repro.configs.base import ModelConfig
 from repro.models.attention import PagedKVCache
 from repro.models.model import build_model
+from repro.obs import Observability, TickRecord
+from repro.obs import trace as ev
 from repro.serving.api import Request, summarize_requests
 from repro.serving.sched import make_scheduler
 
@@ -126,8 +128,15 @@ class VariantBackend:
                  use_pallas: bool = False, chunked: bool = False,
                  prefill_chunk_tokens: int = 16, preemption: str = "none",
                  prefix_sharing: bool = False,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 obs: Optional[Observability] = None):
         self.name = name
+        # observability bundle (metrics registry + tracer) — the engine hands
+        # its own down so all backends publish into one registry; hot paths
+        # use the cached instrument refs, never the bundle
+        self.obs = obs if obs is not None else Observability.disabled()
+        self.metrics = self.obs.metrics
+        self.tracer = self.obs.tracer
         if use_pallas and not cfg.use_pallas:
             cfg = cfg.replace(use_pallas=True)
         self.cfg = cfg
@@ -328,14 +337,23 @@ class VariantBackend:
         t_service = self.clock()
         for r in reqs:                   # service (= prefill + decode) begins
             r.service_start = t_service
+            self.tracer.request_event(r, ev.ADMITTED, t_service,
+                                      backend=self.name, mode="monolithic")
         prompts = np.zeros((rows, self.prompt_len), np.int64)
         for j, r in enumerate(reqs):
             prompts[j, :len(r.tokens)] = r.tokens[:self.prompt_len]
-        self.prefill_tokens_total += len(reqs) * self.prompt_len
+        self._count_prefill_tokens(len(reqs) * self.prompt_len)
         logits, new_cache = self._prefill(self.params,
                                           {"tokens": jnp.asarray(prompts)})
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return first, np.asarray(first), new_cache
+
+    def _count_prefill_tokens(self, n: int) -> None:
+        """The ONE increment site for prompt tokens this backend prefilled
+        (monolithic admits + continuation chunks): the legacy attribute and
+        the registry counter move together and can never drift apart."""
+        self.prefill_tokens_total += n
+        self.metrics.inc("engine.prefill_tokens_total", n)
 
     def _budget(self, r: Request) -> int:
         """A request's token budget is ``min(r.max_new, self.max_new)`` —
@@ -374,6 +392,11 @@ class VariantBackend:
         self.cache, self.cur_tok = self._admit_merge(
             self.cache, new_cache, self.cur_tok, first,
             jnp.asarray(src), jnp.asarray(mask))
+        if self.tracer.on:    # monolithic prefill finishes inside the admit
+            for r in reqs:
+                if r not in finished:
+                    self.tracer.event(r.rid, ev.PREFILL_COMPLETE, now,
+                                      backend=self.name)
         return finished
 
     # ----------------------------------------------- chunked-prefill path
@@ -412,6 +435,9 @@ class VariantBackend:
             self._prefilling[slot] = _PrefillJob(req=r, seq=seq,
                                                  resume_tok=resume_tok,
                                                  gen=gen)
+            self.tracer.request_event(
+                r, ev.RESUME if resume_tok is not None else ev.ADMITTED,
+                t_service, backend=self.name, slot=slot, seq_len=len(seq))
             self._bind_chunked_slot(slot)      # paged: allocate pages now
         return []
 
@@ -474,15 +500,23 @@ class VariantBackend:
         tok_np = np.asarray(self.cur_tok)
         finished: List[Request] = []
         resume_sets: List[Tuple[int, int]] = []
+        tron = self.tracer.on
         for slot, job in list(self._prefilling.items()):
-            job.pos += int(n_valid[slot])
-            self.prefill_tokens_total += int(n_valid[slot])
+            nv = int(n_valid[slot])
+            job.pos += nv
+            self._count_prefill_tokens(nv)
             self.slot_pos[slot] = job.pos
+            if tron:
+                self.tracer.event(job.req.rid, ev.PREFILL_CHUNK, now,
+                                  backend=self.name, pos=job.pos, n=nv)
             if job.pos < len(job.seq):
                 continue
             del self._prefilling[slot]
             self._prefill_complete(slot, job)
             r = job.req
+            if tron:
+                self.tracer.event(r.rid, ev.PREFILL_COMPLETE, now,
+                                  backend=self.name)
             if job.resume_tok is not None:
                 tok0 = job.resume_tok
                 resume_sets.append((slot, tok0))
@@ -534,11 +568,16 @@ class VariantBackend:
         self._retire_slot(slot)
         r.preemptions += 1
         r.resume_tokens = gen
+        self.metrics.inc("requests.preempted")
+        self.tracer.request_event(r, ev.PREEMPT, now, backend=self.name,
+                                  slot=slot, generated=len(gen),
+                                  action=self.preemption)
         if self.preemption == "drop":
             r.output = np.asarray(gen, np.int64)
             r.completion = self.clock()
             r.accuracy = self.accuracy
             r.dropped = True
+            self._obs_complete(r, dropped=True)
             return "dropped"
         return "requeued"
 
@@ -585,6 +624,29 @@ class VariantBackend:
         r.output = np.asarray(tokens[:min(r.max_new, self.max_new)], np.int64)
         r.completion = self.clock()
         r.accuracy = self.accuracy
+        self._obs_complete(r)
+
+    def _obs_complete(self, r: Request, dropped: bool = False) -> None:
+        """Completion-side metrics + terminal span event — one site for
+        normal finishes, preemption drops, and the legacy pump path, so the
+        registry's request totals always agree with ``self.done``.
+
+        Goodput counts a request when it wasn't dropped and met its own
+        ``slo_ms`` (requests without a per-request SLO count as good — the
+        registry can't know the summary-time global SLO)."""
+        m = self.metrics
+        lat = r.latency_ms
+        m.inc("requests.completed")
+        m.observe("request.latency_ms", lat)
+        m.observe("request.queue_wait_ms", r.queue_wait_ms)
+        m.observe("request.service_ms", r.service_ms)
+        if dropped:
+            m.inc("requests.dropped")
+        elif r.slo_ms <= 0 or lat <= r.slo_ms:
+            m.inc("requests.goodput_ok")
+        self.tracer.request_event(r, ev.DROP if dropped else ev.COMPLETE,
+                                  r.completion, backend=self.name,
+                                  latency_ms=lat)
 
     def drain_slots(self, now: float) -> List[Request]:
         """Run prefill/decode until every in-flight sequence completes
@@ -650,7 +712,7 @@ class PagedVariantBackend(VariantBackend):
         self.pages_per_slot = -(-(self.prompt_len + self.max_new) // ps)
         pool_pages = self._pool_pages_arg or (
             self.max_batch * self.pages_per_slot + 1)   # +1: trash page 0
-        self.pool = PagedKVCache(pool_pages, ps)
+        self.pool = PagedKVCache(pool_pages, ps, metrics=self.metrics)
         self.cache = model.init_paged_cache(
             self.max_batch, pool_pages, ps, self.pages_per_slot)
         self.cur_tok = jnp.zeros((self.max_batch,), jnp.int32)
@@ -819,8 +881,14 @@ class PagedVariantBackend(VariantBackend):
             if plan.cow_src is not None:
                 self.cache = self._cow_copy(self.cache, plan.cow_src,
                                             fresh[0])
+                self.metrics.inc("kv.cow_copies")
             job.pos = plan.tail_start
             self.slot_pos[slot] = plan.tail_start
+            self.tracer.request_event(job.req, ev.COW_BIND, self.clock(),
+                                      backend=self.name, slot=slot,
+                                      shared_pages=len(shared),
+                                      tail_start=plan.tail_start,
+                                      cow=plan.cow_src is not None)
 
     def _prefill_complete(self, slot: int, job: "_PrefillJob") -> None:
         """Publish the slot's fully-written prompt blocks to the prefix
@@ -879,7 +947,9 @@ class InProcessServingEngine:
                  kv_prefix_sharing: bool = False,
                  scheduler="fifo", prefill_chunk: int = 16,
                  preemption: str = "none",
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 trace: bool = False,
+                 obs: Optional[Observability] = None):
         assert mode in ("continuous", "pump"), mode
         assert kv_cache in ("dense", "paged"), kv_cache
         assert kv_cache == "dense" or mode == "continuous", \
@@ -898,6 +968,14 @@ class InProcessServingEngine:
         self.prefill_chunk = prefill_chunk
         self.preemption = preemption
         self.clock = clock   # every arrival/service/completion stamp source
+        # observability: metrics are on by default (registry bumps cost what
+        # the old ad-hoc counters cost); span/tick tracing is opt-in via
+        # trace=True. One bundle serves the engine and every backend it
+        # creates, so all replicas publish into one registry and one trace
+        # timeline (stamped from self.clock — the engine's one clock).
+        self.obs = obs if obs is not None else Observability(trace=trace)
+        self.metrics = self.obs.metrics
+        self.tracer = self.obs.tracer
         assert mode == "continuous" or (
             not self.sched.chunked and preemption == "none"), \
             "chunked scheduling/preemption need the continuous engine"
@@ -940,7 +1018,7 @@ class InProcessServingEngine:
             self.fabric = ReplicaFabric(nodes, policy=placement,
                                         replica_size=replica_size,
                                         rt_fn=lambda m: 0.0)
-            self.router = make_router(router)
+            self.router = make_router(router, metrics=self.metrics)
 
     def _make_backend(self, variant: str) -> VariantBackend:
         cfg, acc = self.variant_defs[variant]
@@ -948,7 +1026,8 @@ class InProcessServingEngine:
                   max_new=self.max_new, decode_chunk=self.decode_chunk,
                   use_pallas=self.use_pallas, chunked=self.sched.chunked,
                   prefill_chunk_tokens=self.prefill_chunk,
-                  preemption=self.preemption, clock=self.clock)
+                  preemption=self.preemption, clock=self.clock,
+                  obs=self.obs)
         if self.kv_cache == "paged":
             return PagedVariantBackend(variant, cfg, acc,
                                        page_size=self.kv_page_size,
@@ -1047,22 +1126,41 @@ class InProcessServingEngine:
     def kv_pool_stats(self) -> Optional[Dict]:
         """Aggregate page-pool usage across paged backends (None when the
         engine runs dense KV caches) — the memory-true capacity gauge that
-        admission already enforces per backend via ``free_slots``."""
+        admission already enforces per backend via ``free_slots``.
+
+        Occupancy-style levels are read off the live pools and published as
+        registry gauges; the cumulative counters (prefix lookups/hits, fresh
+        pages) are read from the registry, where the pools themselves
+        already increment them — so this surface, the benchmarks, and the
+        JSONL dump all report the same numbers from the same source. (When
+        the registry is disabled the pools' own attribute counters are the
+        fallback — live backends only, retired pools' history is gone.)"""
         pools = [b.pool for b in self.backends.values()
                  if isinstance(b, PagedVariantBackend)]
         if not pools:
             return None
+        m = self.metrics
         used = sum(p.used_pages for p in pools)
         usable = sum(p.usable_pages for p in pools)
-        lookups = sum(p.prefix_lookups for p in pools)
-        hits = sum(p.prefix_hits for p in pools)
+        shared = sum(p.shared_pages for p in pools)
+        occupancy = used / max(usable, 1)
+        m.set("kv.used_pages", used)
+        m.set("kv.usable_pages", usable)
+        m.set("kv.shared_pages", shared)
+        m.set("kv.occupancy", occupancy)
+        if m.enabled:
+            lookups = int(m.value("kv.prefix_lookups"))
+            hits = int(m.value("kv.prefix_hits"))
+            fresh = int(m.value("kv.pages_allocated"))
+        else:
+            lookups = sum(p.prefix_lookups for p in pools)
+            hits = sum(p.prefix_hits for p in pools)
+            fresh = sum(p.fresh_pages_allocated for p in pools)
         return {"used_pages": used, "usable_pages": usable,
-                "occupancy": used / max(usable, 1),
-                "shared_pages": sum(p.shared_pages for p in pools),
+                "occupancy": occupancy, "shared_pages": shared,
                 "prefix_lookups": lookups, "prefix_hits": hits,
                 "prefix_hit_rate": hits / max(lookups, 1),
-                "fresh_pages_allocated": sum(p.fresh_pages_allocated
-                                             for p in pools)}
+                "fresh_pages_allocated": fresh}
 
     # ----------------------------------------------------------------- faults
     def inject_fault(self, now: float, event: FaultEvent) -> None:
@@ -1112,6 +1210,9 @@ class InProcessServingEngine:
         by default). Returns False — backpressure — when the queue is full."""
         if not self.backends:
             self.rejected += 1
+            self.metrics.inc("requests.rejected")
+            self.tracer.request_event(req, ev.REJECTED, self.clock(),
+                                      reason="no_backend")
             return False
         if self.fabric is not None:
             name = self._route_replica(req, backend)
@@ -1122,9 +1223,17 @@ class InProcessServingEngine:
         q = self.queues.setdefault(name, deque())
         if len(q) >= self.queue_cap:
             self.rejected += 1
+            self.metrics.inc("requests.rejected")
+            self.tracer.request_event(req, ev.REJECTED, self.clock(),
+                                      backend=name, reason="queue_full")
             return False
         req.backend = name
         q.append(req)
+        self.metrics.inc("requests.submitted")
+        # stamped at clock(), not req.arrival: a crash retry re-queues with
+        # its original arrival preserved, and span times must stay monotone
+        self.tracer.request_event(req, ev.QUEUED, self.clock(), backend=name,
+                                  arrival=req.arrival)
         return True
 
     def _route_replica(self, req: Request, variant: Optional[str]) -> str:
@@ -1164,25 +1273,37 @@ class InProcessServingEngine:
         """One scheduler-driven engine tick per backend, in four phases:
         preempt (optional) → admit (scheduler-ordered) → prefill chunk
         (chunked only) → decode chunk. With the default FIFO scheduler and
-        no preemption this is exactly the legacy admit+decode tick."""
+        no preemption this is exactly the legacy admit+decode tick.
+
+        With tracing on, each backend's tick lands one ``TickRecord``:
+        wall cost per phase (``perf_counter`` around the phase bodies),
+        batch geometry, and pool occupancy. Tracing off costs one branch
+        per phase — the bench_engine overhead gate measures this path."""
         self._rebalance_queues()
         done_before = len(self.done)
+        tron = self.tracer.on
         for name, b in self.backends.items():
             q = self.queues.get(name, deque())
+            bdone = len(self.done)
+            n_preempted = n_admitted = 0
+            t0 = time.perf_counter() if tron else 0.0
             if self.preemption != "none" and q:
                 resident = [r for r in b.slot_req if r is not None]
                 for v in self.sched.select_victims(resident, list(q), now,
                                                    len(b.free_slots)):
+                    n_preempted += 1
                     if b.preempt(v, now) == "dropped":
                         self.done.append(v)
                     else:               # resumes later, tokens preserved
                         q.append(v)
+            t1 = time.perf_counter() if tron else 0.0
             free_n = len(b.free_slots)
             if q and free_n:
                 ordered = self.sched.order(list(q), now)
                 joiners, rest = ordered[:free_n], ordered[free_n:]
                 q.clear()
                 q.extend(rest)
+                n_admitted = len(joiners)
                 if self.sched.chunked:
                     self.done.extend(b.admit_chunked(joiners, now))
                 else:
@@ -1193,10 +1314,24 @@ class InProcessServingEngine:
                     resumed = [r for r in joiners if r.resume_tokens]
                     if resumed:
                         self.done.extend(b.admit_chunked(resumed, now))
+            t2 = time.perf_counter() if tron else 0.0
             if b._prefilling:     # fused tick: prefill chunks + 1-token decodes
+                kind = "fused"
                 self.done.extend(b.fused_chunk_step(now))
             else:                 # pure decode: the fast bucket-aware chunk
+                kind = "decode" if b.active_slots else "idle"
                 self.done.extend(b.decode_step_batch(now))
+            if tron:
+                t3 = time.perf_counter()
+                occ = (b.kv_pool_occupancy
+                       if isinstance(b, PagedVariantBackend) else float("nan"))
+                self.tracer.tick(TickRecord(
+                    backend=name, t=now, kind=kind,
+                    preempt_ms=(t1 - t0) * 1e3, admit_ms=(t2 - t1) * 1e3,
+                    exec_ms=(t3 - t2) * 1e3, active=b.active_slots,
+                    prefilling=len(b._prefilling), queued=len(q),
+                    admitted=n_admitted, preempted=n_preempted,
+                    completed=len(self.done) - bdone, pool_occupancy=occ))
         return len(self.done) - done_before
 
     def drain(self, now: float, max_ticks: int = 10_000) -> int:
@@ -1237,6 +1372,7 @@ class InProcessServingEngine:
                     r.output = out[j, :min(r.max_new, self.max_new)]
                     r.completion = tdone
                     r.accuracy = b.accuracy
+                    b._obs_complete(r)
                     self.done.append(r)
                     served += 1
         return served

@@ -50,6 +50,11 @@ class FIFOScheduler:
     name = "fifo"
     chunked = False
 
+    def describe(self) -> dict:
+        """Policy metadata for traces and audit logs (``repro.obs``)."""
+        return {"policy": self.name, "chunked": self.chunked,
+                "admission": getattr(self, "_order", self.name)}
+
     def order(self, queue: Sequence[Request], now: float) -> List[Request]:
         return list(queue)
 
@@ -76,6 +81,12 @@ class EDFScheduler:
 
     name = "edf"
     chunked = False
+
+    def describe(self) -> dict:
+        """Policy metadata for traces and audit logs (``repro.obs``)."""
+        return {"policy": self.name, "chunked": self.chunked,
+                "admission": getattr(self, "_order", "edf"),
+                "max_preemptions": MAX_PREEMPTIONS}
 
     def order(self, queue: Sequence[Request], now: float) -> List[Request]:
         return sorted(queue, key=lambda r: _edf_key(r, now))

@@ -57,6 +57,8 @@ from repro.cluster.placement import Node
 from repro.cluster.replicas import Replica, ReplicaFabric
 from repro.cluster.router import ReplicaView, RoutingAPI, make_router
 from repro.core.profiles import VariantProfile
+from repro.obs import Observability
+from repro.obs import trace as ev
 from repro.serving.api import Request, summarize_requests
 from repro.serving.sched import make_scheduler
 
@@ -179,20 +181,31 @@ class SimCluster:
     def __init__(self, profiles: Mapping[str, VariantProfile],
                  nodes: Optional[Sequence[Node]] = None,
                  placement="first-fit", router="p2c",
-                 replica_size: int = 4, scheduler="fifo"):
+                 replica_size: int = 4, scheduler="fifo",
+                 trace: bool = False, obs: Optional[Observability] = None):
         self.profiles = dict(profiles)
         self.backends: Dict[str, Backend] = {}
         self.requests: List[ServedRequest] = []
         self.cost_samples: List[tuple] = []    # (t, provisioned units)
+        # observability parity with the engine (DESIGN.md §Observability):
+        # the DES publishes the SAME metric names (requests.*, request.*,
+        # router.*) into its registry, and with trace=True stamps lifecycle
+        # span events in simulated time — so controller experiments read one
+        # metric surface regardless of backend. Simulated requests have no
+        # ticks, so the DES emits no TickRecords.
+        self.obs = obs if obs is not None else Observability(trace=trace)
+        self.metrics = self.obs.metrics
+        self.tracer = self.obs.tracer
         # queue discipline mirroring the engine's scheduler layer (module
         # docstring): "fifo" serves at submit; "edf"/"chunked" hold arrivals
         # in per-backend pending heaps assigned deadline-first
         self.sched = make_scheduler(scheduler)
         self._edf = self.sched.name != "fifo"
-        # per backend key: two heaps of (deadline, seq, arrival, slo_ms) —
-        # still-feasible vs already-expired entries (the engine's EDF serves
-        # expired requests LAST; see _flush_pending) — plus an arrival heap
-        # and a live-seq set for lazy deletion
+        # per backend key: two heaps of (deadline, seq, arrival, slo_ms,
+        # rid) — still-feasible vs already-expired entries (the engine's EDF
+        # serves expired requests LAST; see _flush_pending) — plus an
+        # arrival heap and a live-seq set for lazy deletion (seq is unique,
+        # so heap comparison never reaches the trailing rid)
         self._pending: Dict[str, Dict[str, object]] = {}
         self._pseq = itertools.count()
         self.fabric: Optional[ReplicaFabric] = None
@@ -201,7 +214,7 @@ class SimCluster:
             self.fabric = ReplicaFabric(
                 nodes, policy=placement, replica_size=replica_size,
                 rt_fn=lambda m: self.profiles[m].rt)
-            self.router = make_router(router)
+            self.router = make_router(router, metrics=self.metrics)
 
     # ------------------------------------------------------------- ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
@@ -303,8 +316,34 @@ class SimCluster:
         """ServingAPI parity with the real engine: a simulated request needs
         only its arrival time (and SLO, for deadline-aware scheduling) —
         prompt tokens don't affect queueing."""
-        self.dispatch(req.arrival, backend or None, slo_ms=req.slo_ms)
+        self.dispatch(req.arrival, backend or None, slo_ms=req.slo_ms,
+                      rid=req.rid)
         return True
+
+    def _record(self, sr: ServedRequest, rid: Optional[int] = None) -> None:
+        """The ONE sink for served requests: append + publish the same
+        registry metrics the engine's ``_obs_complete`` emits, and (tracing
+        on, rid known) the queued/admitted/complete span events in simulated
+        time. ``service_start == 0`` marks a request the DES never served
+        (no live backend) — counted as dropped, mirroring engine drops."""
+        self.requests.append(sr)
+        m = self.metrics
+        m.inc("requests.completed")
+        lat = sr.latency_ms
+        m.observe("request.latency_ms", lat)
+        m.observe("request.queue_wait_ms", sr.queue_wait_ms)
+        m.observe("request.service_ms", sr.service_ms)
+        if sr.service_start <= 0.0:
+            m.inc("requests.dropped")
+        elif sr.slo_ms <= 0 or lat <= sr.slo_ms:
+            m.inc("requests.goodput_ok")
+        if self.tracer.on and rid is not None:
+            self.tracer.event(rid, ev.QUEUED, sr.arrival, backend=sr.backend)
+            if sr.service_start > 0.0:
+                self.tracer.event(rid, ev.ADMITTED, sr.service_start,
+                                  backend=sr.backend)
+            self.tracer.event(rid, ev.COMPLETE, sr.completion,
+                              backend=sr.backend, latency_ms=lat)
 
     def step(self, now: float) -> int:
         """No-op: the DES serves synchronously at submit time."""
@@ -379,17 +418,17 @@ class SimCluster:
             assert e is not None   # the min-arrival live entry is eligible
             live.discard(e[1])
             start, done = b.serve_timed(e[2])
-            self.requests.append(ServedRequest(e[2], done, key, accuracy,
-                                               service_start=start,
-                                               slo_ms=e[3]))
+            self._record(ServedRequest(e[2], done, key, accuracy,
+                                       service_start=start, slo_ms=e[3]),
+                         rid=e[4])
 
-    def _enqueue_pending(self, key: str, arrival: float, slo_ms: float
-                        ) -> None:
+    def _enqueue_pending(self, key: str, arrival: float, slo_ms: float,
+                         rid: Optional[int] = None) -> None:
         dl = arrival + slo_ms / 1000.0 if slo_ms > 0 else float("inf")
         pend = self._pending.setdefault(
             key, {"feas": [], "exp": [], "arr": [], "live": set()})
         seq = next(self._pseq)
-        heapq.heappush(pend["feas"], (dl, seq, arrival, slo_ms))
+        heapq.heappush(pend["feas"], (dl, seq, arrival, slo_ms, rid))
         heapq.heappush(pend["arr"], (arrival, seq))
         pend["live"].add(seq)
 
@@ -410,9 +449,9 @@ class SimCluster:
             live = pend["live"]          # backend gone: orphaned pendings
             for e in list(pend["feas"]) + list(pend["exp"]):
                 if e[1] in live:
-                    self.requests.append(ServedRequest(e[2], e[2] + 10.0,
-                                                       "none", 0.0,
-                                                       slo_ms=e[3]))
+                    self._record(ServedRequest(e[2], e[2] + 10.0,
+                                               "none", 0.0, slo_ms=e[3]),
+                                 rid=e[4])
             pend["feas"].clear()
             pend["exp"].clear()
             pend["arr"].clear()
@@ -430,16 +469,17 @@ class SimCluster:
             del self.backends[m]
 
     def dispatch(self, arrival: float, backend_name: Optional[str],
-                 slo_ms: float = 0.0) -> None:
+                 slo_ms: float = 0.0, rid: Optional[int] = None) -> None:
+        self.metrics.inc("requests.submitted")
         if self.fabric is not None:
-            self._dispatch_fabric(arrival, backend_name, slo_ms)
+            self._dispatch_fabric(arrival, backend_name, slo_ms, rid=rid)
             return
         self._purge(arrival)
         candidates = {m: b for m, b in self.backends.items()
                       if b.retire_at > arrival}
         if not candidates:
-            self.requests.append(ServedRequest(arrival, arrival + 10.0,
-                                               "none", 0.0, slo_ms=slo_ms))
+            self._record(ServedRequest(arrival, arrival + 10.0,
+                                       "none", 0.0, slo_ms=slo_ms), rid=rid)
             return
         b = candidates.get(backend_name) if backend_name else None
         if b is None or not b.ready(arrival):
@@ -449,14 +489,13 @@ class SimCluster:
             b = pool[name]
             backend_name = name
         if self._edf:
-            self._enqueue_pending(backend_name, arrival, slo_ms)
+            self._enqueue_pending(backend_name, arrival, slo_ms, rid=rid)
             self._flush_pending(backend_name, b, arrival, b.profile.accuracy)
             return
         start, done = b.serve_timed(arrival)
-        self.requests.append(ServedRequest(arrival, done, backend_name,
-                                           b.profile.accuracy,
-                                           service_start=start,
-                                           slo_ms=slo_ms))
+        self._record(ServedRequest(arrival, done, backend_name,
+                                   b.profile.accuracy, service_start=start,
+                                   slo_ms=slo_ms), rid=rid)
 
     # ----------------------------------------------------- two-level routing
     def _pick_replica(self, variant: str, arrival: float) -> Optional[Replica]:
@@ -473,12 +512,13 @@ class SimCluster:
         return self.fabric.replicas[rid]
 
     def _dispatch_fabric(self, arrival: float, backend_name: Optional[str],
-                         slo_ms: float = 0.0) -> None:
+                         slo_ms: float = 0.0,
+                         rid: Optional[int] = None) -> None:
         self.fabric.purge(arrival)
         live = [r for r in self.fabric.replicas.values() if r.live(arrival)]
         if not live:
-            self.requests.append(ServedRequest(arrival, arrival + 10.0,
-                                               "none", 0.0, slo_ms=slo_ms))
+            self._record(ServedRequest(arrival, arrival + 10.0,
+                                       "none", 0.0, slo_ms=slo_ms), rid=rid)
             return
         variant = backend_name
         ready = [r for r in live if r.ready(arrival)]
@@ -491,14 +531,14 @@ class SimCluster:
                           key=lambda r: r.handle.queue_delay(arrival)).variant
         rep = self._pick_replica(variant, arrival)
         if self._edf:
-            self._enqueue_pending(rep.rid, arrival, slo_ms)
+            self._enqueue_pending(rep.rid, arrival, slo_ms, rid=rid)
             self._flush_pending(rep.rid, rep.handle, arrival,
                                 self.profiles[rep.variant].accuracy)
             return
         start, done = rep.handle.serve_timed(arrival)
-        self.requests.append(ServedRequest(
+        self._record(ServedRequest(
             arrival, done, rep.rid, self.profiles[rep.variant].accuracy,
-            service_start=start, slo_ms=slo_ms))
+            service_start=start, slo_ms=slo_ms), rid=rid)
 
     def dispatch_fanout(self, arrival: float, backend_names, accuracy: float
                         ) -> None:
@@ -522,8 +562,9 @@ class SimCluster:
         if not served:
             self.dispatch(arrival, None)
             return
-        self.requests.append(ServedRequest(arrival, done, "+".join(backend_names),
-                                           accuracy, service_start=start))
+        self.metrics.inc("requests.submitted")
+        self._record(ServedRequest(arrival, done, "+".join(backend_names),
+                                   accuracy, service_start=start))
 
     def _dispatch_fanout_fabric(self, arrival: float, backend_names,
                                 accuracy: float) -> None:
@@ -544,8 +585,9 @@ class SimCluster:
         if not served:
             self.dispatch(arrival, None)
             return
-        self.requests.append(ServedRequest(arrival, done, "+".join(members),
-                                           accuracy, service_start=start))
+        self.metrics.inc("requests.submitted")
+        self._record(ServedRequest(arrival, done, "+".join(members),
+                                   accuracy, service_start=start))
 
     # ---------------------------------------------------------------- metrics
     def summarize(self, slo_ms: float, best_accuracy: float,

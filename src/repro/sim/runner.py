@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.profiles import VariantProfile
 from repro.data.traces import arrivals_from_rate
+from repro.obs.audit import attach_from_requests
 from repro.serving.api import Request
 from repro.sim.cluster import SimCluster
 
@@ -134,6 +135,11 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
             cluster.step(a)       # no-op on synchronous backends
 
     cluster.drain(arrivals[-1] if len(arrivals) else 0.0)
+    # Close the audit loop: bucket realized latencies/goodput back onto the
+    # controller decisions that governed them (predicted vs measured).
+    attach_from_requests(getattr(controller, "audit", None),
+                         getattr(cluster, "requests", ()),
+                         default_slo_ms=slo_ms)
     summary = cluster.summarize(slo_ms, best_acc)
     return ExperimentResult(name=name, summary=summary,
                             decisions=list(getattr(controller, "decisions", [])))

@@ -1,0 +1,470 @@
+"""Observability layer tests (DESIGN.md §Observability).
+
+Unit coverage for the metrics registry (instrument semantics, reservoir
+histograms, disabled no-ops), the tracer + Chrome trace_event exporter
+(round-trip through the schema validator, malformed traces rejected), and
+the decision audit (window bucketing, regret signs). Integration coverage
+drives the real engine on one virtual clock and asserts the registry, the
+span streams, and ``summarize``/``kv_pool_stats`` agree with each other;
+a sim run checks both backends emit the same metric names; an overhead
+guard bounds the cost of disabled-mode hooks.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import MAX_NEW, PROMPT_LEN, VOCAB, tiny_engine, tiny_variants
+
+from repro.obs import (DecisionAudit, MetricsRegistry, NULL_REGISTRY,
+                       NullInstrument, Observability, Tracer,
+                       attach_from_requests, predict_outputs,
+                       to_chrome_trace, validate_chrome_trace)
+from repro.obs import trace as ev
+from repro.obs.export import validate_metrics_file, write_metrics_jsonl
+
+
+# --------------------------------------------------------------- registry
+def test_counter_gauge_semantics():
+    m = MetricsRegistry()
+    m.inc("a.total")
+    m.inc("a.total", 4)
+    assert m.value("a.total") == 5.0
+    with pytest.raises(ValueError):
+        m.counter("a.total").inc(-1)         # counters are monotone
+    m.set("a.gauge", 3.5)
+    m.set("a.gauge", 2.0)                    # gauges overwrite
+    assert m.value("a.gauge") == 2.0
+    assert m.value("missing", default=-1.0) == -1.0
+    with pytest.raises(TypeError):
+        m.gauge("a.total")                   # kind mismatch is an error
+
+
+def test_histogram_percentiles_match_numpy():
+    m = MetricsRegistry()
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(10.0, 500)
+    h = m.histogram("lat")
+    for x in xs:
+        h.observe(x)
+    # 500 < reservoir cap: percentiles are exact
+    for p in (50, 95, 99):
+        assert h.percentile(p) == pytest.approx(np.percentile(xs, p))
+    assert h.count == 500 and h.mean == pytest.approx(xs.mean())
+    snap = h.snapshot()
+    assert snap["kind"] == "histogram" and "p99" in snap
+
+
+def test_histogram_reservoir_bounded():
+    m = MetricsRegistry(reservoir=64)
+    h = m.histogram("big")
+    for x in range(10_000):
+        h.observe(float(x))
+    assert h.count == 10_000
+    assert len(h._res) <= 64
+    # algorithm R keeps a uniform sample: median far from either extreme
+    assert 1_000 < h.percentile(50) < 9_000
+
+
+def test_disabled_registry_is_noop():
+    m = MetricsRegistry(enabled=False)
+    c = m.counter("x")
+    assert isinstance(c, NullInstrument)
+    assert m.counter("y") is c               # one shared null instrument
+    m.inc("x", 5)
+    m.observe("h", 1.0)
+    m.set("g", 2.0)
+    assert m.snapshot() == [] and m.value("x") == 0.0
+    assert NULL_REGISTRY.counter("z") is c
+
+
+def test_registry_dump_and_reset(tmp_path):
+    m = MetricsRegistry()
+    m.inc("requests.completed", 3)
+    m.observe("request.latency_ms", 12.0)
+    path = str(tmp_path / "m.jsonl")
+    n = write_metrics_jsonl(path, m, extra=[{"name": "run", "kind": "meta"}])
+    assert n == 3 and validate_metrics_file(path) == 3
+    m.reset()
+    assert m.names() == []
+    with pytest.raises(ValueError):          # empty dump fails validation
+        write_metrics_jsonl(str(tmp_path / "e.jsonl"), m)
+        validate_metrics_file(str(tmp_path / "e.jsonl"))
+
+
+# ----------------------------------------------------------------- tracer
+def _toy_tracer():
+    tr = Tracer(enabled=True)
+    tr.event(1, ev.QUEUED, 0.0)
+    tr.event(1, ev.ADMITTED, 1.0, slot=0)
+    tr.event(1, ev.PREFILL_COMPLETE, 2.0)
+    tr.event(1, ev.COMPLETE, 5.0, latency_ms=5000.0)
+    tr.event(2, ev.QUEUED, 0.5)
+    tr.event(2, ev.ADMITTED, 1.5, slot=1)
+    tr.event(2, ev.PREEMPT, 2.5, action="requeue")
+    tr.event(2, ev.RESUME, 3.5, slot=0)
+    tr.event(2, ev.PREFILL_COMPLETE, 4.0)
+    tr.event(2, ev.DROP, 6.0)
+    from repro.obs import TickRecord
+    for i in range(3):
+        tr.tick(TickRecord(backend="b0", t=float(i), kind="decode",
+                           preempt_ms=0.0, admit_ms=0.1, exec_ms=1.0,
+                           active=2, prefilling=0, queued=1, admitted=1,
+                           preempted=0, completed=0))
+    return tr
+
+
+def test_chrome_trace_round_trip():
+    tr = _toy_tracer()
+    obj = to_chrome_trace(tr, label="t")
+    n = validate_chrome_trace(obj)           # schema-valid by construction
+    assert n == len(obj["traceEvents"]) > 0
+    text = json.dumps(obj)                   # JSON round-trip preserves it
+    assert validate_chrome_trace(json.loads(text)) == n
+    # request lanes (pid 1) carry phase slices; tick lane (pid 2) X events
+    pids = {e["pid"] for e in obj["traceEvents"] if e["ph"] != "M"}
+    assert pids == {1, 2}
+    slices = [e for e in obj["traceEvents"]
+              if e["ph"] == "X" and e["pid"] == 1]
+    assert any(e["name"] == "preempted" for e in slices)
+    for e in slices:
+        assert e["dur"] >= 0
+
+
+def test_validate_rejects_malformed():
+    good = to_chrome_trace(_toy_tracer(), label="t")
+    for mangle in (
+        lambda o: o.pop("traceEvents"),
+        lambda o: o["traceEvents"][0].pop("ph"),
+        lambda o: o["traceEvents"][0].update(ph="Z"),
+        lambda o: next(e for e in o["traceEvents"]
+                       if e["ph"] == "X").update(dur=-1.0),
+        lambda o: next(e for e in o["traceEvents"]
+                       if e["ph"] == "X").pop("dur"),
+    ):
+        obj = json.loads(json.dumps(good))
+        mangle(obj)
+        with pytest.raises(ValueError):
+            validate_chrome_trace(obj)
+
+
+def test_tracer_caps_drop_counted():
+    tr = Tracer(enabled=True, max_events=10)
+    for i in range(25):
+        tr.event(i, ev.QUEUED, float(i))
+    assert tr.n_events == 10 and tr.dropped_events == 15
+    s = tr.summary()
+    assert s["events"] == 10 and s["dropped_events"] == 15
+
+
+# ------------------------------------------------------------------ audit
+class _Prof:
+    def __init__(self, p99, th):
+        self._p99, self._th = p99, th
+
+    def p99_ms(self, n):
+        return self._p99
+
+    def throughput(self, n):
+        return self._th * n
+
+
+class _Alloc:
+    def __init__(self, units, quotas):
+        self.units, self.quotas = units, quotas
+
+
+def test_predict_outputs():
+    profiles = {"fast": _Prof(100.0, 10.0), "slow": _Prof(900.0, 5.0)}
+    alloc = _Alloc({"fast": 2, "slow": 1}, {"fast": 15.0, "slow": 5.0})
+    pred = predict_outputs(profiles, alloc, lam=20.0, slo_ms=500.0)
+    assert pred["p99_ms"] == pytest.approx(0.75 * 100 + 0.25 * 900)
+    assert pred["p99_max_ms"] == 900.0
+    assert pred["capacity_rps"] == pytest.approx(25.0)
+    assert pred["goodput"] == pytest.approx(0.75)   # slow violates the SLO
+    empty = predict_outputs(profiles, _Alloc({}, {}), 10.0, 500.0)
+    assert empty["goodput"] == 0.0 and np.isnan(empty["p99_ms"])
+
+
+def test_audit_window_bucketing_and_regret(tmp_path):
+    audit = DecisionAudit()
+    audit.record(0.0, "c", {"lam": 5.0},
+                 {"predicted": {"p99_ms": 100.0, "goodput": 1.0}})
+    audit.record(10.0, "c", {"lam": 9.0},
+                 {"predicted": {"p99_ms": 200.0, "goodput": 0.5}},
+                 reason="reactive")
+    # warm-up (-1) and [0,10) land on decision 0; [10,inf) on decision 1
+    arrivals = [-1.0, 1.0, 5.0, 12.0, 15.0]
+    lats = [50.0, 150.0, 150.0, 300.0, 100.0]
+    ok = [True, True, False, False, True]
+    assert audit.attach_measured(arrivals, lats, ok) == 2
+    m0, m1 = audit.entries[0].measured, audit.entries[1].measured
+    assert m0["n_requests"] == 3 and m1["n_requests"] == 2
+    assert m0["goodput"] == pytest.approx(2 / 3)
+    # regret signs: measured p99 over prediction → positive p99 regret;
+    # goodput under prediction → positive goodput regret (optimism)
+    r1 = audit.entries[1].regret
+    assert r1["p99_ms"] == pytest.approx(m1["p99_ms"] - 200.0)
+    assert r1["goodput"] == pytest.approx(0.5 - 0.5)
+    path = str(tmp_path / "a.jsonl")
+    assert audit.to_jsonl(path) == 2
+    rows = [json.loads(l) for l in open(path)]
+    assert rows[1]["reason"] == "reactive" and "regret" in rows[1]
+    s = audit.summary()
+    assert s["n_decisions"] == 2 and s["n_measured"] == 2
+
+
+def test_attach_from_requests_duck_typing():
+    class R:
+        def __init__(self, arrival, completion, slo_ms=0.0,
+                     service_start=1.0, dropped=False):
+            self.arrival, self.completion = arrival, completion
+            self.slo_ms, self.service_start = slo_ms, service_start
+            self.dropped = dropped
+
+    audit = DecisionAudit()
+    audit.record(0.0, "c", {}, {"predicted": {"p99_ms": 1.0,
+                                              "goodput": 1.0}})
+    reqs = [R(0.0, 0.1, slo_ms=200.0),            # ok (100ms <= 200ms)
+            R(1.0, 2.0, slo_ms=200.0),            # SLO miss
+            R(2.0, 2.1, dropped=True),            # dropped
+            R(3.0, 3.05, service_start=0.0)]      # never served
+    assert attach_from_requests(audit, reqs, default_slo_ms=100.0) == 1
+    m = audit.entries[0].measured
+    assert m["n_requests"] == 4 and m["goodput"] == pytest.approx(0.25)
+    assert attach_from_requests(None, reqs) == 0  # opportunistic no-op
+
+
+# ------------------------------------------------- scheduler describe()
+def test_scheduler_describe_metadata():
+    from repro.serving.sched import make_scheduler
+    assert make_scheduler("fifo").describe() == {
+        "policy": "fifo", "chunked": False, "admission": "fifo"}
+    d = make_scheduler("chunked-fifo").describe()
+    assert d["policy"] == "chunked-fifo" and d["chunked"] \
+        and d["admission"] == "fifo"
+    assert make_scheduler("edf").describe()["admission"] == "edf"
+
+
+# ------------------------------------------------------ engine integration
+def _run_traced_engine(**kw):
+    """Tiny engine on a virtual clock; returns (engine, clock time)."""
+    from repro.serving.api import Request
+    clk = [0.0]
+    eng = tiny_engine(clock=lambda: clk[0], trace=True, queue_cap=64, **kw)
+    name = next(iter(eng.variant_defs))
+    eng.apply_allocation(0.0, {name: 1})
+    rng = np.random.default_rng(1)
+    for i in range(6):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, PROMPT_LEN),
+                           max_new=MAX_NEW, arrival=clk[0], slo_ms=1e6),
+                   None)
+        eng.step(clk[0])
+        clk[0] += 0.01
+    for _ in range(500):
+        if not (eng.backlog(clk[0]) or eng.in_flight()):
+            break
+        eng.step(clk[0])
+        clk[0] += 0.01
+    assert len(eng.done) == 6
+    return eng, clk[0]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                                    # fifo dense
+    dict(scheduler="chunked", kv_cache="paged",
+         kv_prefix_sharing=True, prefill_chunk=4),             # full stack
+])
+def test_engine_spans_and_registry_consistency(kw):
+    eng, _ = _run_traced_engine(**kw)
+    m = eng.metrics
+    assert int(m.value("requests.submitted")) == 6
+    assert int(m.value("requests.completed")) == 6
+    assert int(m.value("requests.goodput_ok")) == 6
+    lat = m.get("request.latency_ms")
+    assert lat is not None and lat.count == 6
+    # registry prefill counter == backend attribute sum (one counting path)
+    attr = sum(b.prefill_tokens_total for b in eng.backends.values())
+    assert int(m.value("engine.prefill_tokens_total")) == attr > 0
+    # every completed request carries a monotone, terminated span stream
+    for r in eng.done:
+        assert r.spans, r.rid
+        ts = [e.t for e in r.spans]
+        assert ts == sorted(ts)
+        names = [e.name for e in r.spans]
+        assert names[0] == ev.QUEUED
+        assert names[-1] == ev.COMPLETE
+        assert ev.ADMITTED in names
+        for name in names[:-1]:
+            assert name not in ev.TERMINAL_EVENTS
+    # tick records cover the run and the trace exports schema-valid
+    assert eng.tracer.ticks and eng.tracer.dropped_events == 0
+    assert validate_chrome_trace(to_chrome_trace(eng.tracer, "t")) > 0
+
+
+def test_engine_summarize_agrees_with_registry():
+    eng, _ = _run_traced_engine()
+    s = eng.summarize(slo_ms=1e6, best_accuracy=70.0)
+    m = eng.metrics
+    assert s["n_requests"] == int(m.value("requests.completed"))
+    lat = m.get("request.latency_ms")
+    assert s["p99_ms"] == pytest.approx(lat.percentile(99))
+    assert s["goodput"] == pytest.approx(
+        m.value("requests.goodput_ok") / m.value("requests.completed"))
+
+
+def test_kv_pool_stats_registry_backed():
+    eng, _ = _run_traced_engine(scheduler="chunked", kv_cache="paged",
+                                kv_prefix_sharing=True, prefill_chunk=4)
+    stats = eng.kv_pool_stats()
+    m = eng.metrics
+    assert stats["prefix_lookups"] == int(m.value("kv.prefix_lookups")) > 0
+    assert stats["fresh_pages_allocated"] == \
+        int(m.value("kv.pages_allocated")) > 0
+    assert stats["used_pages"] == 0          # everything drained
+
+
+def test_engine_preemption_spans():
+    """Preempt/requeue under deadline pressure: PREEMPT then RESUME appear
+    on the same request, stream still monotone and terminated."""
+    from repro.serving.api import Request
+    clk = [0.0]
+    eng = tiny_engine(clock=lambda: clk[0], trace=True, scheduler="edf",
+                      preemption="requeue", kv_cache="paged", queue_cap=64)
+    name = next(iter(eng.variant_defs))
+    eng.apply_allocation(0.0, {name: 1})
+    rng = np.random.default_rng(2)
+    # hopeless requests (deadline long past) grab both slots first; then
+    # feasible ones arrive and the EDF scheduler must preempt to serve them
+    for i in range(2):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, PROMPT_LEN),
+                           max_new=MAX_NEW, arrival=0.0, slo_ms=1.0), None)
+    clk[0] = 100.0
+    eng.step(clk[0])                          # admit the hopeless pair
+    for i in range(2, 6):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, PROMPT_LEN),
+                           max_new=MAX_NEW, arrival=0.0, slo_ms=1e9), None)
+    for _ in range(400):
+        if len(eng.done) == 6:
+            break
+        eng.step(clk[0])
+        clk[0] += 0.01
+    assert len(eng.done) == 6
+    assert int(eng.metrics.value("requests.preempted")) > 0
+    preempted = [r for r in eng.done
+                 if any(e.name == ev.PREEMPT for e in (r.spans or ()))]
+    assert preempted
+    for r in preempted:
+        names = [e.name for e in r.spans]
+        assert ev.RESUME in names
+        assert names.index(ev.PREEMPT) < names.index(ev.RESUME)
+        ts = [e.t for e in r.spans]
+        assert ts == sorted(ts)
+        assert names[-1] in ev.TERMINAL_EVENTS
+
+
+# ------------------------------------------------------- sim/engine parity
+def test_sim_and_engine_emit_same_metric_names():
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.serving.api import Request
+    from repro.sim.cluster import SimCluster
+
+    profiles = paper_resnet_profiles()
+    sim = SimCluster(profiles, trace=True)
+    name = next(iter(profiles))
+    sim.apply_allocation(-100.0, {name: 2})
+    rng = np.random.default_rng(3)
+    for i in range(40):
+        sim.submit(Request(rid=i, tokens=np.zeros(0, np.int64), max_new=1,
+                           arrival=float(i) * 0.05, slo_ms=750.0), name)
+    sim.drain(2.0)
+    eng, _ = _run_traced_engine()
+    core = {"requests.submitted", "requests.completed",
+            "requests.goodput_ok", "request.latency_ms",
+            "request.queue_wait_ms", "request.service_ms"}
+    assert core <= set(sim.metrics.names())
+    assert core <= set(eng.metrics.names())
+    # sim requests got span streams too
+    spanned = [rid for rid, evs in sim.tracer.events.items() if evs]
+    assert len(spanned) == 40
+    for evs in sim.tracer.events.values():
+        assert [e.t for e in evs] == sorted(e.t for e in evs)
+        assert evs[-1].name in (ev.COMPLETE, ev.DROP)
+
+
+# ---------------------------------------------------------- overhead guard
+def test_disabled_hooks_are_cheap():
+    """A disabled-observability hook must cost no more than ~a few µs even
+    on a loaded CI host — the real gate (≤2% of a tick) runs in
+    bench_engine; this guards against accidentally giving NullInstrument
+    or the disabled registry a slow path."""
+    import time
+    obs = Observability.disabled()
+    m, tr = obs.metrics, obs.tracer
+    c = m.counter("x")
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+        m.inc("x", 2)
+        m.observe("h", 1.0)
+        tr.event(0, "e", 0.0)
+    per_call_us = (time.perf_counter() - t0) / (n * 4) * 1e6
+    assert per_call_us < 5.0, per_call_us
+
+
+# ------------------------------------------------- controller audit (sim)
+def test_controller_audit_end_to_end():
+    from repro.core.adapter import ControllerConfig, InfAdapterController
+    from repro.core.forecaster import MovingMaxForecaster
+    from repro.core.profiles import paper_resnet_profiles
+    from repro.sim.runner import run_experiment
+
+    profiles = paper_resnet_profiles()
+    cfg = ControllerConfig(interval_s=30, budget=20, slo_ms=750.0,
+                           reactive=True)
+    ctrl = InfAdapterController(profiles, MovingMaxForecaster(), cfg)
+    trace = np.concatenate([np.full(40, 5.0), np.full(40, 15.0)])
+    run_experiment("audit", ctrl, profiles, trace, slo_ms=750.0,
+                   warm_start={min(profiles): 4})
+    audit = ctrl.audit
+    assert len(audit.entries) >= 3
+    e0 = audit.entries[0]
+    assert e0.controller == "InfAdapterController"
+    assert {"lam", "lam_forecast", "backlog", "capacity_factor", "solver",
+            "loaded"} <= set(e0.inputs)
+    assert {"units", "quotas", "objective", "predicted"} <= set(e0.outputs)
+    assert e0.outputs["predicted"]["capacity_rps"] > 0
+    # measured outcomes + regret attached by the runner post-drain
+    measured = [e for e in audit.entries
+                if e.measured and e.measured["n_requests"]]
+    assert measured and all(e.regret is not None for e in measured)
+    reasons = {e.reason for e in audit.entries}
+    assert "interval" in reasons
+
+
+def test_summarize_requests_percentiles_and_slo_classes():
+    from repro.serving.api import summarize_requests
+    rng = np.random.default_rng(5)
+    n = 200
+    arrivals = np.arange(n, dtype=float)
+    lats = rng.exponential(100.0, n)
+    accs = np.full(n, 70.0)
+    slos = np.where(np.arange(n) % 2 == 0, 150.0, 600.0)
+    s = summarize_requests(arrivals, lats, accs, slo_ms=600.0,
+                           best_accuracy=70.0, slo_list_ms=slos)
+    for k in ("p50_ms", "p95_ms", "p99_ms"):
+        assert k in s
+    assert s["p50_ms"] == pytest.approx(np.percentile(lats, 50))
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    classes = s["slo_classes"]
+    assert set(classes) == {"150", "600"}
+    tight = classes["150"]
+    assert tight["n_requests"] == 100
+    assert tight["goodput"] == pytest.approx(
+        np.mean(lats[::2] <= 150.0))
+    # homogeneous SLOs: no per-class breakdown
+    s2 = summarize_requests(arrivals, lats, accs, slo_ms=600.0,
+                            best_accuracy=70.0,
+                            slo_list_ms=np.full(n, 600.0))
+    assert "slo_classes" not in s2

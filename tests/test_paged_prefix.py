@@ -21,10 +21,20 @@ hypothesis (RuleBasedStateMachine) drives the schedule when installed —
 the CI profile runs it at 500 examples with a fixed seed (see
 tests/conftest.py) — and a seeded random driver keeps the same core
 exercised without it.
+
+The harness also carries a ``repro.obs.Tracer`` on a step-counter clock:
+every action stamps span events (admitted / cow_bind / preempt / resume /
+complete) for the logical request it touches, and the per-step check
+asserts the lifecycle invariants — timestamps monotone per request, no
+events after a terminal one, resume only ever following a preempt —
+under exactly the adversarial preempt/resume interleavings hypothesis
+finds.
 """
 import numpy as np
 
 from repro.models.attention import PagedKVCache
+from repro.obs import Tracer
+from repro.obs import trace as ev
 
 PS = 4                                   # page size (tokens)
 MAX_PROMPT_BLOCKS = 3
@@ -50,13 +60,23 @@ class _HarnessCore:
     def __init__(self):
         self.pool = PagedKVCache(TOTAL_PAGES, PS)
         self.kv = np.full((TOTAL_PAGES, PS), POISON, np.int64)
-        self.live = {}          # slot -> {"seq", "prompt_len", "table"}
-        self.preempted = []     # [(seq, prompt_len)] awaiting resume
+        self.live = {}          # slot -> {"seq", "prompt_len", "table", "rid"}
+        self.preempted = []     # [(seq, prompt_len, rid)] awaiting resume
         self.next_slot = 0
         self.capacity = PAGES_PER_SLOT * PS
+        # span stream on a step-counter clock: one logical request (rid)
+        # survives preempt/resume across slots; check() asserts lifecycle
+        # and monotonicity invariants over what the tracer recorded
+        self.tracer = Tracer(enabled=True)
+        self.t = 0
+        self.next_rid = 0
+
+    def _stamp(self, rid, name, **attrs):
+        self.t += 1
+        self.tracer.event(rid, name, float(self.t), **attrs)
 
     # ------------------------------------------------------------- actions
-    def admit(self, prompt, gen=()):
+    def admit(self, prompt, gen=(), rid=None):
         """Admit ``prompt`` (+ ``gen`` for a resume) the way the engine
         does: plan against the index, map shared blocks by reference, CoW
         the fully-matched boundary block, write only the tail, publish the
@@ -72,14 +92,20 @@ class _HarnessCore:
         if fresh is None:
             return None
         self.next_slot += 1
+        resuming = rid is not None
+        if rid is None:
+            rid = self.next_rid
+            self.next_rid += 1
+        self._stamp(rid, ev.RESUME if resuming else ev.ADMITTED, slot=slot)
         table = list(plan.shared) + fresh
         if plan.cow_src is not None:
             self.kv[fresh[0]] = self.kv[plan.cow_src]
+            self._stamp(rid, ev.COW_BIND, slot=slot)
         for pos in range(plan.tail_start, len(seq)):
             self.kv[table[pos // PS], pos % PS] = seq[pos]
         self.pool.publish_prefix(slot, prompt)
         self.live[slot] = {"seq": seq, "prompt_len": len(prompt),
-                           "table": table}
+                           "table": table, "rid": rid}
         return slot
 
     def decode(self, slot):
@@ -108,15 +134,18 @@ class _HarnessCore:
             assert pg not in {p for r in self.live.values()
                               for p in r["table"]}
             self.kv[pg] = POISON
+        self._stamp(rec["rid"], ev.PREEMPT if keep else ev.COMPLETE,
+                    slot=slot)
         if keep:
-            self.preempted.append((rec["seq"], rec["prompt_len"]))
+            self.preempted.append((rec["seq"], rec["prompt_len"],
+                                   rec["rid"]))
 
     def resume(self):
         """Re-admit a preempted request: prompt + preserved tokens rebuild
         through the same sharing path (plan over the prompt only)."""
-        seq, plen = self.preempted.pop()
-        if self.admit(seq[:plen], seq[plen:]) is None:
-            self.preempted.append((seq, plen))
+        seq, plen, rid = self.preempted.pop()
+        if self.admit(seq[:plen], seq[plen:], rid=rid) is None:
+            self.preempted.append((seq, plen, rid))
 
     # -------------------------------------------------------------- checks
     def check(self):
@@ -126,6 +155,29 @@ class _HarnessCore:
             got = np.array([self.kv[rec["table"][p // PS], p % PS]
                             for p in range(len(rec["seq"]))])
             np.testing.assert_array_equal(got, rec["seq"])
+        self._check_spans()
+
+    def _check_spans(self):
+        """Lifecycle invariants over the recorded span stream: per-request
+        timestamps strictly increase (one clock, step counter), streams
+        open with ADMITTED, nothing follows a terminal event, and every
+        RESUME pairs with exactly one preceding PREEMPT."""
+        assert self.tracer.dropped_events == 0
+        for rid, evs in self.tracer.events.items():
+            ts = [e.t for e in evs]
+            assert ts == sorted(ts) and len(set(ts)) == len(ts), (rid, evs)
+            names = [e.name for e in evs]
+            assert names[0] == ev.ADMITTED, (rid, names)
+            for name in names[:-1]:
+                assert name not in ev.TERMINAL_EVENTS, (rid, names)
+            preempted_now = False
+            for name in names:
+                if name == ev.PREEMPT:
+                    assert not preempted_now, (rid, names)
+                    preempted_now = True
+                elif name == ev.RESUME:
+                    assert preempted_now, (rid, names)
+                    preempted_now = False
 
 
 def _make_prompt(pattern_ids, tail_seed):
