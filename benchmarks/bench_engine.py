@@ -344,20 +344,29 @@ def prefix_sharing() -> Tuple[List[Tuple[str, float, str]], Dict]:
 def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
     """The §Observability overhead study + trace artifact production.
 
-    Three identical paged engines differing only in observability level —
-    fully disabled, metrics-only (the default), and full tracing — run the
-    same closed loop through ``_closed_loop_pair``; the payload records the
-    per-tick cost ratios. A no-op-hook microbench then times the disabled
-    instruments directly: ``disabled_hook_frac`` is the fraction of a
-    disabled-mode tick a *generous* per-tick hook budget would cost, and
-    the acceptance gate requires it ≤ 2% (``gate_frac``). Finally a small
-    virtual-clock traced run exports ``reports/TRACE_engine.json`` +
-    ``METRICS_engine.jsonl`` and schema-validates both (the CI gate
-    re-validates the shipped artifacts via ``python -m repro.obs.export``).
+    Five identical paged engines differing only in observability level —
+    fully disabled, metrics-only (the default), full tracing, tracing +
+    rolling windows, and tracing + the dispatch profiler sampling EVERY
+    tick — run the same closed loop through ``_closed_loop_pair``; the
+    payload records the per-tick cost ratios (windows gate against
+    disabled; the profiler, whose fence deliberately serializes dispatch
+    and compute, gates against traced with its own ``sampling_gate``). A
+    no-op-hook microbench then times the disabled instruments directly:
+    ``disabled_hook_frac`` is the fraction of a disabled-mode tick a
+    *generous* per-tick hook budget would cost, and the acceptance gate
+    requires it ≤ 2% (``gate_frac``). The profiled engine's fenced ticks
+    feed ``dispatch_floor`` (the EXPERIMENTS.md §Dispatch floor baseline).
+    A small virtual-clock traced run exports ``reports/TRACE_engine.json``
+    + ``METRICS_engine.jsonl``, schema-validates both, and asserts the
+    tracer dropped nothing (the CI gate re-validates the shipped artifacts
+    via ``python -m repro.obs.export --assert-zero``). Finally
+    ``_burn_rate_smoke`` runs the full online-reaction path — fault →
+    SLO burn → alert → flight dump — and hard-asserts it end to end.
     """
-    from repro.obs import Observability
-    from repro.obs.export import (validate_metrics_file, validate_trace_file,
-                                  write_chrome_trace, write_metrics_jsonl)
+    from repro.obs import Observability, dispatch_floor_summary
+    from repro.obs.export import (assert_zero, validate_metrics_file,
+                                  validate_trace_file, write_chrome_trace,
+                                  write_metrics_jsonl)
     from repro.serving.api import Request
     from repro.serving.engine import InProcessServingEngine
 
@@ -371,7 +380,9 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
 
     engines = {"disabled": mk(obs=Observability.disabled()),
                "metrics": mk(),
-               "traced": mk(trace=True)}
+               "traced": mk(trace=True),
+               "windowed": mk(obs=Observability(trace=True, windows=True)),
+               "profiled": mk(trace=True, profile_dispatch=1)}
 
     def short(rng):
         return int(rng.integers(PG_SHORT_NEW - 4, PG_SHORT_NEW + 5))
@@ -379,17 +390,25 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
     ticks = _closed_loop_pair(engines, k=PG_BATCH // 2, max_new=short,
                               n_steps=60, seed=3)
     base_ms = max(ticks["disabled"]["mean_step_ms"], 1e-9)
+    traced_ms = max(ticks["traced"]["mean_step_ms"], 1e-9)
     payload: Dict = {
         "ticks": ticks,
         "metrics_over_disabled": ticks["metrics"]["mean_step_ms"] / base_ms,
         "traced_over_disabled": ticks["traced"]["mean_step_ms"] / base_ms,
+        "windowed_over_disabled":
+            ticks["windowed"]["mean_step_ms"] / base_ms,
+        "profiled_over_traced":
+            ticks["profiled"]["mean_step_ms"] / traced_ms,
+        "sampling_gate": 1.5,
     }
+    payload["dispatch_floor"] = dispatch_floor_summary(
+        engines["profiled"].tracer.ticks)
 
     # --- no-op hook microbench: what do the disabled instruments cost? ---
     obs = Observability.disabled()
-    m, tr = obs.metrics, obs.tracer
+    m, tr, w = obs.metrics, obs.tracer, obs.windows
     c, h, g = m.counter("noop.c"), m.histogram("noop.h"), m.gauge("noop.g")
-    n_iter, calls_per_iter = 20_000, 10
+    n_iter, calls_per_iter = 20_000, 11
     t0 = time.perf_counter()
     for _ in range(n_iter):
         c.inc(); c.inc(4); h.observe(1.0); g.set(2.0)       # noqa: E702
@@ -398,6 +417,8 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
         if tr.on:
             pass
         if m.enabled:
+            pass
+        if w.on:       # the windows-off hook the hot paths actually run
             pass
     per_hook_s = (time.perf_counter() - t0) / (n_iter * calls_per_iter)
     # generous per-tick budget: a few per-phase hooks + a handful per slot
@@ -434,6 +455,10 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
         extra=[{"name": "run.config", "kind": "meta",
                 "bench": "engine_serving.observability",
                 "scheduler": "chunked", "kv_cache": "paged"}])
+    # the tracer must never have dropped a span/tick on this workload —
+    # same zero the CI step re-asserts on the shipped artifact
+    assert_zero(mp, "obs.spans_dropped")
+    assert_zero(mp, "obs.ticks_dropped")
     payload["artifacts"] = {"trace": tp, "trace_events": n_ev,
                             "trace_valid": validate_trace_file(tp),
                             "metrics": mp, "metric_rows": n_m,
@@ -441,6 +466,12 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
                             "requests": len(art.done),
                             "trace_summary": art.tracer.summary()}
 
+    payload["burn_smoke"] = _burn_rate_smoke()
+
+    fl = payload["dispatch_floor"]
+    floor_note = " ".join(
+        f"{k}:off_device={d['dispatch_frac'] + d['host_sync_frac']:.2f}"
+        f"(n={d['n_sampled']})" for k, d in sorted(fl.items())) or "no samples"
     rows = [
         ("obs_disabled_hook_frac", frac * 1e6,
          f"hook={per_hook_s * 1e9:.0f}ns x{hooks_per_tick}/tick "
@@ -450,8 +481,97 @@ def observability() -> Tuple[List[Tuple[str, float, str]], Dict]:
         ("obs_traced_tick_ratio", payload["traced_over_disabled"] * 1e6,
          f"traced/disabled={payload['traced_over_disabled']:.3f} "
          f"({n_ev} events exported)"),
+        ("obs_windowed_tick_ratio", payload["windowed_over_disabled"] * 1e6,
+         f"windowed/disabled={payload['windowed_over_disabled']:.3f}"),
+        ("obs_profiled_tick_ratio", payload["profiled_over_traced"] * 1e6,
+         f"profiled/traced={payload['profiled_over_traced']:.3f} "
+         f"(sampling every tick; gate<={payload['sampling_gate']})"),
+        ("obs_dispatch_floor", 0.0, floor_note),
+        ("obs_burn_smoke", payload["burn_smoke"]["alerts_fired"] * 1e6,
+         f"alerts={payload['burn_smoke']['alerts_fired']} "
+         f"resolves={payload['burn_smoke']['burn_resolves']} "
+         f"flight={os.path.basename(payload['burn_smoke']['flight_dump'])}"),
     ]
     return rows, payload
+
+
+def _burn_rate_smoke() -> Dict:
+    """End-to-end online-reaction smoke on the REAL engine, wall clock:
+    a fabric-backed engine serves a closed loop, a ``replica_slowdown``
+    fault stretches decode mid-run, the SLO burn-rate monitor sees both
+    the fast and the slow window breach, and the alert's ``FlightTrigger``
+    sink dumps a flight recording. Hard-asserts (CI gates, via run.py's
+    nonzero exit): the alert fires, the dump exists and schema-validates,
+    and the tracer dropped nothing. The controller-re-solve-on-alert path
+    is covered by tests/test_obs_online.py on the virtual clock."""
+    from repro.cluster import make_nodes
+    from repro.cluster.faults import replica_slowdown
+    from repro.obs import (BurnRateRule, CollectingSink, FlightRecorder,
+                           FlightTrigger, Observability, SLOMonitor)
+    from repro.obs.export import validate_trace_file
+    from repro.serving.api import Request
+    from repro.serving.driver import ElapsedClock
+    from repro.serving.engine import InProcessServingEngine
+
+    os.makedirs("reports", exist_ok=True)
+    for old in os.listdir("reports"):        # fresh dumps for this run
+        if old.startswith("FLIGHT_"):
+            os.remove(os.path.join("reports", old))
+    fr = FlightRecorder(out_dir="reports", min_interval_s=0.0)
+    obs = Observability(trace=True, windows=True, flight=fr)
+    clk = ElapsedClock()
+    eng = InProcessServingEngine(
+        _paged_variant(), max_batch=8, prompt_len=32, max_new=8,
+        decode_chunk=4, queue_cap=100_000, kv_cache="paged", kv_page_size=8,
+        nodes=make_nodes(1, 2), replica_size=1, obs=obs, clock=clk)
+    eng.apply_allocation(0.0, {"bench-paged-2L": 1})
+    rng = np.random.default_rng(7)
+    rid = [0]
+
+    def pump(seconds: float, slo_ms: float, monitor=None) -> None:
+        t_end = clk() + seconds
+        while clk() < t_end:
+            while eng.backlog(clk()) + eng.in_flight() < 4:
+                eng.submit(Request(rid=rid[0],
+                                   tokens=rng.integers(0, VOCAB, 32),
+                                   max_new=8, arrival=clk(), slo_ms=slo_ms),
+                           None)
+                rid[0] += 1
+            eng.step(clk())
+            if monitor is not None:
+                monitor.check(clk())
+
+    pump(1.0, slo_ms=1e9)              # warm + calibrate on a non-SLO class
+    lats = [r.latency_ms for r in eng.done if r.service_start > 0]
+    slo_ms = float(max(np.percentile(lats, 50) * 4.0, 50.0))
+    sink = CollectingSink()
+    monitor = SLOMonitor(obs.windows, budget=0.05,
+                         rules=(BurnRateRule(fast_s=0.5, slow_s=1.5,
+                                             threshold=2.0),),
+                         sinks=(sink, FlightTrigger(fr)),
+                         cooldown_s=30.0, min_requests=3)
+    pump(0.8, slo_ms=slo_ms, monitor=monitor)        # healthy phase
+    healthy_alerts = len(monitor.alerts)
+    rep = next(iter(eng.fabric.replicas))            # degrade every replica
+    eng.inject_fault(clk(), replica_slowdown(clk(), rep, 30.0))
+    pump(2.5, slo_ms=slo_ms, monitor=monitor)        # burning phase
+    assert len(monitor.alerts) > healthy_alerts, \
+        f"burn-rate alert did not fire (slo_ms={slo_ms:.0f}, " \
+        f"{len(eng.done)} done)"
+    burn_dumps = [p for p in fr.dumps
+                  if os.path.basename(p).startswith("FLIGHT_burn_rate")]
+    assert burn_dumps, f"no burn-rate flight dump (dumps={fr.dumps})"
+    n_ev = validate_trace_file(burn_dumps[-1])
+    spans_dropped = obs.metrics.counter("obs.spans_dropped").value
+    ticks_dropped = obs.metrics.counter("obs.ticks_dropped").value
+    assert spans_dropped == 0 and ticks_dropped == 0, \
+        f"tracer dropped spans={spans_dropped} ticks={ticks_dropped}"
+    return {"slo_ms": slo_ms, "alerts_fired": len(monitor.alerts),
+            "burn_resolves": 0,   # controller path covered in tests
+            "flight_dump": burn_dumps[-1], "flight_events": n_ev,
+            "spans_dropped": float(spans_dropped),
+            "ticks_dropped": float(ticks_dropped),
+            "n_requests": len(eng.done)}
 
 
 def run() -> List[Tuple[str, float, str]]:

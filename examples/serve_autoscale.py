@@ -92,6 +92,16 @@ def main():
                          "AUDIT_decisions.jsonl")
     ap.add_argument("--report-dir", default="reports",
                     help="where --trace writes its artifacts")
+    ap.add_argument("--burn-rate-alerts", action="store_true",
+                    help="turn on rolling windows + the SLO burn-rate "
+                         "monitor; the controller re-solves immediately "
+                         "when the fast AND slow burn-rate windows breach "
+                         "(DESIGN.md §Observability, online tier)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the anomaly flight recorder: dump a "
+                         "Perfetto-loadable FLIGHT_<reason>.json of the "
+                         "recent past into DIR on burn-rate alerts and "
+                         "injected faults")
     args = ap.parse_args()
 
     variants = build_ladder()
@@ -102,6 +112,16 @@ def main():
                      decode_chunk=4, scheduler=args.scheduler,
                      preemption=args.preemption, clock=ElapsedClock(),
                      trace=args.trace)
+    # online tier: rolling windows feed the burn-rate monitor; the flight
+    # recorder rides the tracer and dumps on alerts/faults
+    flight = None
+    if args.burn_rate_alerts or args.flight_dir:
+        from repro.obs import FlightRecorder, Observability
+        if args.flight_dir:
+            os.makedirs(args.flight_dir, exist_ok=True)
+            flight = FlightRecorder(out_dir=args.flight_dir)
+        engine_kw["obs"] = Observability(trace=args.trace, windows=True,
+                                         flight=flight)
     if fabric_on:
         n_nodes = args.nodes or max(args.replicas, 2)
         # room for create-then-remove surge and for re-placement after a
@@ -114,8 +134,10 @@ def main():
             placement="spread", **engine_kw)
         # the profiler needs the legacy variant-keyed layout; profile on a
         # separate monolithic engine, serve on the fabric (offline
-        # profiling, sharded serving)
-        prof_engine = InProcessServingEngine(variants, **engine_kw)
+        # profiling, sharded serving). It keeps its own obs bundle so
+        # calibration traffic never leaks into the serving windows/flight.
+        prof_engine = InProcessServingEngine(
+            variants, **{k: v for k, v in engine_kw.items() if k != "obs"})
     else:
         engine = InProcessServingEngine(variants, **engine_kw)
         prof_engine = engine
@@ -133,8 +155,19 @@ def main():
     cfg = ControllerConfig(interval_s=args.interval, budget=budget,
                            slo_ms=slo_ms, beta=0.05, gamma=0.05,
                            reactive=True, queue_aware=True)
+    slo_monitor, sink = None, None
+    if args.burn_rate_alerts:
+        from repro.obs import (BurnRateRule, CollectingSink, FlightTrigger,
+                               SLOMonitor)
+        sink = CollectingSink()
+        sinks = [sink] + ([FlightTrigger(flight)] if flight is not None
+                          else [])
+        slo_monitor = SLOMonitor(engine.windows, budget=0.05,
+                                 rules=(BurnRateRule(fast_s=5.0, slow_s=30.0,
+                                                     threshold=2.0),),
+                                 sinks=tuple(sinks))
     ctrl = InfAdapterController(profiles, MovingMaxForecaster(window=10),
-                                cfg)
+                                cfg, burn_alerts=sink)
 
     faults = None
     if args.fail_node_at is not None:
@@ -145,7 +178,7 @@ def main():
     run_serving_loop(engine, ctrl, seconds=args.seconds,
                      interval=args.interval,
                      load_fn=rise_fall_load(max(args.seconds, 1)),
-                     faults=faults, slo_ms=slo_ms)
+                     faults=faults, slo_ms=slo_ms, slo_monitor=slo_monitor)
     s = engine.summarize(slo_ms, best_accuracy=78.0)
     if not s:
         print(f"\nno requests completed ({engine.rejected} rejected)")
@@ -154,6 +187,15 @@ def main():
           f"rejected): goodput={s['goodput']:.1%} "
           f"viol={s['violation_rate']:.1%} p99={s['p99_ms']:.0f}ms "
           f"mean={s['mean_latency_ms']:.0f}ms acc_loss={s['accuracy_loss']:.2f}%")
+
+    if slo_monitor is not None:
+        n_burn = sum(1 for d in ctrl.audit.entries
+                     if d.reason == "burn_rate")
+        print(f"burn-rate alerts: {len(slo_monitor.alerts)} fired, "
+              f"{n_burn} re-solves")
+    if flight is not None:
+        for p in flight.dumps:
+            print(f"flight dump: {p}")
 
     if args.trace:
         from repro.obs.export import (write_audit_jsonl, write_chrome_trace,

@@ -245,7 +245,7 @@ def observability_table(bench_path: str) -> str:
     (disabled / metrics-only / traced), the no-op-hook overhead gate, and
     the exported artifact inventory — from the ``observability`` cell of
     BENCH_engine.json."""
-    out = ["| level | mean tick ms | p99 tick ms | vs disabled |",
+    out = ["| level | mean tick ms | p99 tick ms | ratio |",
            "|---|---|---|---|"]
     if not os.path.exists(bench_path):
         return "\n".join(out)
@@ -258,19 +258,31 @@ def observability_table(bench_path: str) -> str:
     if not c:
         return "\n".join(out)
     ticks = c.get("ticks", {})
-    ratios = {"disabled": 1.0, "metrics": c.get("metrics_over_disabled"),
-              "traced": c.get("traced_over_disabled")}
-    for level in ("disabled", "metrics", "traced"):
+    ratios = {"disabled": (1.0, "—"),
+              "metrics": (c.get("metrics_over_disabled"), "vs disabled"),
+              "traced": (c.get("traced_over_disabled"), "vs disabled"),
+              "windowed": (c.get("windowed_over_disabled"), "vs disabled"),
+              "profiled": (c.get("profiled_over_traced"), "vs traced")}
+    for level in ("disabled", "metrics", "traced", "windowed", "profiled"):
         t = ticks.get(level)
         if not t:
             continue
+        r, vs = ratios[level]
+        rs = f"{r:.3f}× {vs}" if isinstance(r, (int, float)) else "—"
         out.append(f"| {level} | {t['mean_step_ms']:.2f} | "
-                   f"{t['p99_step_ms']:.2f} | {ratios[level]:.3f}× |")
+                   f"{t['p99_step_ms']:.2f} | {rs} |")
     out.append(f"| no-op hook budget | "
                f"{c.get('noop_hook_ns', float('nan')):.0f} ns × "
                f"{c.get('hooks_per_tick_budget', 0)}/tick | — | "
                f"**{c.get('disabled_hook_frac', float('nan')):.4f}** "
                f"(gate ≤{c.get('gate_frac', 0.02)}) |")
+    smoke = c.get("burn_smoke")
+    if smoke:
+        out.append(f"| burn-rate smoke | {smoke.get('alerts_fired', 0)} "
+                   f"alerts | flight: "
+                   f"{os.path.basename(smoke.get('flight_dump') or '—')} | "
+                   f"drops {smoke.get('spans_dropped', 0):.0f}/"
+                   f"{smoke.get('ticks_dropped', 0):.0f} |")
     art = c.get("artifacts", {})
     if art:
         out.append(f"| artifacts | {art.get('trace', '—')} "
@@ -278,6 +290,35 @@ def observability_table(bench_path: str) -> str:
                    f"{art.get('metrics', '—')} "
                    f"({art.get('metric_rows', 0)} rows) | "
                    f"{art.get('requests', 0)} traced requests |")
+    return "\n".join(out)
+
+
+def dispatch_floor_table(bench_path: str) -> str:
+    """§Dispatch floor: per-tick-type host/device split from the sampled
+    (fenced) ticks — the ``dispatch_floor`` cell of BENCH_engine.json. The
+    off-device fraction (dispatch + host-sync share of the exec phase) is
+    the budget an async double-buffered tick loop could overlap away; this
+    table is the measured baseline that future work gets compared against
+    (ROADMAP: async tick loop)."""
+    out = ["| tick kind | n | dispatch ms mean/p50 | device ms mean/p50 | "
+           "host-sync ms mean/p50 | exec ms | off-device frac |",
+           "|---|---|---|---|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(out)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    floor = (data.get("observability") or {}).get("dispatch_floor") or {}
+    for kind, d in sorted(floor.items()):
+        off = d["dispatch_frac"] + d["host_sync_frac"]
+        out.append(
+            f"| {kind} | {d['n_sampled']} | "
+            f"{d['dispatch_ms_mean']:.2f}/{d['dispatch_ms_p50']:.2f} | "
+            f"{d['device_ms_mean']:.2f}/{d['device_ms_p50']:.2f} | "
+            f"{d['host_sync_ms_mean']:.2f}/{d['host_sync_ms_p50']:.2f} | "
+            f"{d['exec_ms_mean']:.2f} | **{off:.2f}** |")
     return "\n".join(out)
 
 
@@ -366,6 +407,8 @@ def main():
     inject(args.md, "OBS_OVERHEAD_TABLE",
            observability_table(args.bench_engine))
     inject(args.md, "OBS_AUDIT_TABLE", audit_table(args.audit))
+    inject(args.md, "DISPATCH_FLOOR_TABLE",
+           dispatch_floor_table(args.bench_engine))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

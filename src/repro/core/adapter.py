@@ -27,6 +27,7 @@ from repro.core.objective import Allocation, evaluate
 from repro.core.profiles import VariantProfile
 from repro.core.solver import SOLVERS
 from repro.obs.audit import DecisionAudit, predict_outputs
+from repro.obs.slo import CollectingSink
 from repro.serving.api import ClusterAPI  # noqa: F401  (re-export: public API)
 
 
@@ -59,7 +60,8 @@ class InfAdapterController:
     def __init__(self, profiles: Mapping[str, VariantProfile],
                  forecaster, cfg: ControllerConfig,
                  dispatcher: Optional[WeightedRoundRobinDispatcher] = None,
-                 audit: Optional[DecisionAudit] = None):
+                 audit: Optional[DecisionAudit] = None,
+                 burn_alerts: Optional[CollectingSink] = None):
         self.profiles = dict(profiles)
         self.forecaster = forecaster
         self.cfg = cfg
@@ -67,6 +69,7 @@ class InfAdapterController:
         self.monitor = RateMonitor()
         self.decisions: List[Decision] = []
         self.audit = audit if audit is not None else DecisionAudit()
+        self.burn_alerts = burn_alerts
         self._decide_reason = "interval"
 
     def update_profiles(self, updates: Mapping[str, VariantProfile]) -> None:
@@ -155,7 +158,20 @@ class InfAdapterController:
         the target allocation actually live (node crashes, placement
         shortfall). Provisioned capacity is discounted by it, so losing a
         node triggers a re-solve (and thereby re-placement) at the next
-        reactive check instead of waiting out the control interval."""
+        reactive check instead of waiting out the control interval.
+
+        A ``burn_alerts`` sink (``repro.obs.slo.CollectingSink`` fed by an
+        ``SLOMonitor``) adds a second trigger: any pending burn-rate alert
+        forces an immediate re-solve, independent of ``cfg.reactive`` —
+        the SLO is already burning, so capacity-vs-rate arithmetic is moot.
+        This is the first consumer of the goodput-aware-control roadmap
+        item: the control loop reacts to *measured* SLO attainment, not
+        just offered load."""
+        if self.burn_alerts is not None and self.decisions:
+            fired = self.burn_alerts.pop_pending()
+            if fired:
+                self._decide_reason = "burn_rate"
+                return self.step(t, cluster)
         if not self.cfg.reactive or not self.decisions:
             return None
         last = self.decisions[-1].allocation

@@ -101,7 +101,7 @@ class DecisionRecord:
     """One controller adaptation: inputs, outputs, and (later) outcome."""
     t: float
     controller: str
-    reason: str                      # "interval" | "reactive" | "warm_start"
+    reason: str          # "interval" | "reactive" | "burn_rate" | "warm_start"
     inputs: Dict[str, Any] = field(default_factory=dict)
     outputs: Dict[str, Any] = field(default_factory=dict)
     measured: Optional[Dict[str, Any]] = None
@@ -139,8 +139,13 @@ class DecisionAudit:
                         horizon: Optional[float] = None) -> int:
         """Bucket per-request outcomes into decision windows and attach
         measured p99/goodput + regret to each entry. Requests arriving
-        before the first decision are credited to it (warm-up). Returns
-        the number of entries that received measurements."""
+        before the first decision are credited to it (warm-up). Entries
+        recorded out of timestamp order are SORTED by ``t`` before
+        bucketing (windows are defined by decision time, not record
+        order) — never an error. Entries whose window caught no requests
+        get ``measured={"n_requests": 0}`` and do not count toward the
+        returned total. Returns the number of entries that received
+        measurements."""
         if not self.entries or not len(arrivals):
             return 0
         order = sorted(range(len(self.entries)),

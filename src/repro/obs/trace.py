@@ -15,10 +15,19 @@ Two record kinds, one clock domain (DESIGN.md §Observability):
   tick took (fused chunk vs pure decode), wall-clock cost of the
   preempt/admit/execute phases (``time.perf_counter`` — wall cost even
   when the *timeline* clock is virtual), batch geometry, queue depth, and
-  paged-pool occupancy.
+  paged-pool occupancy. On dispatch-profiled ticks
+  (``InProcessServingEngine(profile_dispatch=N)``) the execute phase is
+  further split into ``dispatch_ms`` (jit call returning — jax async
+  dispatch), ``device_ms`` (``block_until_ready`` fence — device
+  compute), and ``host_sync_ms`` (``np.asarray`` copy + host
+  bookkeeping); NaN on unsampled ticks (see ``obs.profiler``).
 
 ``Tracer`` stores both, bounded (drops-past-cap are counted, never
-silently lost), and converts to Chrome ``trace_event`` JSON — load
+silently lost — and surfaced as registry counters ``obs.spans_dropped``/
+``obs.ticks_dropped`` when constructed with ``metrics=``), optionally
+mirrors everything into a ``FlightRecorder`` ring (``flight=`` — the
+recorder keeps the recent past even after the tracer's own caps fill),
+and converts to Chrome ``trace_event`` JSON — load
 ``reports/TRACE_engine.json`` at https://ui.perfetto.dev. Request lanes
 live under pid 1 (one thread per rid: queued/prefill/decode/preempted
 slices + instants for chunks, CoW binds, preemptions); engine tick lanes
@@ -90,6 +99,11 @@ class TickRecord:
     preempted: int = 0        # requests preempted this tick
     completed: int = 0        # requests finished this tick
     pool_occupancy: float = float("nan")  # paged pool occupancy (NaN: dense)
+    # dispatch-profiler split of exec_ms (NaN unless this tick was sampled
+    # under profile_dispatch — fenced with block_until_ready)
+    dispatch_ms: float = float("nan")   # jitted call returned (async enqueue)
+    device_ms: float = float("nan")     # block_until_ready wait (device work)
+    host_sync_ms: float = float("nan")  # exec remainder: D2H copy + host loop
 
     @property
     def total_ms(self) -> float:
@@ -109,7 +123,7 @@ class Tracer:
     """
 
     def __init__(self, enabled: bool = True, max_events: int = 200_000,
-                 max_ticks: int = 100_000):
+                 max_ticks: int = 100_000, metrics=None, flight=None):
         self.on = enabled
         self.max_events = max_events
         self.max_ticks = max_ticks
@@ -118,19 +132,30 @@ class Tracer:
         self.n_events = 0
         self.dropped_events = 0
         self.dropped_ticks = 0
+        # registry surfacing drops (obs.spans_dropped / obs.ticks_dropped)
+        # so silent truncation shows in METRICS jsonl; None = count-only
+        self.metrics = metrics
+        # FlightRecorder ring: fed BEFORE the cap check — the recorder
+        # keeps the recent past, the tracer keeps the bounded whole
+        self.flight = flight
 
     # ------------------------------------------------------------ recording
     def event(self, rid: int, name: str, t: float, **attrs) -> None:
         """Stamp one lifecycle event for request ``rid`` at clock ``t``."""
         if not self.on:
             return
+        span = SpanEvent(rid, name, t, attrs or None)
+        if self.flight is not None:
+            self.flight.push_event(span)
         if self.n_events >= self.max_events:
             self.dropped_events += 1
+            if self.metrics is not None:
+                self.metrics.inc("obs.spans_dropped")
             return
         lst = self.events.get(rid)
         if lst is None:
             lst = self.events[rid] = []
-        lst.append(SpanEvent(rid, name, t, attrs or None))
+        lst.append(span)
         self.n_events += 1
 
     def request_event(self, req, name: str, t: float, **attrs) -> None:
@@ -144,8 +169,12 @@ class Tracer:
     def tick(self, record: TickRecord) -> None:
         if not self.on:
             return
+        if self.flight is not None:
+            self.flight.push_tick(record)
         if len(self.ticks) >= self.max_ticks:
             self.dropped_ticks += 1
+            if self.metrics is not None:
+                self.metrics.inc("obs.ticks_dropped")
             return
         self.ticks.append(record)
 

@@ -63,6 +63,7 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
                      seed: int = 0, prompt_len: int = 16, max_new: int = 8,
                      vocab: int = 256, tick_sleep: float = 0.05,
                      faults=None, slo_ms: float = 0.0,
+                     slo_monitor=None,
                      log: Optional[Callable[[str], None]] = print) -> int:
     """Drive ``engine`` under ``ctrl`` for ``seconds`` of wall-clock time.
 
@@ -75,6 +76,13 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
     time passes. ``slo_ms`` stamps each request's deadline (deadline-aware
     schedulers and the goodput metric read it). Returns the number of
     requests submitted.
+
+    ``slo_monitor`` (a ``repro.obs.slo.SLOMonitor`` over the engine's
+    windowed metrics) turns on the online reaction path: every iteration
+    the monitor's burn-rate rules are checked and ``ctrl.maybe_react`` is
+    called, so a controller wired with ``burn_alerts=`` re-solves on a
+    burn-rate breach *between* interval steps. Without it the loop is
+    purely interval-driven (unchanged legacy behavior).
 
     Arrivals are stamped from the engine's clock — the same clock the
     engine stamps ``service_start``/``completion`` from — so latencies and
@@ -115,6 +123,22 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
             rid += 1
         last = now
         engine.step(now)   # one engine tick: admit into free slots + decode
+        if slo_monitor is not None:
+            fired = slo_monitor.check(now)
+            if fired:
+                if log is not None:
+                    for a in fired:
+                        log(f"  t={now:5.1f}s BURN slo_class={a.slo_class} "
+                            f"fast={a.burn_fast:.1f}x slow={a.burn_slow:.1f}x")
+                ctrl.monitor.advance_to(now)
+                d = ctrl.maybe_react(now, engine)
+                if d is not None and log is not None:
+                    active = {k: v for k, v in d.allocation.units.items() if v}
+                    log(f"  t={now:5.1f}s re-solve (burn_rate) -> {active}")
+            flight = getattr(engine, "obs", None)
+            flight = flight.flight if flight is not None else None
+            if flight is not None:
+                flight.snap_metrics(now, engine.obs.metrics)
         time.sleep(tick_sleep)
     engine.drain(seconds)  # finish whatever is still queued/in flight
     # Close the audit loop: bucket realized latencies/goodput back onto the

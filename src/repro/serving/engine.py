@@ -86,6 +86,7 @@ from repro.models.attention import PagedKVCache
 from repro.models.model import build_model
 from repro.obs import Observability, TickRecord
 from repro.obs import trace as ev
+from repro.obs.slo import slo_class_key
 from repro.serving.api import Request, summarize_requests
 from repro.serving.sched import make_scheduler
 
@@ -137,6 +138,12 @@ class VariantBackend:
         self.obs = obs if obs is not None else Observability.disabled()
         self.metrics = self.obs.metrics
         self.tracer = self.obs.tracer
+        self.windows = self.obs.windows
+        # dispatch profiler (obs.profiler): the engine arms _fence_exec on
+        # sampled ticks; _jit_exec then fences the exec-phase jit call and
+        # leaves (dispatch_ms, device_ms) on exec_split for the TickRecord
+        self._fence_exec = False
+        self.exec_split: Optional[Tuple[float, float]] = None
         if use_pallas and not cfg.use_pallas:
             cfg = cfg.replace(use_pallas=True)
         self.cfg = cfg
@@ -494,7 +501,8 @@ class VariantBackend:
             start[s] = self.slot_pos[s]
             n_valid[s] = 1
             set_mask[s] = True                       # argmax = next token
-        self.cur_tok, self.cache = self._prefill_chunk(
+        self.cur_tok, self.cache = self._jit_exec(
+            self._prefill_chunk,
             self.params, self.cache, self.cur_tok, jnp.asarray(tokens),
             jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(set_mask))
         tok_np = np.asarray(self.cur_tok)
@@ -609,9 +617,27 @@ class VariantBackend:
                 self._retire_slot(slot)
         return finished
 
+    def _jit_exec(self, call, *args):
+        """Run one exec-phase jitted call. On dispatch-sampled ticks
+        (``_fence_exec``) the call's outputs are fenced with
+        ``block_until_ready``, splitting the async-dispatch cost (the jit
+        call returning) from device compute; ``exec_split`` carries
+        (dispatch_ms, device_ms) for the tick's ``TickRecord`` — the
+        remainder of the engine-measured exec phase is the host-sync tail
+        (``np.asarray`` D2H copy + per-slot bookkeeping)."""
+        if not self._fence_exec:
+            return call(*args)
+        t0 = time.perf_counter()
+        out = call(*args)
+        t1 = time.perf_counter()
+        jax.block_until_ready(out)
+        t2 = time.perf_counter()
+        self.exec_split = ((t1 - t0) * 1e3, (t2 - t1) * 1e3)
+        return out
+
     def _run_decode_chunk(self) -> np.ndarray:
-        self.cur_tok, self.cache, toks = self._decode_chunk(
-            self.params, self.cache, self.cur_tok)
+        self.cur_tok, self.cache, toks = self._jit_exec(
+            self._decode_chunk, self.params, self.cache, self.cur_tok)
         self.slot_pos += self.decode_chunk   # device advanced every row
         return np.asarray(toks)
 
@@ -633,17 +659,36 @@ class VariantBackend:
 
         Goodput counts a request when it wasn't dropped and met its own
         ``slo_ms`` (requests without a per-request SLO count as good — the
-        registry can't know the summary-time global SLO)."""
+        registry can't know the summary-time global SLO).
+
+        With rolling windows on (``Observability(windows=True)``) the same
+        outcomes also land in the windowed instruments under the SAME
+        names, keyed at ``r.completion`` (the backend's one clock), plus
+        the per-SLO-class ``slo.class.<key>.good|bad`` counters the
+        burn-rate monitor reads — the DES ``_record`` sink mirrors this
+        exactly (parity-tested)."""
         m = self.metrics
         lat = r.latency_ms
+        good = not dropped and (r.slo_ms <= 0 or lat <= r.slo_ms)
         m.inc("requests.completed")
         m.observe("request.latency_ms", lat)
         m.observe("request.queue_wait_ms", r.queue_wait_ms)
         m.observe("request.service_ms", r.service_ms)
         if dropped:
             m.inc("requests.dropped")
-        elif r.slo_ms <= 0 or lat <= r.slo_ms:
+        elif good:
             m.inc("requests.goodput_ok")
+        w = self.windows
+        if w.on:
+            tc = r.completion
+            w.inc("requests.completed", tc)
+            w.observe("request.latency_ms", tc, lat)
+            cls = slo_class_key(r.slo_ms)
+            if dropped:
+                w.inc("requests.dropped", tc)
+            elif good:
+                w.inc("requests.goodput_ok", tc)
+            w.inc(f"slo.class.{cls}.{'good' if good else 'bad'}", tc)
         self.tracer.request_event(r, ev.DROP if dropped else ev.COMPLETE,
                                   r.completion, backend=self.name,
                                   latency_ms=lat)
@@ -908,8 +953,8 @@ class PagedVariantBackend(VariantBackend):
         need = self.pool.pages_needed(int(max(live)) + self.decode_chunk)
         need = min(need, self.pages_per_slot)
         nb = next(b for b in self.page_buckets if b >= need)
-        self.cur_tok, self.cache, toks = self._decode_chunk_p(
-            self.params, self.cache, self.cur_tok, nb)
+        self.cur_tok, self.cache, toks = self._jit_exec(
+            self._decode_chunk_p, self.params, self.cache, self.cur_tok, nb)
         self.slot_pos += self.decode_chunk   # device advanced every row
         return np.asarray(toks)
 
@@ -949,7 +994,8 @@ class InProcessServingEngine:
                  preemption: str = "none",
                  clock: Callable[[], float] = time.time,
                  trace: bool = False,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 profile_dispatch: int = 0):
         assert mode in ("continuous", "pump"), mode
         assert kv_cache in ("dense", "paged"), kv_cache
         assert kv_cache == "dense" or mode == "continuous", \
@@ -976,6 +1022,12 @@ class InProcessServingEngine:
         self.obs = obs if obs is not None else Observability(trace=trace)
         self.metrics = self.obs.metrics
         self.tracer = self.obs.tracer
+        self.windows = self.obs.windows
+        # dispatch profiler: every Nth tick fences its exec-phase jit call
+        # (block_until_ready) and records the dispatch/device/host-sync
+        # split on the TickRecord (0 = off; needs tracing for the records)
+        self.profile_dispatch = int(profile_dispatch)
+        self._tick_no = 0
         assert mode == "continuous" or (
             not self.sched.chunked and preemption == "none"), \
             "chunked scheduling/preemption need the continuous engine"
@@ -1178,6 +1230,10 @@ class InProcessServingEngine:
                 rep = self.fabric.replicas[event.target]
                 if rep.handle is not None:
                     rep.handle.slow_factor = rep.slow_factor
+        if self.obs.flight is not None:   # snapshot the run-up to the fault
+            self.obs.flight.trigger(f"fault_{event.kind}", now,
+                                    extra={"target": event.target,
+                                           "factor": event.factor})
 
     def _crash_node(self, now: float, node_id: str) -> None:
         """Kill every replica on the node NOW (no drain): their in-flight
@@ -1211,6 +1267,8 @@ class InProcessServingEngine:
         if not self.backends:
             self.rejected += 1
             self.metrics.inc("requests.rejected")
+            if self.windows.on:
+                self.windows.inc("requests.rejected", self.clock())
             self.tracer.request_event(req, ev.REJECTED, self.clock(),
                                       reason="no_backend")
             return False
@@ -1224,12 +1282,16 @@ class InProcessServingEngine:
         if len(q) >= self.queue_cap:
             self.rejected += 1
             self.metrics.inc("requests.rejected")
+            if self.windows.on:
+                self.windows.inc("requests.rejected", self.clock())
             self.tracer.request_event(req, ev.REJECTED, self.clock(),
                                       backend=name, reason="queue_full")
             return False
         req.backend = name
         q.append(req)
         self.metrics.inc("requests.submitted")
+        if self.windows.on:
+            self.windows.inc("requests.submitted", self.clock())
         # stamped at clock(), not req.arrival: a crash retry re-queues with
         # its original arrival preserved, and span times must stay monotone
         self.tracer.request_event(req, ev.QUEUED, self.clock(), backend=name,
@@ -1282,6 +1344,11 @@ class InProcessServingEngine:
         self._rebalance_queues()
         done_before = len(self.done)
         tron = self.tracer.on
+        self._tick_no += 1
+        # dispatch-profiler sampling: fence every Nth tick's exec call; the
+        # records only exist with tracing on, so sampling follows tron
+        fence = (tron and self.profile_dispatch > 0
+                 and self._tick_no % self.profile_dispatch == 0)
         for name, b in self.backends.items():
             q = self.queues.get(name, deque())
             bdone = len(self.done)
@@ -1315,6 +1382,8 @@ class InProcessServingEngine:
                     if resumed:
                         self.done.extend(b.admit_chunked(resumed, now))
             t2 = time.perf_counter() if tron else 0.0
+            if fence:
+                b._fence_exec, b.exec_split = True, None
             if b._prefilling:     # fused tick: prefill chunks + 1-token decodes
                 kind = "fused"
                 self.done.extend(b.fused_chunk_step(now))
@@ -1323,15 +1392,25 @@ class InProcessServingEngine:
                 self.done.extend(b.decode_step_batch(now))
             if tron:
                 t3 = time.perf_counter()
+                exec_ms = (t3 - t2) * 1e3
+                nan = float("nan")
+                disp_ms = dev_ms = host_ms = nan
+                if fence:
+                    b._fence_exec = False
+                    if b.exec_split is not None:  # idle ticks ran no jit
+                        disp_ms, dev_ms = b.exec_split
+                        host_ms = max(exec_ms - disp_ms - dev_ms, 0.0)
                 occ = (b.kv_pool_occupancy
                        if isinstance(b, PagedVariantBackend) else float("nan"))
                 self.tracer.tick(TickRecord(
                     backend=name, t=now, kind=kind,
                     preempt_ms=(t1 - t0) * 1e3, admit_ms=(t2 - t1) * 1e3,
-                    exec_ms=(t3 - t2) * 1e3, active=b.active_slots,
+                    exec_ms=exec_ms, active=b.active_slots,
                     prefilling=len(b._prefilling), queued=len(q),
                     admitted=n_admitted, preempted=n_preempted,
-                    completed=len(self.done) - bdone, pool_occupancy=occ))
+                    completed=len(self.done) - bdone, pool_occupancy=occ,
+                    dispatch_ms=disp_ms, device_ms=dev_ms,
+                    host_sync_ms=host_ms))
         return len(self.done) - done_before
 
     def drain(self, now: float, max_ticks: int = 10_000) -> int:

@@ -59,6 +59,7 @@ from repro.cluster.router import ReplicaView, RoutingAPI, make_router
 from repro.core.profiles import VariantProfile
 from repro.obs import Observability
 from repro.obs import trace as ev
+from repro.obs.slo import slo_class_key
 from repro.serving.api import Request, summarize_requests
 from repro.serving.sched import make_scheduler
 
@@ -196,6 +197,10 @@ class SimCluster:
         self.obs = obs if obs is not None else Observability(trace=trace)
         self.metrics = self.obs.metrics
         self.tracer = self.obs.tracer
+        # rolling windows (obs.windows): fed at completion in _record with
+        # the SAME names as the engine's _obs_complete, keyed by virtual
+        # time — burn-rate monitors read either backend identically
+        self.windows = self.obs.windows
         # queue discipline mirroring the engine's scheduler layer (module
         # docstring): "fifo" serves at submit; "edf"/"chunked" hold arrivals
         # in per-backend pending heaps assigned deadline-first
@@ -310,6 +315,10 @@ class SimCluster:
             if self.fabric.slow_replica(t, event.target, factor):
                 rep = self.fabric.replicas[event.target]
                 rep.handle.slow_factor = rep.slow_factor
+        if self.obs.flight is not None:
+            self.obs.flight.trigger(f"fault_{event.kind}", t,
+                                    extra={"target": event.target,
+                                           "factor": event.factor})
 
     # ---------------------------------------------------------------- serving
     def submit(self, req: Request, backend: Optional[str]) -> bool:
@@ -333,10 +342,23 @@ class SimCluster:
         m.observe("request.latency_ms", lat)
         m.observe("request.queue_wait_ms", sr.queue_wait_ms)
         m.observe("request.service_ms", sr.service_ms)
-        if sr.service_start <= 0.0:
+        dropped = sr.service_start <= 0.0
+        good = not dropped and (sr.slo_ms <= 0 or lat <= sr.slo_ms)
+        if dropped:
             m.inc("requests.dropped")
-        elif sr.slo_ms <= 0 or lat <= sr.slo_ms:
+        elif good:
             m.inc("requests.goodput_ok")
+        w = self.windows
+        if w.on:     # windowed mirror of the above, keyed at virtual time
+            tc = sr.completion
+            w.inc("requests.completed", tc)
+            w.observe("request.latency_ms", tc, lat)
+            cls = slo_class_key(sr.slo_ms)
+            if dropped:
+                w.inc("requests.dropped", tc)
+            elif good:
+                w.inc("requests.goodput_ok", tc)
+            w.inc(f"slo.class.{cls}.{'good' if good else 'bad'}", tc)
         if self.tracer.on and rid is not None:
             self.tracer.event(rid, ev.QUEUED, sr.arrival, backend=sr.backend)
             if sr.service_start > 0.0:
@@ -471,6 +493,8 @@ class SimCluster:
     def dispatch(self, arrival: float, backend_name: Optional[str],
                  slo_ms: float = 0.0, rid: Optional[int] = None) -> None:
         self.metrics.inc("requests.submitted")
+        if self.windows.on:
+            self.windows.inc("requests.submitted", arrival)
         if self.fabric is not None:
             self._dispatch_fabric(arrival, backend_name, slo_ms, rid=rid)
             return
@@ -563,6 +587,8 @@ class SimCluster:
             self.dispatch(arrival, None)
             return
         self.metrics.inc("requests.submitted")
+        if self.windows.on:
+            self.windows.inc("requests.submitted", arrival)
         self._record(ServedRequest(arrival, done, "+".join(backend_names),
                                    accuracy, service_start=start))
 
@@ -586,6 +612,8 @@ class SimCluster:
             self.dispatch(arrival, None)
             return
         self.metrics.inc("requests.submitted")
+        if self.windows.on:
+            self.windows.inc("requests.submitted", arrival)
         self._record(ServedRequest(arrival, done, "+".join(members),
                                    accuracy, service_start=start))
 

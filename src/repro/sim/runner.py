@@ -49,7 +49,7 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
                    interval_s: float = 30.0, seed: int = 0,
                    warm_start: Optional[Mapping[str, int]] = None,
                    reference_accuracy: Optional[float] = None,
-                   cluster=None, faults=None,
+                   cluster=None, faults=None, slo_monitor=None,
                    ) -> ExperimentResult:
     """Replay ``rate_trace`` (requests/s per second) and score the controller.
 
@@ -62,6 +62,12 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
     events into fabric-backed clusters as simulated time passes, interleaved
     in time order with controller steps — the end-to-end failure-scenario
     harness.
+
+    ``slo_monitor`` (an ``repro.obs.slo.SLOMonitor`` over the cluster's
+    windowed metrics) is checked at every reactive checkpoint, in virtual
+    time, before ``maybe_react`` — a controller wired with ``burn_alerts=``
+    re-solves on burn-rate breach with the same semantics as the wall-clock
+    driver (parity-tested).
     """
     cluster = cluster if cluster is not None else SimCluster(profiles)
     best_acc = reference_accuracy if reference_accuracy is not None \
@@ -105,6 +111,8 @@ def run_experiment(name: str, controller, profiles: Mapping[str, VariantProfile]
                 faults.apply_due(faults.next_t(), cluster)
         if a >= next_react and hasattr(controller, "maybe_react"):
             controller.monitor.advance_to(next_react)
+            if slo_monitor is not None:
+                slo_monitor.check(next_react)
             controller.maybe_react(next_react, cluster)
             next_react += react_s
         controller.monitor.record(a, 1)
