@@ -10,6 +10,9 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   fig8_nonbursty        non-bursty trace comparison (Fig. 8)
   engine_serving        continuous vs pump + paged vs dense KV cache; writes
                         reports/BENCH_engine.json (DESIGN.md §Paged KV cache)
+  async_overlap         sync vs two-phase dispatch/commit tick loop: step-time
+                        ratio gate + greedy parity; merges into
+                        BENCH_engine.json (DESIGN.md §Async tick loop)
   scheduler             FIFO vs EDF vs chunked+EDF on bimodal prompt lengths;
                         writes reports/BENCH_scheduler.json (§Scheduling)
   cluster_fabric        replica scaling, routing policy, failure recovery
@@ -41,6 +44,7 @@ ALL = {
     "fig8_nonbursty": bench_figures.fig8_nonbursty,
     "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
     "engine_serving": bench_engine.run,
+    "async_overlap": bench_engine.run_async_overlap,
     "scheduler": bench_scheduler.run,
     "cluster_fabric": bench_cluster.run,
     "profiling": bench_profiling.run,

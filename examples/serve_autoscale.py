@@ -102,6 +102,13 @@ def main():
                          "Perfetto-loadable FLIGHT_<reason>.json of the "
                          "recent past into DIR on burn-rate alerts and "
                          "injected faults")
+    ap.add_argument("--async-tick", action="store_true",
+                    help="two-phase dispatch/commit tick loop: each tick "
+                         "dispatches its jitted exec before committing the "
+                         "previous tick's tokens, hiding the D2H read and "
+                         "bookkeeping behind device compute (DESIGN.md "
+                         "§Async tick loop; greedy outputs are bitwise "
+                         "identical to the sync default)")
     args = ap.parse_args()
 
     variants = build_ladder()
@@ -111,7 +118,7 @@ def main():
     engine_kw = dict(max_batch=8, prompt_len=16, mode=args.mode, max_new=8,
                      decode_chunk=4, scheduler=args.scheduler,
                      preemption=args.preemption, clock=ElapsedClock(),
-                     trace=args.trace)
+                     trace=args.trace, async_tick=args.async_tick)
     # online tier: rolling windows feed the burn-rate monitor; the flight
     # recorder rides the tracer and dumps on alerts/faults
     flight = None

@@ -297,9 +297,11 @@ def dispatch_floor_table(bench_path: str) -> str:
     """§Dispatch floor: per-tick-type host/device split from the sampled
     (fenced) ticks — the ``dispatch_floor`` cell of BENCH_engine.json. The
     off-device fraction (dispatch + host-sync share of the exec phase) is
-    the budget an async double-buffered tick loop could overlap away; this
-    table is the measured baseline that future work gets compared against
-    (ROADMAP: async tick loop)."""
+    the budget the async two-phase tick loop overlaps away; when the
+    ``async_overlap`` study has run, a second table compares the sync
+    baseline's exposed fraction against the async loop's (only the commit
+    wait stays exposed — dispatch, bookkeeping, and the D2H read ride
+    behind the in-flight exec; DESIGN.md §Async tick loop)."""
     out = ["| tick kind | n | dispatch ms mean/p50 | device ms mean/p50 | "
            "host-sync ms mean/p50 | exec ms | off-device frac |",
            "|---|---|---|---|---|---|---|"]
@@ -319,6 +321,31 @@ def dispatch_floor_table(bench_path: str) -> str:
             f"{d['device_ms_mean']:.2f}/{d['device_ms_p50']:.2f} | "
             f"{d['host_sync_ms_mean']:.2f}/{d['host_sync_ms_p50']:.2f} | "
             f"{d['exec_ms_mean']:.2f} | **{off:.2f}** |")
+    ao = data.get("async_overlap") or {}
+    if ao:
+        com = (ao.get("async") or {}).get("commit") or {}
+        offd = ao.get("off_device_frac") or {}
+        gate_note = ("single-core host: no-regression bound"
+                     if ao.get("single_core")
+                     else f"multi-core gate <= {ao.get('gate', 0.9)}")
+        out += ["",
+                "Async two-phase tick loop vs sync at the overlap geometry "
+                "(`async_overlap` study; decode ticks):",
+                "",
+                "| mode | mean step ms | exposed off-device frac | "
+                "hidden host ms/tick | commit wait ms |",
+                "|---|---|---|---|---|",
+                f"| sync | {ao.get('sync', {}).get('mean_step_ms', 0):.3f} | "
+                f"**{offd.get('sync', 0):.3f}** | — | — |",
+                f"| async | {ao.get('async', {}).get('mean_step_ms', 0):.3f}"
+                f" | **{offd.get('async', 0):.3f}** | "
+                f"{com.get('hidden_host_ms_mean', 0):.3f} | "
+                f"{com.get('commit_wait_ms_mean', 0):.3f} |",
+                "",
+                f"step ratio async/sync = {ao.get('step_ratio', 0):.3f} "
+                f"({ao.get('cores', '?')} core(s); {gate_note}); greedy "
+                f"outputs bitwise identical on "
+                f"{(ao.get('parity') or {}).get('n_requests', 0)} requests."]
     return "\n".join(out)
 
 

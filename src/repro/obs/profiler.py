@@ -35,7 +35,14 @@ def dispatch_floor_summary(ticks: Iterable[TickRecord]) -> Dict[str, Dict]:
     """Per-tick-type means/medians of the sampled dispatch/device/host-sync
     split. ``dispatch_frac``/``host_sync_frac`` are the shares of the
     sampled exec phase spent off-device — together, the floor an async
-    tick loop could overlap away."""
+    tick loop could overlap away.
+
+    When the records come from an ``async_tick`` engine, each sampled tick
+    also carries the one-tick-lag commit columns (``commit_ms`` /
+    ``commit_wait_ms`` / ``hidden_host_ms`` — see ``TickRecord``); their
+    means land in the summary so the dispatch-floor table can show how
+    much host time the pipeline actually hid (``hidden_host_ms_mean``)
+    next to the sync baseline's exposed floor."""
     by_kind: Dict[str, List[TickRecord]] = {}
     for r in ticks:
         if math.isfinite(r.dispatch_ms):
@@ -58,4 +65,16 @@ def dispatch_floor_summary(ticks: Iterable[TickRecord]) -> Dict[str, Dict]:
             "dispatch_frac": float((disp / total).mean()),
             "host_sync_frac": float((host / total).mean()),
         }
+        # async overlap columns: only ticks that committed a previous exec
+        acom = [r for r in recs if math.isfinite(r.commit_ms)]
+        if acom:
+            commit = np.asarray([r.commit_ms for r in acom])
+            wait = np.asarray([r.commit_wait_ms for r in acom])
+            hidden = np.asarray([r.hidden_host_ms for r in acom])
+            out[kind].update({
+                "n_async_sampled": len(acom),
+                "commit_ms_mean": float(commit.mean()),
+                "commit_wait_ms_mean": float(wait.mean()),
+                "hidden_host_ms_mean": float(hidden.mean()),
+            })
     return out

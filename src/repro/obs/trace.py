@@ -40,6 +40,7 @@ no-op — the engine's disabled-mode overhead gate in
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -104,10 +105,21 @@ class TickRecord:
     dispatch_ms: float = float("nan")   # jitted call returned (async enqueue)
     device_ms: float = float("nan")     # block_until_ready wait (device work)
     host_sync_ms: float = float("nan")  # exec remainder: D2H copy + host loop
+    # async tick loop overlap fields (NaN unless engine(async_tick=True)
+    # committed a previous tick's exec on this tick): with the one-tick-lag
+    # commit queue, exec_ms above is the DISPATCH phase only and the
+    # fields below describe the commit of tick t-1 riding this tick
+    commit_ms: float = float("nan")       # commit phase wall (read + books)
+    commit_gap_ms: float = float("nan")   # t-1 dispatch -> commit-read gap
+    commit_wait_ms: float = float("nan")  # blocked inside the D2H read
+    hidden_host_ms: float = float("nan")  # host work overlapped with t-1's
+    #                                       in-flight exec (preempt + admit
+    #                                       + this tick's dispatch)
 
     @property
     def total_ms(self) -> float:
-        return self.preempt_ms + self.admit_ms + self.exec_ms
+        commit = self.commit_ms if math.isfinite(self.commit_ms) else 0.0
+        return self.preempt_ms + self.admit_ms + self.exec_ms + commit
 
     def to_dict(self) -> Dict[str, Any]:
         d = dict(self.__dict__)

@@ -101,6 +101,12 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
         if now > seconds:
             break
         if faults is not None and faults.next_t() <= now:
+            # commit the in-flight async tick before the fleet mutates:
+            # fault handling (crash re-submission, drain) must see fully
+            # committed slot state, not one tick of lagged bookkeeping
+            flush = getattr(engine, "flush_pending", None)
+            if flush is not None:
+                flush(now)
             for ev in faults.apply_due(now, engine):
                 if log is not None:
                     log(f"  t={now:5.1f}s FAULT {ev.kind} {ev.target}")
@@ -123,6 +129,10 @@ def run_serving_loop(engine: ServingAPI, ctrl, *, seconds: float,
             rid += 1
         last = now
         engine.step(now)   # one engine tick: admit into free slots + decode
+        # the burn-rate check runs AFTER the tick's commit phase (with
+        # async_tick, step() commits the previous tick's completions before
+        # returning), so mid-interval alerts only ever see fully-committed
+        # windows — never a tick of half-applied completions
         if slo_monitor is not None:
             fired = slo_monitor.check(now)
             if fired:

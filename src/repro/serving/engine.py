@@ -112,6 +112,31 @@ class _PrefillJob:
     gen: List[int] = field(default_factory=list)
 
 
+@dataclass
+class _PendingExec:
+    """One dispatched-but-uncommitted exec phase (DESIGN.md §Async tick
+    loop). ``toks`` is the un-synced device output — the decode chunk's
+    ``(chunk, B)`` token matrix or the fused tick's ``(B,)`` ``cur_tok``
+    snapshot; neither is in any jit's donation set, so holding the
+    reference across the next dispatch is safe while the donated KV cache
+    is updated in place underneath it. Everything value-*independent*
+    (slot_remaining, positions, prefill progress) was already applied at
+    dispatch time; ``commit_exec`` applies the value-*dependent* remainder
+    (token appends, ``_finish``, slot retirement) one tick later, guarded
+    by the ``(request identity, slot_gen)`` pair so a slot preempted or
+    rebound inside the gap never absorbs stale tokens."""
+    kind: str                                  # "decode" | "fused"
+    toks: object                               # un-synced device array
+    dispatched_at: float                       # perf_counter at dispatch start
+    t_dispatch: float                          # timeline clock at dispatch
+    # (slot, req, slot_gen, take, finishing) — decode rows to append
+    decode_items: List[Tuple] = field(default_factory=list)
+    # (slot, req, slot_gen, resume_tok, gen_before, finishing) — rows whose
+    # chunked prefill completed at dispatch; their first token is the fused
+    # argmax (or the preserved resume token) read at commit
+    fused_completions: List[Tuple] = field(default_factory=list)
+
+
 class VariantBackend:
     """One loaded model variant: params + jitted prefill/decode + slot state.
 
@@ -179,6 +204,18 @@ class VariantBackend:
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_remaining = np.zeros((max_batch,), np.int64)
         self.slot_tokens: List[List[int]] = [[] for _ in range(max_batch)]
+        # async tick loop (DESIGN.md §Async tick loop): the engine parks the
+        # dispatched-but-uncommitted exec here between ticks; slot_gen is a
+        # per-slot bind counter so a commit can detect preempt/rebind inside
+        # the gap; _uncommitted_done marks slots finished by count at
+        # dispatch whose tokens have not been read back yet (excluded from
+        # further dispatch and from preemption, still occupying their slot
+        # so admission headroom lags exactly one tick)
+        self._pending: Optional[_PendingExec] = None
+        self.slot_gen = [0] * max_batch
+        self._uncommitted_done: Set[int] = set()
+        self.commit_wait_ms = float("nan")   # blocked in the commit D2H read
+        self.commit_gap_ms = float("nan")    # dispatch -> commit-read gap
         # host mirror of each bound row's device position (the paged backend
         # buckets on it; chunked fused ticks feed it as the continuation
         # offset) — maintained through admit/chunk/decode for bound rows
@@ -243,7 +280,7 @@ class VariantBackend:
         self.cur_tok, self.cache = self._prefill_chunk(
             self.params, self.cache, self.cur_tok,
             jnp.zeros((B, ck), jnp.int32), zeros, zeros,
-            jnp.zeros((B,), bool))
+            jnp.zeros((B,), bool), jnp.zeros((B,), bool))
 
     # ------------------------------------------------------------- jitted fns
     def _chunk_scan(self, cache, tok, step_fn):
@@ -274,11 +311,18 @@ class VariantBackend:
         return self.model.prefill_chunk(params, cache, tokens, start, n_valid)
 
     def _prefill_chunk_fn(self, params, cache, cur_tok, tokens, start,
-                          n_valid, set_mask):
+                          n_valid, set_mask, feed_mask):
         """One prefill-continuation chunk for every mid-prefill row, plus the
         first greedy token for rows whose prompt completes here
         (``set_mask``) — one executable regardless of which rows are
-        prefilling."""
+        prefilling. ``feed_mask`` rows (plain decodes riding the fused
+        tick) take their input token from the device-side ``cur_tok``
+        instead of the host matrix: bitwise the same value as the host's
+        ``slot_tokens[s][-1]`` feed, but available without a D2H sync —
+        what lets the async tick dispatch a fused step before the previous
+        tick's tokens have been read back."""
+        tokens = tokens.at[:, 0].set(
+            jnp.where(feed_mask, cur_tok.astype(tokens.dtype), tokens[:, 0]))
         logits, cache = self._model_prefill_chunk(params, cache, tokens,
                                                   start, n_valid)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -307,7 +351,10 @@ class VariantBackend:
         prompts: (b, prompt_len), padded to max_batch internally."""
         b = prompts.shape[0]
         pad = self.max_batch - b
-        toks = jnp.asarray(np.pad(prompts, ((0, pad), (0, 0))))
+        # one H2D copy of the unpadded prompts, padded on device — the old
+        # np.pad-then-asarray form materialized the padded matrix on host
+        # first (a second full copy per admission)
+        toks = jnp.pad(jnp.asarray(prompts), ((0, pad), (0, 0)))
         logits, cache = self._prefill(self.params, {"tokens": toks})
         outs = []
         tok = jnp.argmax(logits, axis=-1)
@@ -370,6 +417,7 @@ class VariantBackend:
         return min(r.max_new, self.max_new)
 
     def _bind_slot(self, r: Request, slot: int, tok0: int) -> None:
+        self.slot_gen[slot] += 1
         self.slot_req[slot] = r
         self.slot_remaining[slot] = self._budget(r) - 1
         self.slot_tokens[slot] = [tok0]
@@ -435,6 +483,7 @@ class VariantBackend:
                 gen = [int(t) for t in r.resume_tokens[:-1]]
                 resume_tok = int(r.resume_tokens[-1])
                 seq = np.concatenate([seq, np.asarray(gen, np.int64)])
+            self.slot_gen[slot] += 1
             self.slot_req[slot] = r
             self.slot_remaining[slot] = 0      # set when prefill completes
             self.slot_tokens[slot] = []
@@ -472,19 +521,34 @@ class VariantBackend:
         map pages whose K/V is still being written)."""
 
     def fused_chunk_step(self, now: float) -> List[Request]:
-        """One fused tick (Sarathi-style stall-free batching): every
-        mid-prefill row advances by one prompt chunk while every decoding
-        row advances by exactly one token — a decode step IS a one-token
-        prefill continuation (feed the current token at the current
-        position, take the argmax of its logits) — all in a single jitted
-        call. A resident decode therefore never waits on more than one
-        chunk of someone else's prompt, and a tick never pays a prefill
-        call *and* a decode call. Returns requests finished here."""
+        """One fused tick, sync form: dispatch then commit back-to-back —
+        exactly the legacy fused tick. The async engine calls the two
+        halves a tick apart instead (``dispatch_exec``/``commit_exec``)."""
+        return self.commit_exec(self.dispatch_fused(now), now)
+
+    def dispatch_fused(self, now: float) -> _PendingExec:
+        """Dispatch one fused tick (Sarathi-style stall-free batching):
+        every mid-prefill row advances by one prompt chunk while every
+        decoding row advances by exactly one token — a decode step IS a
+        one-token prefill continuation (feed the current token at the
+        current position, take the argmax of its logits) — all in a single
+        jitted call. A resident decode therefore never waits on more than
+        one chunk of someone else's prompt, and a tick never pays a prefill
+        call *and* a decode call.
+
+        Only value-independent bookkeeping happens here: prefill progress,
+        position mirrors, remaining-budget counts, the prefill-complete
+        transition (including the prefix-index publish — device-stream
+        ordering guarantees the published pages are written before any
+        later-dispatched sharer reads them). Token *values* — which never
+        influence any of the above under greedy decoding — are applied by
+        ``commit_exec`` from the returned pending record."""
         B, ck = self.max_batch, self.prefill_chunk_tokens
         tokens = np.zeros((B, ck), np.int64)
         start = np.zeros((B,), np.int32)
         n_valid = np.zeros((B,), np.int32)
         set_mask = np.zeros((B,), bool)
+        feed_mask = np.zeros((B,), bool)
         for slot, job in self._prefilling.items():
             nv = min(len(job.seq) - job.pos, ck)
             tokens[slot, :nv] = job.seq[job.pos:job.pos + nv]
@@ -495,18 +559,23 @@ class VariantBackend:
             set_mask[slot] = (job.pos + nv >= len(job.seq)
                               and job.resume_tok is None)
         decode_rows = [s for s, r in enumerate(self.slot_req)
-                       if r is not None and s not in self._prefilling]
+                       if r is not None and s not in self._prefilling
+                       and s not in self._uncommitted_done]
         for s in decode_rows:
-            tokens[s, 0] = self.slot_tokens[s][-1]   # == cur_tok[s]
-            start[s] = self.slot_pos[s]
+            feed_mask[s] = True          # device-side cur_tok feed (see
+            start[s] = self.slot_pos[s]  # _prefill_chunk_fn) — no D2H dep
             n_valid[s] = 1
             set_mask[s] = True                       # argmax = next token
+        t_disp = time.perf_counter()
         self.cur_tok, self.cache = self._jit_exec(
             self._prefill_chunk,
             self.params, self.cache, self.cur_tok, jnp.asarray(tokens),
-            jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(set_mask))
-        tok_np = np.asarray(self.cur_tok)
-        finished: List[Request] = []
+            jnp.asarray(start), jnp.asarray(n_valid), jnp.asarray(set_mask),
+            jnp.asarray(feed_mask))
+        # cur_tok is NOT donated: this snapshot stays valid across the next
+        # dispatch even though the donated cache is updated in place
+        pend = _PendingExec(kind="fused", toks=self.cur_tok,
+                            dispatched_at=t_disp, t_dispatch=now)
         resume_sets: List[Tuple[int, int]] = []
         tron = self.tracer.on
         for slot, job in list(self._prefilling.items()):
@@ -526,36 +595,30 @@ class VariantBackend:
                 self.tracer.event(r.rid, ev.PREFILL_COMPLETE, now,
                                   backend=self.name)
             if job.resume_tok is not None:
-                tok0 = job.resume_tok
-                resume_sets.append((slot, tok0))
+                resume_sets.append((slot, job.resume_tok))
+            gen_n = len(job.gen) + 1     # count-based: known at dispatch
+            fin = gen_n >= self._budget(r)
+            if fin:
+                self.slot_remaining[slot] = 0
+                self._uncommitted_done.add(slot)
             else:
-                tok0 = int(tok_np[slot])
-            gen = job.gen + [tok0]
-            if len(gen) >= self._budget(r):
-                self._finish(r, gen, now)
-                finished.append(r)
-                self.slot_req[slot] = None
-                self.slot_tokens[slot] = []
-                self._retire_slot(slot)
-            else:
-                self.slot_remaining[slot] = self._budget(r) - len(gen)
-                self.slot_tokens[slot] = gen
+                self.slot_remaining[slot] = self._budget(r) - gen_n
+            pend.fused_completions.append(
+                (slot, r, self.slot_gen[slot], job.resume_tok,
+                 list(job.gen), fin))
         for s in decode_rows:
             self.slot_pos[s] += 1
-            self.slot_tokens[s].append(int(tok_np[s]))
             self.slot_remaining[s] -= 1
-            if self.slot_remaining[s] <= 0:
-                r = self.slot_req[s]
-                self._finish(r, self.slot_tokens[s], now)
-                finished.append(r)
-                self.slot_req[s] = None
-                self.slot_tokens[s] = []
-                self._retire_slot(s)
+            fin = self.slot_remaining[s] <= 0
+            if fin:
+                self._uncommitted_done.add(s)
+            pend.decode_items.append(
+                (s, self.slot_req[s], self.slot_gen[s], 1, fin))
         if resume_sets:    # resumed rows decode from their preserved token
             self.cur_tok = self.cur_tok.at[
                 jnp.asarray([s for s, _ in resume_sets])].set(
                 jnp.asarray([t for _, t in resume_sets], jnp.int32))
-        return finished
+        return pend
 
     def preempt(self, r: Request, now: float) -> str:
         """Retire ``r`` early (scheduler-selected victim): its slot — and
@@ -573,6 +636,7 @@ class VariantBackend:
         self.slot_req[slot] = None
         self.slot_tokens[slot] = []
         self.slot_remaining[slot] = 0
+        self._uncommitted_done.discard(slot)
         self._retire_slot(slot)
         r.preemptions += 1
         r.resume_tokens = gen
@@ -590,32 +654,114 @@ class VariantBackend:
         return "requeued"
 
     def decode_step_batch(self, now: float) -> List[Request]:
-        """One jitted chunk of decode steps; retire finished slots. Never
+        """One jitted chunk of decode steps, sync form: dispatch then commit
+        back-to-back (the async engine splits them a tick apart). Never
         called with rows mid-prefill — those ticks are fused
         (``fused_chunk_step``); the plain decode path stays the fast,
         bucket-aware one."""
-        assert not self._prefilling, "mid-prefill rows need the fused tick"
         if self.active_slots == 0:
             return []
-        t0 = time.time()
-        toks = self._run_decode_chunk()                  # (chunk, B)
-        if self.slow_factor > 1.0:
-            # injected straggler: effective chunk time scales by slow_factor
-            time.sleep((time.time() - t0) * (self.slow_factor - 1.0))
-        finished = []
+        return self.commit_exec(self.dispatch_decode(now), now)
+
+    def dispatch_decode(self, now: float) -> Optional[_PendingExec]:
+        """Dispatch one decode chunk without waiting for its tokens.
+        Value-independent bookkeeping (positions, remaining counts,
+        count-based completion detection) happens here; the returned
+        pending record carries the un-synced ``(chunk, B)`` token array for
+        ``commit_exec``. Returns None when every bound slot is a
+        finished-but-uncommitted zombie — nothing left to run."""
+        assert not self._prefilling, "mid-prefill rows need the fused tick"
+        items = []
         for slot, r in enumerate(self.slot_req):
-            if r is None:
+            if r is None or slot in self._uncommitted_done:
                 continue
-            take = min(int(self.slot_remaining[slot]), toks.shape[0])
-            self.slot_tokens[slot].extend(int(t) for t in toks[:take, slot])
+            take = min(int(self.slot_remaining[slot]), self.decode_chunk)
+            items.append([slot, r, self.slot_gen[slot], take, False])
+        if not items:
+            return None
+        t_disp = time.perf_counter()
+        toks = self._dispatch_chunk()        # un-synced device (chunk, B)
+        for it in items:
+            slot, take = it[0], it[3]
             self.slot_remaining[slot] -= take
             if self.slot_remaining[slot] <= 0:
+                it[4] = True
+                self._uncommitted_done.add(slot)
+        return _PendingExec(kind="decode", toks=toks, dispatched_at=t_disp,
+                            t_dispatch=now,
+                            decode_items=[tuple(it) for it in items])
+
+    def dispatch_exec(self, now: float) -> Tuple[str, Optional[_PendingExec]]:
+        """Async exec phase: enqueue this tick's jitted work and return
+        (tick kind, pending record) — the record is committed on the NEXT
+        tick, after that tick's own dispatch, so the D2H read and
+        bookkeeping hide behind in-flight device compute."""
+        if self._prefilling:
+            return "fused", self.dispatch_fused(now)
+        pend = self.dispatch_decode(now) if self.active_slots else None
+        return ("decode" if pend is not None else "idle"), pend
+
+    def commit_exec(self, pending: Optional[_PendingExec],
+                    now: float) -> List[Request]:
+        """Apply a dispatched exec's value-dependent bookkeeping: ONE
+        batched D2H read for the whole tick (tokens of every slot arrive in
+        a single ``np.asarray`` — commit lag never multiplies small
+        per-slot transfers), then token appends, completion stamping, and
+        slot retirement. A ``(request identity, slot_gen)`` mismatch means
+        the slot was preempted or rebound inside the dispatch→commit gap;
+        its stale tokens are discarded — greedy decoding regenerates the
+        identical values on resume. Returns requests finished here."""
+        if pending is None:
+            return []
+        if self.tracer.on:
+            t0 = time.perf_counter()
+            toks = np.asarray(pending.toks)
+            t1 = time.perf_counter()
+            self.commit_wait_ms = (t1 - t0) * 1e3
+            self.commit_gap_ms = (t0 - pending.dispatched_at) * 1e3
+        else:
+            toks = np.asarray(pending.toks)
+        if self.slow_factor > 1.0 and pending.kind == "decode":
+            # injected straggler: effective chunk time scales by slow_factor
+            time.sleep((time.perf_counter() - pending.dispatched_at)
+                       * (self.slow_factor - 1.0))
+        finished: List[Request] = []
+        for slot, r, gen_id, resume_tok, gen_before, fin \
+                in pending.fused_completions:
+            if self.slot_req[slot] is not r or self.slot_gen[slot] != gen_id:
+                continue
+            tok0 = resume_tok if resume_tok is not None else int(toks[slot])
+            gen = gen_before + [tok0]
+            if fin:
+                self._finish(r, gen, now)
+                finished.append(r)
+                self._release_slot(slot)
+            else:
+                self.slot_tokens[slot] = gen
+        for slot, r, gen_id, take, fin in pending.decode_items:
+            if self.slot_req[slot] is not r or self.slot_gen[slot] != gen_id:
+                continue
+            if pending.kind == "fused":
+                self.slot_tokens[slot].append(int(toks[slot]))
+            else:
+                self.slot_tokens[slot].extend(
+                    int(t) for t in toks[:take, slot])
+            if fin:
                 self._finish(r, self.slot_tokens[slot], now)
                 finished.append(r)
-                self.slot_req[slot] = None
-                self.slot_tokens[slot] = []
-                self._retire_slot(slot)
+                self._release_slot(slot)
         return finished
+
+    def _release_slot(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self.slot_tokens[slot] = []
+        self._uncommitted_done.discard(slot)
+        self._retire_slot(slot)
+
+    def flush_pending(self, now: float) -> List[Request]:
+        """Commit the in-flight tick, if any (async shutdown/fault path)."""
+        pend, self._pending = self._pending, None
+        return self.commit_exec(pend, now)
 
     def _jit_exec(self, call, *args):
         """Run one exec-phase jitted call. On dispatch-sampled ticks
@@ -635,11 +781,14 @@ class VariantBackend:
         self.exec_split = ((t1 - t0) * 1e3, (t2 - t1) * 1e3)
         return out
 
-    def _run_decode_chunk(self) -> np.ndarray:
+    def _dispatch_chunk(self):
+        """Enqueue one decode chunk; returns the UN-SYNCED device token
+        array (chunk, B) — the chunk outputs are not in the donation set,
+        so the caller may hold them across the next dispatch."""
         self.cur_tok, self.cache, toks = self._jit_exec(
             self._decode_chunk, self.params, self.cache, self.cur_tok)
         self.slot_pos += self.decode_chunk   # device advanced every row
-        return np.asarray(toks)
+        return toks
 
     def _retire_slot(self, slot: int) -> None:
         """Hook called when a slot's request completes (paged backends free
@@ -695,8 +844,9 @@ class VariantBackend:
 
     def drain_slots(self, now: float) -> List[Request]:
         """Run prefill/decode until every in-flight sequence completes
-        (connection draining before retirement — create-then-remove)."""
-        done: List[Request] = []
+        (connection draining before retirement — create-then-remove).
+        Commits any in-flight async tick first, then loops synchronously."""
+        done: List[Request] = list(self.flush_pending(now))
         steps = 0
         max_steps = self.max_new // self.decode_chunk + 2
         if self.chunked:   # fused ticks: 1 decode token while chunks finish
@@ -947,16 +1097,20 @@ class PagedVariantBackend(VariantBackend):
         prompt = job.seq[:len(job.seq) - len(job.gen)]
         self.pool.publish_prefix(slot, prompt)
 
-    def _run_decode_chunk(self) -> np.ndarray:
+    def _dispatch_chunk(self):
+        # bucket on rows that still generate: finished-but-uncommitted
+        # zombies keep decoding harmlessly (their writes clamp into the
+        # slot's own last page, as sync tail chunks always have) but must
+        # not inflate the live-page bound
         live = [self.slot_pos[s] for s, r in enumerate(self.slot_req)
-                if r is not None]
+                if r is not None and s not in self._uncommitted_done]
         need = self.pool.pages_needed(int(max(live)) + self.decode_chunk)
         need = min(need, self.pages_per_slot)
         nb = next(b for b in self.page_buckets if b >= need)
         self.cur_tok, self.cache, toks = self._jit_exec(
             self._decode_chunk_p, self.params, self.cache, self.cur_tok, nb)
         self.slot_pos += self.decode_chunk   # device advanced every row
-        return np.asarray(toks)
+        return toks
 
     def _retire_slot(self, slot: int) -> None:
         """Free the slot's pages and point its table row back at the trash
@@ -995,8 +1149,12 @@ class InProcessServingEngine:
                  clock: Callable[[], float] = time.time,
                  trace: bool = False,
                  obs: Optional[Observability] = None,
-                 profile_dispatch: int = 0):
+                 profile_dispatch: int = 0,
+                 async_tick: bool = False):
         assert mode in ("continuous", "pump"), mode
+        assert not async_tick or mode == "continuous", \
+            "async_tick needs the continuous engine (the pump path is " \
+            "a blocking per-batch loop)"
         assert kv_cache in ("dense", "paged"), kv_cache
         assert kv_cache == "dense" or mode == "continuous", \
             "paged KV backends serve in continuous mode only"
@@ -1028,6 +1186,12 @@ class InProcessServingEngine:
         # split on the TickRecord (0 = off; needs tracing for the records)
         self.profile_dispatch = int(profile_dispatch)
         self._tick_no = 0
+        # async tick loop (DESIGN.md §Async tick loop): each tick dispatches
+        # its exec FIRST, then commits the PREVIOUS tick's — the D2H read
+        # and bookkeeping of tick t hide behind tick t+1's device compute.
+        # Greedy outputs are bitwise identical to the sync default; only
+        # completion/retirement bookkeeping lags by exactly one tick.
+        self.async_tick = bool(async_tick)
         assert mode == "continuous" or (
             not self.sched.chunked and preemption == "none"), \
             "chunked scheduling/preemption need the continuous engine"
@@ -1175,6 +1339,16 @@ class InProcessServingEngine:
     def in_flight(self) -> int:
         return sum(b.active_slots for b in self.backends.values())
 
+    def flush_pending(self, now: float) -> int:
+        """Commit every backend's in-flight async tick (no-op in sync mode
+        or when nothing is pending). ``drain``/``drain_slots`` flush on
+        their own; faults and external shutdown paths call this so
+        bookkeeping never trails the last dispatch. Returns #completed."""
+        n0 = len(self.done)
+        for b in self.backends.values():
+            self.done.extend(b.flush_pending(now))
+        return len(self.done) - n0
+
     def kv_pool_stats(self) -> Optional[Dict]:
         """Aggregate page-pool usage across paged backends (None when the
         engine runs dense KV caches) — the memory-true capacity gauge that
@@ -1240,6 +1414,10 @@ class InProcessServingEngine:
         and queued requests are re-submitted to survivors — retry semantics;
         latency keeps the original arrival stamp, so the failure's SLO cost
         is measured, not hidden."""
+        # commit in-flight async ticks first: a request whose last tokens
+        # are already committed on a SURVIVOR must not be re-submitted, and
+        # the killed replicas' zombies re-enter the queue as full retries
+        self.flush_pending(now)
         killed = self.fabric.crash_node(now, node_id)
         orphans: List[Tuple[str, Request]] = []
         for rep in killed:
@@ -1355,7 +1533,11 @@ class InProcessServingEngine:
             n_preempted = n_admitted = 0
             t0 = time.perf_counter() if tron else 0.0
             if self.preemption != "none" and q:
-                resident = [r for r in b.slot_req if r is not None]
+                # finished-but-uncommitted zombie slots are not preemptable:
+                # their request is already complete by count, only its token
+                # read-back lags (async commit lag)
+                resident = [r for s, r in enumerate(b.slot_req)
+                            if r is not None and s not in b._uncommitted_done]
                 for v in self.sched.select_victims(resident, list(q), now,
                                                    len(b.free_slots)):
                     n_preempted += 1
@@ -1384,16 +1566,32 @@ class InProcessServingEngine:
             t2 = time.perf_counter() if tron else 0.0
             if fence:
                 b._fence_exec, b.exec_split = True, None
-            if b._prefilling:     # fused tick: prefill chunks + 1-token decodes
+            nan = float("nan")
+            commit_ms = gap_ms = wait_ms = hidden_ms = nan
+            if self.async_tick:
+                # dispatch tick t's exec, THEN commit tick t-1's: the read
+                # + bookkeeping of t-1 hide behind t's device compute
+                pend_prev, b._pending = b._pending, None
+                kind, b._pending = b.dispatch_exec(now)
+                t3 = time.perf_counter() if tron else 0.0
+                self.done.extend(b.commit_exec(pend_prev, now))
+                if tron and pend_prev is not None:
+                    commit_ms = (time.perf_counter() - t3) * 1e3
+                    gap_ms = b.commit_gap_ms
+                    wait_ms = b.commit_wait_ms
+                    # host work done this tick while t-1 was still in
+                    # flight on the device (preempt + admit + dispatch)
+                    hidden_ms = (t3 - t0) * 1e3
+            elif b._prefilling:   # fused tick: prefill chunks + 1-tok decodes
                 kind = "fused"
                 self.done.extend(b.fused_chunk_step(now))
+                t3 = time.perf_counter() if tron else 0.0
             else:                 # pure decode: the fast bucket-aware chunk
                 kind = "decode" if b.active_slots else "idle"
                 self.done.extend(b.decode_step_batch(now))
+                t3 = time.perf_counter() if tron else 0.0
             if tron:
-                t3 = time.perf_counter()
                 exec_ms = (t3 - t2) * 1e3
-                nan = float("nan")
                 disp_ms = dev_ms = host_ms = nan
                 if fence:
                     b._fence_exec = False
@@ -1410,7 +1608,9 @@ class InProcessServingEngine:
                     admitted=n_admitted, preempted=n_preempted,
                     completed=len(self.done) - bdone, pool_occupancy=occ,
                     dispatch_ms=disp_ms, device_ms=dev_ms,
-                    host_sync_ms=host_ms))
+                    host_sync_ms=host_ms, commit_ms=commit_ms,
+                    commit_gap_ms=gap_ms, commit_wait_ms=wait_ms,
+                    hidden_host_ms=hidden_ms))
         return len(self.done) - done_before
 
     def drain(self, now: float, max_ticks: int = 10_000) -> int:
