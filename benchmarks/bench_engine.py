@@ -15,6 +15,12 @@ Two studies against the real-execution engine:
    machine-readable ``reports/BENCH_engine.json`` (a CI artifact) and are
    rendered into EXPERIMENTS.md by ``repro.analysis.report``.
 
+Also home to the standalone ``async_overlap`` (sync vs two-phase
+dispatch/commit tick loop) and ``spec_decode`` (draft/verify on the
+variant ladder: parity + acceptance/tokens-per-step gates under a virtual
+clock) studies, which merge their payloads into the same
+``reports/BENCH_engine.json``.
+
 Wall-clock real execution (CPU, smoke-scale variant) — a few seconds per
 cell.
 
@@ -74,6 +80,23 @@ AS_MAX_NEW = 48
 AS_BATCH = 8
 AS_STEPS = 120
 AS_REPS = 3             # alternating sync/async repetitions (drift control)
+
+# speculative-decoding study (DESIGN.md §Speculative decoding): a paged
+# engine under a virtual clock, so "step latency" is tick COUNT — each
+# tick is one verifier execution (decode_chunk=1 on the target arm, one
+# draft+verify round on the speculative arm) and the ratio is exact, not
+# wall-clock noise. Two drafters: "correlated" shares the verifier's
+# weights (acceptance must saturate — the gated arm), "ladder" is a
+# genuinely smaller variant one rung down (report-only: acceptance there
+# measures how much the tiny random-weight ladder actually agrees).
+SP_PROMPT = 16
+SP_MAX_NEW = 32
+SP_BATCH = 4
+SP_K = 4
+SP_N = 8
+SP_PAGE = 8
+SP_ACCEPT_GATE = 0.9    # correlated drafter: acceptance must saturate
+SP_TPS_GATE = 1.5       # accepted tokens per verifier step (ISSUE gate)
 BENCH_JSON = os.path.join("reports", "BENCH_engine.json")
 
 
@@ -764,6 +787,11 @@ def async_overlap() -> Tuple[List[Tuple[str, float, str]], Dict]:
     payload["sync"]["admit_ms_mean"] = sync_attr["admit_ms_mean"]
     payload["async"].update(
         {k: v for k, v in async_attr.items() if k != "dispatch_floor"})
+    # admit-phase cost: async ticks fall back to chunked admission, so a
+    # joiner costs one pipelined chunk dispatch instead of a blocking
+    # monolithic prefill inside the tick
+    payload["admit_ratio"] = (async_attr["admit_ms_mean"]
+                              / max(sync_attr["admit_ms_mean"], 1e-9))
 
     # exposed off-device fraction per mode (the dispatch-floor table's
     # async column): sync exposes dispatch + host-sync every tick; async
@@ -805,8 +833,130 @@ def async_overlap() -> Tuple[List[Tuple[str, float, str]], Dict]:
         ("async_parity", payload["parity"]["n_requests"] * 1e6,
          f"bitwise-equal outputs on {payload['parity']['n_requests']} "
          f"staggered chunked+paged requests"),
+        ("async_admit", async_attr["admit_ms_mean"] * 1e3,
+         f"chunked-admission admit={async_attr['admit_ms_mean']:.3f}ms vs "
+         f"sync monolithic {sync_attr['admit_ms_mean']:.3f}ms "
+         f"(x{payload['admit_ratio']:.2f})"),
     ]
     return rows, payload
+
+
+def _spec_variants() -> Dict:
+    """3-layer verifier + two drafters: its weight-sharing twin and a
+    2-layer ladder rung (same init seed, so the shared-depth weights
+    coincide — the realistic correlated-but-not-identical case)."""
+    from repro.configs import get_config, smoke_variant
+    base = smoke_variant(get_config("tinyllama-1.1b")).replace(
+        d_model=64, d_ff=128, vocab_size=VOCAB)
+    target = base.replace(num_layers=3, name="bench-spec-3L")
+    return {"bench-spec-3L": (target, 75.0),
+            "bench-spec-twin": (target.replace(name="bench-spec-twin"), 60.0),
+            "bench-spec-2L": (base.replace(num_layers=2,
+                                           name="bench-spec-2L"), 70.0)}
+
+
+def _spec_run(speculative) -> Tuple[Dict, int, Dict]:
+    """Serve SP_N requests to completion; returns (outputs by rid, tick
+    count, engine) under the virtual clock."""
+    from repro.serving.api import Request
+    from repro.serving.engine import InProcessServingEngine
+    kw = dict(speculative=speculative, spec_k=SP_K) if speculative else {}
+    eng = InProcessServingEngine(
+        _spec_variants(), max_batch=SP_BATCH, prompt_len=SP_PROMPT,
+        max_new=SP_MAX_NEW, decode_chunk=1, queue_cap=100_000,
+        kv_cache="paged", kv_page_size=SP_PAGE, clock=lambda: 0.0, **kw)
+    eng.apply_allocation(0.0, {"bench-spec-3L": 1})
+    rng = np.random.default_rng(17)
+    for i in range(SP_N):
+        eng.submit(Request(rid=i, tokens=rng.integers(0, VOCAB, SP_PROMPT),
+                           max_new=SP_MAX_NEW, arrival=0.0), None)
+    ticks = 0
+    while len(eng.done) < SP_N:
+        eng.step(0.0)
+        ticks += 1
+        assert ticks < 10_000, "spec bench failed to converge"
+    return {r.rid: np.asarray(r.output) for r in eng.done}, ticks, eng
+
+
+def _spec_leak_check(eng) -> Dict:
+    """Pool balance after drain: every rollback returned its pages — on
+    the verifier pool AND the hidden drafter mirror's pool."""
+    pools = {"verifier": eng.backends["bench-spec-3L"].pool}
+    pair = eng.backends["bench-spec-3L"]._spec_pair
+    if pair is not None:
+        pools["drafter"] = pair.d.pool
+    out = {}
+    for name, pool in pools.items():
+        assert pool.used_pages == 0, \
+            f"{name} pool leaked {pool.used_pages} pages after drain"
+        out[f"{name}_used_pages"] = int(pool.used_pages)
+        out[f"{name}_retained_pages"] = int(pool.retained_pages)
+    return out
+
+
+def spec_decode() -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """The §Speculative decoding study: draft-k/verify-once on the variant
+    ladder vs target-only decoding, paged KV, virtual clock.
+
+    **Gates** (run.py exits nonzero on assert): the correlated arm's
+    outputs are bitwise identical to target-only, its acceptance rate is
+    >= SP_ACCEPT_GATE, mean accepted tokens per verifier step is
+    >= SP_TPS_GATE, and no pool page leaks after drain (verifier or
+    drafter mirror). The ladder arm (2L drafter under the 3L verifier)
+    reports the same stats ungated — parity still must hold there, since
+    greedy acceptance guarantees it for ANY drafter."""
+    ref, ref_ticks, _ = _spec_run(None)
+
+    payload: Dict = {"config": {
+        "prompt_len": SP_PROMPT, "max_new": SP_MAX_NEW,
+        "max_batch": SP_BATCH, "k": SP_K, "n_requests": SP_N,
+        "kv": "paged", "page_size": SP_PAGE,
+        "accept_gate": SP_ACCEPT_GATE, "tps_gate": SP_TPS_GATE},
+        "target": {"ticks": ref_ticks}}
+    rows: List[Tuple[str, float, str]] = []
+    for arm, drafter in (("correlated", "bench-spec-twin"),
+                         ("ladder", "bench-spec-2L")):
+        out, ticks, eng = _spec_run(f"{drafter}:bench-spec-3L")
+        for rid in ref:                       # parity holds for ANY drafter
+            assert np.array_equal(ref[rid], out[rid]), \
+                f"{arm} spec output diverged from target-only (rid={rid})"
+        pair = eng.backends["bench-spec-3L"]._spec_pair
+        stats = pair.acceptance_stats()
+        cell = dict(stats)
+        cell["ticks"] = ticks
+        cell["tick_ratio"] = ticks / max(ref_ticks, 1)
+        cell["parity"] = True
+        cell["leaks"] = _spec_leak_check(eng)
+        payload[arm] = cell
+        rows.append((
+            f"spec_{arm}_tps", stats["tokens_per_step"] * 1e6,
+            f"accept={stats['accept_rate']:.3f} "
+            f"tokens/step={stats['tokens_per_step']:.2f} "
+            f"ticks={ticks} vs target {ref_ticks} "
+            f"(x{cell['tick_ratio']:.2f})"))
+    acc = payload["correlated"]["accept_rate"]
+    tps = payload["correlated"]["tokens_per_step"]
+    assert acc >= SP_ACCEPT_GATE, \
+        f"correlated acceptance {acc:.3f} under gate {SP_ACCEPT_GATE}"
+    assert tps >= SP_TPS_GATE, \
+        f"correlated tokens/verifier-step {tps:.2f} under gate {SP_TPS_GATE}"
+    return rows, payload
+
+
+def run_spec_decode() -> List[Tuple[str, float, str]]:
+    """Standalone entry (``--only spec_decode``): merges its payload into
+    BENCH_engine.json under ``"spec_decode"`` (read-modify-write — the
+    ``engine_serving`` study owns the rest of the file)."""
+    rows, payload = spec_decode()
+    data: Dict = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            data = json.load(f)
+    data["spec_decode"] = payload
+    os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return rows
 
 
 def run_async_overlap() -> List[Tuple[str, float, str]]:

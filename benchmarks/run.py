@@ -13,6 +13,10 @@ studies). Prints ``name,us_per_call,derived`` CSV rows per the repo contract.
   async_overlap         sync vs two-phase dispatch/commit tick loop: step-time
                         ratio gate + greedy parity; merges into
                         BENCH_engine.json (DESIGN.md §Async tick loop)
+  spec_decode           speculative decoding on the variant ladder: parity +
+                        acceptance/tokens-per-verifier-step gates, virtual-
+                        clock tick ratio; merges into BENCH_engine.json
+                        (DESIGN.md §Speculative decoding)
   scheduler             FIFO vs EDF vs chunked+EDF on bimodal prompt lengths;
                         writes reports/BENCH_scheduler.json (§Scheduling)
   cluster_fabric        replica scaling, routing policy, failure recovery
@@ -45,6 +49,7 @@ ALL = {
     "fig7_beta_sweep": bench_figures.fig7_beta_sweep,
     "engine_serving": bench_engine.run,
     "async_overlap": bench_engine.run_async_overlap,
+    "spec_decode": bench_engine.run_spec_decode,
     "scheduler": bench_scheduler.run,
     "cluster_fabric": bench_cluster.run,
     "profiling": bench_profiling.run,

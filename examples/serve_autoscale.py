@@ -109,6 +109,18 @@ def main():
                          "bookkeeping behind device compute (DESIGN.md "
                          "§Async tick loop; greedy outputs are bitwise "
                          "identical to the sync default)")
+    ap.add_argument("--speculative", default=None,
+                    metavar="DRAFTER:VERIFIER",
+                    help="speculative decoding on the variant ladder "
+                         "(e.g. tiny-2L:tiny-6L): the drafter proposes "
+                         "--spec-k tokens per round and the verifier "
+                         "scores them in one batched step, committing the "
+                         "longest agreeing prefix + one bonus token — "
+                         "greedy outputs stay bitwise identical to "
+                         "verifier-only decoding (DESIGN.md §Speculative "
+                         "decoding)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft length per speculative round")
     args = ap.parse_args()
 
     variants = build_ladder()
@@ -119,6 +131,8 @@ def main():
                      decode_chunk=4, scheduler=args.scheduler,
                      preemption=args.preemption, clock=ElapsedClock(),
                      trace=args.trace, async_tick=args.async_tick)
+    if args.speculative:
+        engine_kw.update(speculative=args.speculative, spec_k=args.spec_k)
     # online tier: rolling windows feed the burn-rate monitor; the flight
     # recorder rides the tracer and dumps on alerts/faults
     flight = None

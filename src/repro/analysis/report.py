@@ -293,6 +293,47 @@ def observability_table(bench_path: str) -> str:
     return "\n".join(out)
 
 
+def spec_decode_table(bench_path: str) -> str:
+    """§Speculative decoding: per-drafter-arm acceptance, accepted tokens
+    per verifier step, and the virtual-clock tick count against target-only
+    decoding — the ``spec_decode`` cell of BENCH_engine.json. Both arms are
+    parity-gated (greedy acceptance makes speculative output bitwise equal
+    to the verifier's own stream for ANY drafter); only the correlated
+    arm's acceptance/speedup is a hard gate."""
+    out = ["| drafter arm | accept rate | tokens/verifier step | "
+           "ticks (vs target-only) | parity | pages leaked |",
+           "|---|---|---|---|---|---|"]
+    if not os.path.exists(bench_path):
+        return "\n".join(out)
+    try:
+        with open(bench_path) as f:
+            data = json.load(f)
+    except (ValueError, json.JSONDecodeError):
+        return "\n".join(out)
+    c = data.get("spec_decode")
+    if not c:
+        return "\n".join(out)
+    tgt = c.get("target", {}).get("ticks", 0)
+    cfg = c.get("config", {})
+    for arm in ("correlated", "ladder"):
+        cell = c.get(arm)
+        if not cell:
+            continue
+        leaks = cell.get("leaks", {})
+        leaked = (leaks.get("verifier_used_pages", 0)
+                  + leaks.get("drafter_used_pages", 0))
+        out.append(
+            f"| {arm} (k={cfg.get('k', '—')}) | "
+            f"{cell.get('accept_rate', float('nan')):.3f} | "
+            f"**{cell.get('tokens_per_step', float('nan')):.2f}** "
+            f"(gate ≥{cfg.get('tps_gate', 1.5)}"
+            f"{' on this arm' if arm == 'correlated' else ', ungated'}) | "
+            f"{cell.get('ticks', 0)} vs {tgt} "
+            f"(×{cell.get('tick_ratio', float('nan')):.2f}) | "
+            f"{'bitwise' if cell.get('parity') else 'FAIL'} | {leaked} |")
+    return "\n".join(out)
+
+
 def dispatch_floor_table(bench_path: str) -> str:
     """§Dispatch floor: per-tick-type host/device split from the sampled
     (fenced) ticks — the ``dispatch_floor`` cell of BENCH_engine.json. The
@@ -436,6 +477,8 @@ def main():
     inject(args.md, "OBS_AUDIT_TABLE", audit_table(args.audit))
     inject(args.md, "DISPATCH_FLOOR_TABLE",
            dispatch_floor_table(args.bench_engine))
+    inject(args.md, "SPEC_DECODE_TABLE",
+           spec_decode_table(args.bench_engine))
     n_ok = sum(1 for d in rows if not d.get("skipped") and "error" not in d)
     n_skip = sum(1 for d in rows if d.get("skipped"))
     n_err = sum(1 for d in rows if "error" in d)

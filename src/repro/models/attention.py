@@ -272,11 +272,20 @@ class PagedKVCache:
     a fully-matched boundary block that the request *will* write into is
     copied into a fresh page (copy-on-write, resolved at admission — after
     admission a request only ever appends at ``pos // page_size``, so shared
-    pages are never written). ``free`` decrements refcounts and returns a
-    page to the free list — invalidating its index entry — only when the
-    last holder lets go. Index entries are published by the owner once the
-    block's K/V is fully written (``publish_prefix``), never before, so a
-    sharer can never gather unwritten pages.
+    pages are never written). ``free`` decrements refcounts; when the last
+    holder lets go a *published* page parks on the LRU **retained tier**
+    with its index entry intact (so identical prompts keep hitting across
+    quiet gaps) while unpublished pages return to the free list. Retained
+    pages are reclaimed — index entries invalidated — only when ``alloc``
+    actually needs them, oldest first. Index entries are published by the
+    owner once the block's K/V is fully written (``publish_prefix``),
+    never before, so a sharer can never gather unwritten pages.
+
+    **Speculative rollback** (DESIGN.md §Speculative decoding):
+    ``rollback(slot, new_len)`` validates a position rewind that discards
+    rejected draft tokens' KV — no pages move (slots hold their budget
+    all-or-nothing), it asserts the rewind stays inside the slot's budget
+    and never rejects positions covered by a published prefix block.
 
     Invariants (property-tested in ``tests/test_kernels_paged.py`` and the
     stateful harness in ``tests/test_paged_prefix.py``): every usable page
@@ -308,6 +317,12 @@ class PagedKVCache:
         self._ref: Dict[int, int] = {}             # page -> slots mapping it
         self._index: Dict[bytes, int] = {}         # block-chain digest -> page
         self._page_key: Dict[int, bytes] = {}      # published page -> digest
+        # retained-prefix tier (DESIGN.md §Prefix sharing): refcount-0
+        # *published* pages park here LRU-ordered (oldest first) with their
+        # index entries intact, so a later identical prompt still hits even
+        # after every sharer retired. Reclaimed (index invalidated) only
+        # when alloc actually needs the pages.
+        self._retained: List[int] = []
         # sharing telemetry (surfaced via kv_pool_stats()/summarize and the
         # prefix_sharing bench): lookups/hits at admission, fresh pages
         # actually allocated vs the worst-case budget callers reserved
@@ -322,11 +337,19 @@ class PagedKVCache:
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages alloc can satisfy a fresh request from: the free list plus
+        the retained tier (retained pages are reclaimed on demand)."""
+        return len(self._free) + len(self._retained)
 
     @property
     def used_pages(self) -> int:
-        return self.usable_pages - len(self._free)
+        """Pages mapped by live slots (excludes free and retained)."""
+        return self.usable_pages - self.free_pages
+
+    @property
+    def retained_pages(self) -> int:
+        """Refcount-0 prefix pages kept live for future hits."""
+        return len(self._retained)
 
     @property
     def shared_pages(self) -> int:
@@ -346,28 +369,66 @@ class PagedKVCache:
         return -(-max(tokens, 0) // self.page_size)
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.free_pages
 
-    def alloc(self, slot: int, n: int,
-              shared: Sequence[int] = ()) -> Optional[List[int]]:
+    def _reclaim(self, n: int, keep: Sequence[int] = ()) -> int:
+        """Evict up to ``n`` retained pages (LRU: oldest first) back to the
+        free list, invalidating their index entries. Pages in ``keep`` (about
+        to be revived as shared references by the caller) are skipped.
+        Returns the number actually reclaimed."""
+        got = 0
+        survivors = []
+        for pg in self._retained:
+            if got < n and pg not in keep:
+                key = self._page_key.pop(pg, None)
+                if key is not None:
+                    del self._index[key]
+                self._free.append(pg)
+                got += 1
+            else:
+                survivors.append(pg)
+        self._retained = survivors
+        if got:
+            self.metrics.inc("kv.retained_reclaimed", got)
+        return got
+
+    def alloc(self, slot: int, n: int, shared: Sequence[int] = (),
+              protect: Sequence[int] = ()) -> Optional[List[int]]:
         """Give ``slot`` ``n`` fresh pages plus read-only references to the
-        ``shared`` pages (their refcount is bumped); None if the free list
-        can't satisfy the whole fresh request (all-or-nothing — a partial
-        grant would admit a sequence the pool cannot finish). Returns the
-        fresh pages only; the slot's full positional mapping is
-        ``list(shared) + returned``."""
+        ``shared`` pages (their refcount is bumped; a retained page is
+        revived — pulled off the LRU list with its index entry intact);
+        None if the free list plus reclaimable retained pages can't satisfy
+        the whole fresh request (all-or-nothing — a partial grant would
+        admit a sequence the pool cannot finish). ``protect`` pages (the
+        admission plan's CoW source, which the caller is about to *read*
+        but not map) are exempt from retained-tier reclaim for this call —
+        without it a refcount-0 CoW source could be reclaimed into this
+        very allocation's fresh set and copied after its contents died.
+        Returns the fresh pages only; the slot's full positional mapping
+        is ``list(shared) + returned``."""
         if slot in self._owned:
             raise ValueError(f"slot {slot} already owns pages (double alloc)")
-        for pg in shared:                          # validate before mutating
-            if pg == self.TRASH_PAGE or pg not in self._ref:
+        for pg in (*shared, *protect):             # validate before mutating
+            if pg == self.TRASH_PAGE or (pg not in self._ref
+                                         and pg not in self._retained):
                 raise ValueError(f"cannot share dead page {pg}")
+        keep = set(shared) | set(protect)
         if n > len(self._free):
-            return None
+            need = n - len(self._free)
+            reclaimable = sum(1 for pg in self._retained if pg not in keep)
+            if reclaimable < need:                 # check before evicting:
+                return None                        # a refused alloc must not
+            self._reclaim(need, keep=keep)         # cost any retained entry
         fresh = [self._free.pop() for _ in range(n)]
         for pg in fresh:
             self._ref[pg] = 1
         for pg in shared:
-            self._ref[pg] += 1
+            if pg in self._ref:
+                self._ref[pg] += 1
+            else:                                  # revive a retained page
+                self._retained.remove(pg)
+                self._ref[pg] = 1
+                self.metrics.inc("kv.retained_revived")
         self.fresh_pages_allocated += n
         self.shared_page_maps += len(shared)
         self.metrics.inc("kv.pages_allocated", n)
@@ -377,12 +438,14 @@ class PagedKVCache:
         return list(fresh)
 
     def free(self, slot: int) -> List[int]:
-        """Drop ``slot``'s page references. Each page returns to the free
-        list — and its prefix-index entry is invalidated — only when its
-        refcount hits zero; pages still shared by other slots stay live.
-        Returns the pages actually released. Freeing a never-admitted slot
-        is an error (it means the caller lost track of the slot lifecycle —
-        the bug class the poisoned-page tests guard against)."""
+        """Drop ``slot``'s page references. When a page's refcount hits
+        zero it either parks on the retained tier (published prefix pages:
+        index entry kept so future identical prompts still hit) or returns
+        to the free list (unpublished pages: index entry never existed);
+        pages still shared by other slots stay live. Returns the pages
+        whose refcount actually dropped to zero. Freeing a never-admitted
+        slot is an error (it means the caller lost track of the slot
+        lifecycle — the bug class the poisoned-page tests guard against)."""
         if slot not in self._owned:
             raise ValueError(f"slot {slot} owns no pages "
                              f"(double free or never admitted)")
@@ -393,12 +456,44 @@ class PagedKVCache:
             self._ref[pg] -= 1
             if self._ref[pg] == 0:
                 del self._ref[pg]
-                key = self._page_key.pop(pg, None)
-                if key is not None:
-                    del self._index[key]
-                self._free.append(pg)
+                if pg in self._page_key:           # published: retain (MRU
+                    self._retained.append(pg)      # at the tail)
+                    self.metrics.inc("kv.pages_retained")
+                else:
+                    self._free.append(pg)
                 released.append(pg)
         return released
+
+    def rollback(self, slot: int, new_len: int) -> None:
+        """Discard ``slot``'s KV tail beyond ``new_len`` tokens — the
+        speculative-decoding reject path (DESIGN.md §Speculative decoding).
+
+        Pages are slot-granular and all-or-nothing here: a slot keeps its
+        full page budget for its whole residency, so rewinding the write
+        position never frees a page — in particular a CoW page shared from
+        this slot can never be yanked from under a sharer by a rollback.
+        The device-side masks (``paged_decode_attention`` lengths,
+        ``paged_chunk_prefill_attention`` positions) already ignore slots
+        beyond ``pos``, so the host side only has to *validate* the rewind:
+
+        * the slot is live and ``new_len`` fits its page budget;
+        * no published prefix-index entry covers a rejected position — the
+          index only ever covers fully-written prompt blocks published at
+          prefill completion, and drafts append strictly after the prompt,
+          so a violation means the engine rolled back into committed state.
+        """
+        pages = self._owned.get(slot)
+        if pages is None:
+            raise ValueError(f"rollback of slot {slot} that owns no pages")
+        if new_len < 0 or self.pages_needed(new_len) > len(pages):
+            raise ValueError(f"rollback of slot {slot} to {new_len} tokens "
+                             f"outside its {len(pages)}-page budget")
+        for i, pg in enumerate(pages):
+            if pg in self._page_key and (i + 1) * self.page_size > new_len:
+                raise ValueError(
+                    f"rollback of slot {slot} to {new_len} would reject "
+                    f"positions covered by published block {i} (page {pg})")
+        self.metrics.inc("kv.rollbacks")
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, []))
@@ -488,16 +583,27 @@ class PagedKVCache:
         for p in mapped:
             counts[p] = counts.get(p, 0) + 1
         assert counts == self._ref
-        # free list and live pages partition the usable pool; no duplicates
+        # free list, live pages, and the retained tier partition the usable
+        # pool; no duplicates anywhere
         assert len(self._free) == len(set(self._free))
+        assert len(self._retained) == len(set(self._retained))
         assert self.TRASH_PAGE not in self._free
         assert self.TRASH_PAGE not in self._ref
+        assert self.TRASH_PAGE not in self._retained
         live = set(self._ref)
+        retained = set(self._retained)
         assert not (live & set(self._free))
-        assert len(live) + len(self._free) == self.usable_pages
-        # the prefix index only ever points at live pages, bidirectionally
+        assert not (retained & set(self._free))
+        assert not (retained & live)
+        assert len(live) + len(self._free) + len(self._retained) \
+            == self.usable_pages
+        # every retained page is published (that's why it was retained)
+        for pg in self._retained:
+            assert pg in self._page_key
+        # the prefix index only ever points at live or retained pages,
+        # bidirectionally
         for key, pg in self._index.items():
-            assert pg in live
+            assert pg in live or pg in retained
             assert self._page_key.get(pg) == key
         assert len(self._page_key) == len(self._index)
 

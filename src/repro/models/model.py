@@ -416,6 +416,85 @@ class LM:
         logits = unembed(cfg, params["embed"], x[jnp.arange(B), last][:, None])
         return (logits + jnp.asarray(self._vmask, logits.dtype))[:, 0]
 
+    def _chunk_trunk(self, params: Dict, cache: Dict, tokens: jax.Array,
+                     start: jax.Array, n_valid: jax.Array, *, paged: bool
+                     ) -> Tuple[jax.Array, Dict]:
+        """Shared transformer trunk for chunked prefill continuation and
+        multi-token verification: embed the (B, ck) chunk at per-row
+        absolute ``start`` offsets, run every layer writing chunk K/V into
+        the dense cache (``paged=False``) or the row's block-table pages
+        (``paged=True``), and return (pre-final-norm activations (B, ck, D),
+        new cache with ``pos`` advanced to ``start + n_valid`` on active
+        rows). Rows with ``n_valid == 0`` are inert: no writes, no advance.
+        """
+        cfg = self.cfg
+        assert self.supports_chunked_prefill(), \
+            f"chunked prefill unsupported for config {cfg.name!r}"
+        dt = self.compute_dtype
+        x = embed(cfg, params["embed"], tokens, dt)
+        if cfg.rope_theta <= 0:
+            positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
+            x = x + self._sinusoid_pe(positions).astype(dt)
+
+        if paged:
+            pt = cache["pt"]
+
+            def body(carry, inp):
+                lp, kp_l, vp_l = inp
+                x_in = carry
+                h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+                a, kp_l, vp_l = attn.paged_chunk_prefill_attention(
+                    cfg, lp["attn"], h, kp_l, vp_l, pt, start, n_valid)
+                x_new = x_in + a
+                h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+                else:
+                    y = apply_mlp(cfg, lp["ffn"], h2)
+                return x_new + y, {"kp": kp_l, "vp": vp_l}
+
+            if not cfg.scan_layers:
+                outs = []
+                for i in range(cfg.num_layers):
+                    x, out = body(x, (_layer_slice(params["layers"], i),
+                                      cache["kp"][i], cache["vp"][i]))
+                    outs.append(out)
+                new_caches = _stack_layers(outs)
+            else:
+                x, new_caches = jax.lax.scan(
+                    body, x, (params["layers"], cache["kp"], cache["vp"]))
+        else:
+            def body(carry, inp):
+                lp, lc = inp
+                x_in = carry
+                h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
+                a, kc, vc = attn.chunk_prefill_attention(
+                    cfg, lp["attn"], h, lc["k"], lc["v"], start, n_valid)
+                x_new = x_in + a
+                h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
+                else:
+                    y = apply_mlp(cfg, lp["ffn"], h2)
+                return x_new + y, {"k": kc, "v": vc}
+
+            layer_caches = {k: cache[k] for k in ("k", "v")}
+            if not cfg.scan_layers:
+                outs = []
+                for i in range(cfg.num_layers):
+                    x, out = body(x, (_layer_slice(params["layers"], i),
+                                      _layer_slice(layer_caches, i)))
+                    outs.append(out)
+                new_caches = _stack_layers(outs)
+            else:
+                x, new_caches = jax.lax.scan(body, x,
+                                             (params["layers"], layer_caches))
+        new_cache = dict(cache)
+        new_cache.update(new_caches)
+        new_cache["pos"] = jnp.where(n_valid > 0, start + n_valid,
+                                     cache["pos"])
+        return x, new_cache
+
     def prefill_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
                       start: jax.Array, n_valid: jax.Array
                       ) -> Tuple[jax.Array, Dict]:
@@ -433,46 +512,9 @@ class LM:
         Returns (logits at each row's last valid token (B, V), new cache);
         ``cache["pos"]`` advances to ``start + n_valid`` on active rows.
         """
-        cfg = self.cfg
-        assert self.supports_chunked_prefill(), \
-            f"chunked prefill unsupported for config {cfg.name!r}"
-        dt = self.compute_dtype
-        x = embed(cfg, params["embed"], tokens, dt)
-        if cfg.rope_theta <= 0:
-            positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
-            x = x + self._sinusoid_pe(positions).astype(dt)
-
-        def body(carry, inp):
-            lp, lc = inp
-            x_in = carry
-            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
-            a, kc, vc = attn.chunk_prefill_attention(
-                cfg, lp["attn"], h, lc["k"], lc["v"], start, n_valid)
-            x_new = x_in + a
-            h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
-            if cfg.family == "moe":
-                y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
-            else:
-                y = apply_mlp(cfg, lp["ffn"], h2)
-            return x_new + y, {"k": kc, "v": vc}
-
-        layer_caches = {k: cache[k] for k in ("k", "v")}
-        if not cfg.scan_layers:
-            outs = []
-            for i in range(cfg.num_layers):
-                x, out = body(x, (_layer_slice(params["layers"], i),
-                                  _layer_slice(layer_caches, i)))
-                outs.append(out)
-            new_caches = _stack_layers(outs)
-        else:
-            x, new_caches = jax.lax.scan(body, x,
-                                         (params["layers"], layer_caches))
-        logits = self._finish_chunk(x, params, n_valid)
-        new_cache = dict(cache)
-        new_cache.update(new_caches)
-        new_cache["pos"] = jnp.where(n_valid > 0, start + n_valid,
-                                     cache["pos"])
-        return logits, new_cache
+        x, new_cache = self._chunk_trunk(params, cache, tokens, start,
+                                         n_valid, paged=False)
+        return self._finish_chunk(x, params, n_valid), new_cache
 
     def prefill_chunk_paged(self, params: Dict, cache: Dict,
                             tokens: jax.Array, start: jax.Array,
@@ -481,45 +523,46 @@ class LM:
         row's block-table pages (the pages were allocated at admission);
         attention masks to the written prefix per query. Same contract and
         return shape as the dense form."""
+        x, new_cache = self._chunk_trunk(params, cache, tokens, start,
+                                         n_valid, paged=True)
+        return self._finish_chunk(x, params, n_valid), new_cache
+
+    def _verify_finish(self, x: jax.Array, params: Dict) -> jax.Array:
+        """Final norm + unembed at EVERY chunk position -> greedy argmax
+        (B, ck) int32. Verification needs the target model's prediction at
+        each proposed position, not just the row's last valid one."""
         cfg = self.cfg
-        assert self.supports_chunked_prefill(), cfg.name
-        dt = self.compute_dtype
-        pt = cache["pt"]
-        x = embed(cfg, params["embed"], tokens, dt)
-        if cfg.rope_theta <= 0:
-            positions = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
-            x = x + self._sinusoid_pe(positions).astype(dt)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(cfg, params["embed"], x)
+        logits = logits + jnp.asarray(self._vmask, logits.dtype)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-        def body(carry, inp):
-            lp, kp_l, vp_l = inp
-            x_in = carry
-            h = rms_norm(x_in, lp["ln1"], cfg.norm_eps)
-            a, kp_l, vp_l = attn.paged_chunk_prefill_attention(
-                cfg, lp["attn"], h, kp_l, vp_l, pt, start, n_valid)
-            x_new = x_in + a
-            h2 = rms_norm(x_new, lp["ln2"], cfg.norm_eps)
-            if cfg.family == "moe":
-                y, _ = moe_mod.apply_moe(cfg, lp["ffn"], h2)
-            else:
-                y = apply_mlp(cfg, lp["ffn"], h2)
-            return x_new + y, {"kp": kp_l, "vp": vp_l}
+    def verify_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
+                     start: jax.Array, n_valid: jax.Array
+                     ) -> Tuple[jax.Array, Dict]:
+        """Score a (B, k+1) proposed-token slice at per-row offsets in one
+        call (speculative-decoding verify; DESIGN.md §Speculative decoding).
 
-        if not cfg.scan_layers:
-            outs = []
-            for i in range(cfg.num_layers):
-                x, out = body(x, (_layer_slice(params["layers"], i),
-                                  cache["kp"][i], cache["vp"][i]))
-                outs.append(out)
-            new_caches = _stack_layers(outs)
-        else:
-            x, new_caches = jax.lax.scan(
-                body, x, (params["layers"], cache["kp"], cache["vp"]))
-        logits = self._finish_chunk(x, params, n_valid)
-        new_cache = dict(cache)
-        new_cache.update(new_caches)
-        new_cache["pos"] = jnp.where(n_valid > 0, start + n_valid,
-                                     cache["pos"])
-        return logits, new_cache
+        ``tokens[:, 0]`` is each row's last committed token and the rest are
+        draft proposals; position j's argmax is what target-only greedy
+        decoding would emit after consuming ``tokens[:, :j+1]``. The chunk's
+        K/V is written into the cache exactly like a prefill continuation —
+        rejected positions are discarded afterwards by position rewind
+        (``rollback``), which the causal validity masks make safe: stale
+        slots beyond ``pos`` are never attended.
+
+        Returns (per-position greedy argmax (B, ck) int32, new cache)."""
+        x, new_cache = self._chunk_trunk(params, cache, tokens, start,
+                                         n_valid, paged=False)
+        return self._verify_finish(x, params), new_cache
+
+    def verify_chunk_paged(self, params: Dict, cache: Dict,
+                           tokens: jax.Array, start: jax.Array,
+                           n_valid: jax.Array) -> Tuple[jax.Array, Dict]:
+        """``verify_chunk`` against the paged pool; same contract."""
+        x, new_cache = self._chunk_trunk(params, cache, tokens, start,
+                                         n_valid, paged=True)
+        return self._verify_finish(x, params), new_cache
 
     # ------------------------------------------------------------------
     # prefill: run the full prompt, build the cache

@@ -88,10 +88,10 @@ from repro.obs import Observability, TickRecord
 from repro.obs import trace as ev
 from repro.obs.slo import slo_class_key
 from repro.serving.api import Request, summarize_requests
-from repro.serving.sched import make_scheduler
+from repro.serving.sched import make_scheduler, migration_target
 
 __all__ = ["Request", "VariantBackend", "PagedVariantBackend",
-           "InProcessServingEngine"]
+           "DraftPair", "InProcessServingEngine"]
 
 # Batch axis of each cache leaf (k/v/conv/ssd carry a leading layer axis).
 _CACHE_BATCH_AXIS = {"pos": 0, "k": 1, "v": 1, "conv": 1, "ssd": 1, "enc": 0}
@@ -125,7 +125,7 @@ class _PendingExec:
     (token appends, ``_finish``, slot retirement) one tick later, guarded
     by the ``(request identity, slot_gen)`` pair so a slot preempted or
     rebound inside the gap never absorbs stale tokens."""
-    kind: str                                  # "decode" | "fused"
+    kind: str                                  # "decode" | "fused" | "spec"
     toks: object                               # un-synced device array
     dispatched_at: float                       # perf_counter at dispatch start
     t_dispatch: float                          # timeline clock at dispatch
@@ -135,6 +135,10 @@ class _PendingExec:
     # chunked prefill completed at dispatch; their first token is the fused
     # argmax (or the preserved resume token) read at commit
     fused_completions: List[Tuple] = field(default_factory=list)
+    # (slot, req, slot_gen, base, round_no) — speculative rounds; ``toks``
+    # is the packed (B, 2k+1) [drafts | verifier argmax] matrix and the
+    # commit replays the device's acceptance rule on it (DraftPair.commit)
+    spec_items: List[Tuple] = field(default_factory=list)
 
 
 class VariantBackend:
@@ -154,6 +158,7 @@ class VariantBackend:
                  use_pallas: bool = False, chunked: bool = False,
                  prefill_chunk_tokens: int = 16, preemption: str = "none",
                  prefix_sharing: bool = False,
+                 cache_headroom: int = 0, build_chunked: bool = False,
                  clock: Callable[[], float] = time.time,
                  obs: Optional[Observability] = None):
         self.name = name
@@ -191,12 +196,28 @@ class VariantBackend:
         self.right_sized = chunked
         self.chunked = chunked or preemption != "none" or prefix_sharing
         self.prefill_chunk_tokens = max(1, prefill_chunk_tokens)
+        # cache_headroom: extra token capacity past prompt_len + max_new.
+        # Speculative drafters need it — a draft scan writes up to k
+        # positions past the last committed token, and on the dense ring a
+        # write past capacity would wrap onto the row's own prompt. The
+        # request budget (``_budget``) is NOT widened: headroom is
+        # scratch space, never servable tokens.
+        self.cache_headroom = max(0, cache_headroom)
         self.model = build_model(cfg)
         if self.chunked:
             assert self.model.supports_chunked_prefill(), \
                 (f"scheduler needs prefill continuation, unsupported for "
                  f"config {cfg.name!r} (needs a pure-attention family "
                  f"without sliding window)")
+        elif build_chunked and self.model.supports_chunked_prefill():
+            # opportunistic: the engine wants the continuation machinery
+            # (async-tick admission pipelining) but nothing *requires* it —
+            # right_sized stays False, so admission still prefills the
+            # zero-padded prompt and outputs bit-match the monolithic path
+            self.chunked = True
+        # speculative decoding: the engine attaches a DraftPair here when
+        # this backend is the verifier of a drafter:verifier binding
+        self._spec_pair: Optional["DraftPair"] = None
         self.units = 1
         self.slot_cap: Optional[int] = None   # units -> concurrency (enforced
         # only when the engine runs with enforce_units; see free_slots)
@@ -243,7 +264,8 @@ class VariantBackend:
         the dominant per-step cost at large C on CPU)."""
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(
-                p, b, max_len=self.prompt_len + self.max_new))
+                p, b, max_len=(self.prompt_len + self.max_new
+                               + self.cache_headroom)))
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._decode_chunk = jax.jit(self._decode_chunk_fn,
                                      donate_argnums=(1,))
@@ -422,6 +444,10 @@ class VariantBackend:
         self.slot_remaining[slot] = self._budget(r) - 1
         self.slot_tokens[slot] = [tok0]
         self.slot_pos[slot] = self.prompt_len     # device pos after prefill
+        if self._spec_pair is not None:
+            # monolithic admission prefilled the zero-padded prompt, so the
+            # drafter must mirror exactly that sequence
+            self._spec_pair.on_fresh(slot, self._effective_seq(r))
 
     def admit(self, reqs: List[Request], now: float) -> List[Request]:
         """Prefill ``reqs`` (≤ free slots) and join them to the batch.
@@ -558,9 +584,16 @@ class VariantBackend:
             # first generated token; resumed rows already know theirs
             set_mask[slot] = (job.pos + nv >= len(job.seq)
                               and job.resume_tok is None)
+        # speculative rows are advanced only by DraftPair rounds — a fused
+        # tick (someone else's prefill) must not single-step them, so they
+        # stall for the tick exactly like zombies (their spec state stays
+        # consistent; the pair resumes them on the next spec dispatch)
+        spec_rows = (self._spec_pair.owned()
+                     if self._spec_pair is not None else ())
         decode_rows = [s for s, r in enumerate(self.slot_req)
                        if r is not None and s not in self._prefilling
-                       and s not in self._uncommitted_done]
+                       and s not in self._uncommitted_done
+                       and s not in spec_rows]
         for s in decode_rows:
             feed_mask[s] = True          # device-side cur_tok feed (see
             start[s] = self.slot_pos[s]  # _prefill_chunk_fn) — no D2H dep
@@ -603,6 +636,11 @@ class VariantBackend:
                 self._uncommitted_done.add(slot)
             else:
                 self.slot_remaining[slot] = self._budget(r) - gen_n
+                if self._spec_pair is not None:
+                    # the row starts decoding next tick — hand it to the
+                    # drafter pair (job.seq is exactly what this backend
+                    # prefilled, so the drafter mirrors it bit-for-bit)
+                    self._spec_pair.on_fresh(slot, job.seq)
             pend.fused_completions.append(
                 (slot, r, self.slot_gen[slot], job.resume_tok,
                  list(job.gen), fin))
@@ -638,6 +676,8 @@ class VariantBackend:
         self.slot_remaining[slot] = 0
         self._uncommitted_done.discard(slot)
         self._retire_slot(slot)
+        if self._spec_pair is not None:
+            self._spec_pair.on_release(slot)
         r.preemptions += 1
         r.resume_tokens = gen
         self.metrics.inc("requests.preempted")
@@ -659,6 +699,8 @@ class VariantBackend:
         called with rows mid-prefill — those ticks are fused
         (``fused_chunk_step``); the plain decode path stays the fast,
         bucket-aware one."""
+        if self._spec_pair is not None and self._spec_pair.has_work():
+            return self.commit_exec(self._spec_pair.dispatch(now), now)
         if self.active_slots == 0:
             return []
         return self.commit_exec(self.dispatch_decode(now), now)
@@ -698,6 +740,8 @@ class VariantBackend:
         bookkeeping hide behind in-flight device compute."""
         if self._prefilling:
             return "fused", self.dispatch_fused(now)
+        if self._spec_pair is not None and self._spec_pair.has_work():
+            return "spec", self._spec_pair.dispatch(now)
         pend = self.dispatch_decode(now) if self.active_slots else None
         return ("decode" if pend is not None else "idle"), pend
 
@@ -713,6 +757,8 @@ class VariantBackend:
         identical values on resume. Returns requests finished here."""
         if pending is None:
             return []
+        if pending.kind == "spec":
+            return self._spec_pair.commit(pending, now)
         if self.tracer.on:
             t0 = time.perf_counter()
             toks = np.asarray(pending.toks)
@@ -757,6 +803,8 @@ class VariantBackend:
         self.slot_tokens[slot] = []
         self._uncommitted_done.discard(slot)
         self._retire_slot(slot)
+        if self._spec_pair is not None:
+            self._spec_pair.on_release(slot)
 
     def flush_pending(self, now: float) -> List[Request]:
         """Commit the in-flight tick, if any (async shutdown/fault path)."""
@@ -852,6 +900,8 @@ class VariantBackend:
         if self.chunked:   # fused ticks: 1 decode token while chunks finish
             max_steps += -(-(self.prompt_len + self.max_new)
                            // self.prefill_chunk_tokens) + self.max_new + 2
+        if self._spec_pair is not None:
+            max_steps += self.max_new + 2   # worst case: 1 accepted/round
         while self.active_slots and steps < max_steps:
             if self._prefilling:
                 done.extend(self.fused_chunk_step(now))
@@ -903,8 +953,11 @@ class PagedVariantBackend(VariantBackend):
 
     def _build_state(self) -> None:
         model, ps = self.model, self.page_size
-        # pages covering one slot's whole budget (prompt + decode tokens)
-        self.pages_per_slot = -(-(self.prompt_len + self.max_new) // ps)
+        # pages covering one slot's whole budget (prompt + decode tokens,
+        # plus any scratch headroom — speculative drafters write drafts
+        # past the last committed position before they are accepted)
+        self.pages_per_slot = -(-(self.prompt_len + self.max_new
+                                  + self.cache_headroom) // ps)
         pool_pages = self._pool_pages_arg or (
             self.max_batch * self.pages_per_slot + 1)   # +1: trash page 0
         self.pool = PagedKVCache(pool_pages, ps, metrics=self.metrics)
@@ -1059,16 +1112,32 @@ class PagedVariantBackend(VariantBackend):
         ``plan.tail_start`` instead of 0 — shared tokens are never
         recomputed."""
         job = self._prefilling[slot]
-        plan = self._admit_plans.pop(id(job.req), None)
-        if plan is None and self.prefix_sharing:
-            # direct admit_chunked entry (chunked scheduler, preemption
-            # resume): no admit()-time lookup happened — plan here. Resume
-            # lookups stay out of the admission hit-rate telemetry.
-            plan = self.pool.prefix_plan(self._effective_seq(job.req),
-                                         count=job.resume_tok is None)
+        stored = self._admit_plans.pop(id(job.req), None)
+        plan = None
+        if self.prefix_sharing:
+            # plan against the *current* index: with the retained tier, a
+            # plan computed at admit() peel time can go stale within the
+            # same tick (an earlier bind or monolithic alloc may reclaim a
+            # planned refcount-0 page). Lookups are cheap; the hit-rate
+            # telemetry was already counted once at plan time (resume
+            # lookups stay out of it).
+            plan = self.pool.prefix_plan(
+                self._effective_seq(job.req),
+                count=stored is None and job.resume_tok is None)
         shared = tuple(plan.shared) if plan is not None else ()
+        cow = plan.cow_src if plan is not None else None
+        # protect the CoW source from retained-tier reclaim within this very
+        # alloc — the device copy below reads it after the pages are granted
         fresh = self.pool.alloc(slot, self.pages_per_slot - len(shared),
-                                shared=shared)
+                                shared=shared,
+                                protect=() if cow is None else (cow,))
+        if fresh is None:
+            # retained-tier squeeze: the plan's keep-set blocked reclaim of
+            # the last pages. Drop the plan and take the full budget fresh —
+            # free_slots gated the bind on free_pages, which is sufficient
+            # once nothing is protected.
+            plan, shared, cow = None, (), None
+            fresh = self.pool.alloc(slot, self.pages_per_slot)
         assert fresh is not None
         self.cache["pt"] = self.cache["pt"].at[slot].set(
             jnp.asarray(list(shared) + list(fresh), jnp.int32))
@@ -1125,6 +1194,332 @@ class PagedVariantBackend(VariantBackend):
             "paged KV backends serve in continuous mode only")
 
 
+class DraftPair:
+    """Speculative decoding binding (DESIGN.md §Speculative decoding): a
+    cheap *drafter* backend proposes ``k`` tokens per round for every
+    decoding slot of its *verifier* backend; the verifier scores all k+1
+    positions (the pending token + the k drafts) in ONE prefill-continuation
+    call (``model.verify_chunk``), the longest agreeing draft prefix plus
+    the verifier's own bonus token commits, and the rest rolls back by pure
+    position rewind.
+
+    **Greedy parity.** The bonus token is always the verifier's own argmax
+    given the committed prefix, and a draft commits only where it equals
+    that argmax — inductively the committed stream is bitwise identical to
+    target-only greedy decoding, whatever the drafter proposes.
+
+    **Overlap.** Acceptance of round t is computed on DEVICE at round
+    t+1's dispatch (``_accept_fn`` over the previous round's un-synced
+    draft/argmax arrays), so under ``async_tick=True`` the draft+verify of
+    round t+1 dispatches before round t's tokens are read back — draft of
+    chunk t+1 overlaps verify of chunk t. The commit replays the same
+    integer acceptance rule on the packed ``(B, 2k+1)`` matrix host-side
+    one tick later; exact equality keeps both sides identical.
+
+    **Rollback.** Both caches rewind ``pos`` to the committed length.
+    Chunk and decode attention mask every slot past the query position and
+    overwrite a slot before attending it, so rejected-draft K/V is
+    unreachable the moment the position retreats — no page is freed
+    (budgets are all-or-nothing), CoW pages keep their sharers, and
+    ``PagedKVCache.rollback`` audits that published prefix entries never
+    cover rejected positions.
+
+    **Per-slot host state** (``_mode``): ``"fresh"`` — drafter mirror
+    prefilled this dispatch, the pending token lives in the verifier's
+    device ``cur_tok``; ``"device"`` — a dispatched round's acceptance has
+    not been committed yet, the device derives base/pending itself;
+    ``"host"`` — the round committed before the next spec dispatch (sync
+    ticks, or async ticks interleaved with fused prefill ticks), so the
+    host feeds base/pending/resync explicitly. ``base[slot]`` always holds
+    the round-start base of the arrays in ``_prev`` until a dispatch
+    consumes their acceptance, then catches up at commit."""
+
+    def __init__(self, verifier: VariantBackend, drafter: VariantBackend,
+                 k: int):
+        assert k >= 1
+        assert drafter.max_batch == verifier.max_batch
+        assert drafter.prompt_len == verifier.prompt_len
+        assert drafter.max_new == verifier.max_new
+        assert drafter.decode_chunk == k, \
+            "the drafter's warmed decode scan IS the k-token draft"
+        assert drafter.chunked, "drafter needs the continuation machinery " \
+            "(mirror prefill + the full-accept resync)"
+        self.v, self.d, self.k = verifier, drafter, k
+        self.paged = isinstance(verifier, PagedVariantBackend)
+        assert self.paged == isinstance(drafter, PagedVariantBackend)
+        self.metrics = verifier.metrics
+        self.windows = verifier.windows
+        B = verifier.max_batch
+        self.base = np.zeros((B,), np.int64)       # round-start verifier pos
+        self.end = np.zeros((B,), np.int64)        # base at completion
+        self.pend_tok = np.zeros((B,), np.int64)   # host-fed pending token
+        self.resync_host = np.zeros((B,), bool)    # host-fed full-accept flag
+        self._slot_round = np.zeros((B,), np.int64)
+        self._round_no = 0
+        self._mode: Dict[int, str] = {}
+        self.fresh: Dict[int, np.ndarray] = {}     # slot -> mirror sequence
+        self._d_bound: Set[int] = set()
+        self._prev = None            # (drafts (B,k), argmax (B,k+1)) device
+        # per-slot acceptance telemetry (k-adaptation reads these)
+        self.slot_rounds = np.zeros((B,), np.int64)
+        self.slot_accepted = np.zeros((B,), np.int64)
+        self.slot_proposed = np.zeros((B,), np.int64)
+        self._accept = jax.jit(self._accept_fn)
+        vfn = (verifier.model.verify_chunk_paged if self.paged
+               else verifier.model.verify_chunk)
+        self._verify = jax.jit(lambda p, c, t, s, nv: vfn(p, c, t, s, nv),
+                               donate_argnums=(1,))
+        # warm-up: the verify executable (n_valid=0 writes nothing) and the
+        # drafter's width-1 continuation (the full-accept resync shape)
+        zi = jnp.zeros((B,), jnp.int32)
+        fz = jnp.zeros((B,), bool)
+        _, self.v.cache = self._verify(
+            verifier.params, verifier.cache,
+            jnp.zeros((B, k + 1), jnp.int32), zi, zi)
+        self.d.cur_tok, self.d.cache = drafter._prefill_chunk(
+            drafter.params, drafter.cache, drafter.cur_tok,
+            jnp.zeros((B, 1), jnp.int32), zi, zi, fz, fz)
+        verifier._spec_pair = self
+
+    # ------------------------------------------------------------ slot hooks
+    def on_fresh(self, slot: int, seq: np.ndarray) -> None:
+        """The verifier bound ``slot`` to a decoding request whose cache
+        holds exactly ``seq`` (+ the pending first token in ``cur_tok``)."""
+        self.fresh[slot] = np.asarray(seq, np.int64)
+        self._mode.pop(slot, None)
+
+    def on_release(self, slot: int) -> None:
+        """The verifier released ``slot`` (finish or preemption): drop the
+        spec state and free the drafter's mirror resources. Any in-flight
+        round's stale items are discarded by the commit guard."""
+        self._mode.pop(slot, None)
+        self.fresh.pop(slot, None)
+        if slot in self._d_bound:
+            self._d_bound.discard(slot)
+            self.d._retire_slot(slot)
+
+    def owned(self):
+        return self._mode.keys() | self.fresh.keys()
+
+    def has_work(self) -> bool:
+        return bool(self._mode or self.fresh)
+
+    # ------------------------------------------------------------- jitted fns
+    def _accept_fn(self, drafts, pred, base_in, end, dev_m, fresh_m,
+                   host_tok, host_resync, cur_v):
+        """Acceptance of the previous round + inputs of the next, one
+        traced call. ``dev_m`` rows derive base/pending from the previous
+        round's arrays; ``fresh_m`` rows take the verifier's device
+        ``cur_tok`` as pending at their bootstrap base; remaining live rows
+        are host-fed (their round already committed). ``n_valid`` is capped
+        by the tokens still owed (``end - base``), so a finished row's
+        in-flight zombie round verifies nothing and writes nothing."""
+        k = self.k
+        nv_prev = jnp.clip(end - base_in, 0, k + 1)
+        agree = ((drafts == pred[:, :k])
+                 & (jnp.arange(k)[None, :] < (nv_prev - 1)[:, None]))
+        a = jnp.sum(jnp.cumprod(agree.astype(jnp.int32), axis=1), axis=1)
+        bonus = jnp.take_along_axis(pred, a[:, None], axis=1)[:, 0]
+        base_new = jnp.where(dev_m, base_in + a + 1, base_in) \
+            .astype(jnp.int32)
+        pending = jnp.where(dev_m, bonus,
+                            jnp.where(fresh_m, cur_v, host_tok)) \
+            .astype(jnp.int32)
+        resync = (dev_m & (a == k)) | (~dev_m & ~fresh_m & host_resync)
+        nv_next = jnp.clip(end - base_new, 0, k + 1).astype(jnp.int32)
+        return base_new, pending, nv_next, resync
+
+    # ---------------------------------------------------------- round halves
+    def _bootstrap_fresh(self) -> None:
+        """Mirror-prefill every newly bound slot's committed sequence into
+        the drafter's cache (batched continuation chunks — handles resumed
+        rows whose sequence exceeds ``prompt_len``), and seed the host
+        state. The pending token itself is copied device-side from the
+        verifier's ``cur_tok`` at dispatch — it may only exist on device
+        (a chunked completion whose commit has not run yet)."""
+        v, d = self.v, self.d
+        B, ck = v.max_batch, d.prefill_chunk_tokens
+        maxlen = 0
+        for slot, seq in sorted(self.fresh.items()):
+            base0 = int(v.slot_pos[slot])
+            assert base0 == len(seq), (base0, len(seq))
+            self.base[slot] = base0
+            self.end[slot] = base0 + int(v.slot_remaining[slot])
+            self.pend_tok[slot] = 0
+            self.resync_host[slot] = False
+            self._mode[slot] = "fresh"
+            maxlen = max(maxlen, len(seq))
+            if self.paged and slot not in self._d_bound:
+                pages = d.pool.alloc(slot, d.pages_per_slot)
+                assert pages is not None, "drafter pool covers max_batch"
+                d.cache["pt"] = d.cache["pt"].at[slot].set(
+                    jnp.asarray(pages, jnp.int32))
+            self._d_bound.add(slot)
+        fz = jnp.zeros((B,), bool)
+        for off in range(0, maxlen, ck):
+            tokens = np.zeros((B, ck), np.int64)
+            st = np.zeros((B,), np.int32)
+            nv = np.zeros((B,), np.int32)
+            for slot, seq in self.fresh.items():
+                n = min(len(seq) - off, ck)
+                if n <= 0:
+                    continue
+                tokens[slot, :n] = seq[off:off + n]
+                st[slot] = off
+                nv[slot] = n
+            d.cur_tok, d.cache = d._prefill_chunk(
+                d.params, d.cache, d.cur_tok, jnp.asarray(tokens),
+                jnp.asarray(st), jnp.asarray(nv), fz, fz)
+        self.fresh.clear()
+
+    def dispatch(self, now: float) -> Optional[_PendingExec]:
+        """One speculative round for every owned slot: consume the previous
+        round's acceptance (device), rewind both caches, resync the drafter
+        on full accepts, draft k tokens on the cheap model, verify all k+1
+        positions on the target — five device calls, no D2H."""
+        v, d, k = self.v, self.d, self.k
+        B = v.max_batch
+        if self.fresh:
+            self._bootstrap_fresh()
+        live = sorted(self._mode)
+        if not live:
+            return None
+        t_disp = time.perf_counter()
+        self._round_no += 1
+        rnd = self._round_no
+        live_np = np.zeros((B,), bool)
+        dev_np = np.zeros((B,), bool)
+        fresh_np = np.zeros((B,), bool)
+        items = []
+        for s in live:
+            live_np[s] = True
+            dev_np[s] = self._mode[s] == "device"
+            fresh_np[s] = self._mode[s] == "fresh"
+            items.append((s, v.slot_req[s], v.slot_gen[s],
+                          int(self.base[s]), rnd))
+            self._slot_round[s] = rnd
+            self._mode[s] = "device"
+        if self._prev is None:
+            pd = jnp.zeros((B, k), jnp.int32)
+            pp = jnp.zeros((B, k + 1), jnp.int32)
+        else:
+            pd, pp = self._prev
+        base_new, pending, nv_next, resync = self._accept(
+            pd, pp, jnp.asarray(self.base), jnp.asarray(self.end),
+            jnp.asarray(dev_np), jnp.asarray(fresh_np),
+            jnp.asarray(self.pend_tok), jnp.asarray(self.resync_host),
+            v.cur_tok)
+        live_j = jnp.asarray(live_np)
+        # rollback + advance: pure position rewind on both caches — chunk
+        # and decode attention mask every slot past the query position and
+        # overwrite before attending, so rejected-draft K/V is dead
+        v.cache["pos"] = jnp.where(live_j, base_new, v.cache["pos"])
+        d.cache["pos"] = jnp.where(live_j, base_new, d.cache["pos"])
+        if self.paged:
+            for s in live:     # pool-side audit: rewind never uncovers a
+                v.pool.rollback(s, int(self.base[s]) + 1)   # published page
+        if self._prev is not None:
+            # full-accept resync: the k-th draft committed but its K/V was
+            # never written (the scan emits it as output only) — feed it
+            # through a width-1 continuation at base_new - 1
+            fz = jnp.zeros((B,), bool)
+            d.cur_tok, d.cache = d._prefill_chunk(
+                d.params, d.cache, d.cur_tok, pd[:, -1:], base_new - 1,
+                resync.astype(jnp.int32), fz, fz)
+        d.cur_tok = jnp.where(live_j, pending, d.cur_tok)
+        if self.paged:
+            mx = max(int(self.base[s]) for s in live)
+            cap = d.prompt_len + d.max_new + d.cache_headroom
+            need = d.pool.pages_needed(min(mx + 2 * k + 2, cap))
+            nb = next(b for b in d.page_buckets
+                      if b >= min(need, d.pages_per_slot))
+            d.cur_tok, d.cache, dtoks = d._decode_chunk_p(
+                d.params, d.cache, d.cur_tok, nb)
+        else:
+            d.cur_tok, d.cache, dtoks = d._decode_chunk(
+                d.params, d.cache, d.cur_tok)
+        drafts = jnp.transpose(dtoks).astype(jnp.int32)      # (B, k)
+        vt = jnp.concatenate([pending[:, None], drafts], axis=1)
+        pred, v.cache = v._jit_exec(self._verify, v.params, v.cache, vt,
+                                    base_new, nv_next)
+        self._prev = (drafts, pred)
+        self.metrics.inc("spec.batch_rounds")
+        return _PendingExec(kind="spec",
+                            toks=jnp.concatenate([drafts, pred], axis=1),
+                            dispatched_at=t_disp, t_dispatch=now,
+                            spec_items=items)
+
+    def commit(self, pending: _PendingExec, now: float) -> List[Request]:
+        """Replay the round's acceptance host-side from the packed
+        ``(B, 2k+1)`` matrix — ONE D2H read — and apply the value-dependent
+        bookkeeping: token appends, acceptance telemetry, completion. A
+        ``(request identity, slot_gen)`` mismatch means the slot was
+        preempted or rebound inside the dispatch→commit gap; its stale
+        tokens are discarded and regenerated identically on resume."""
+        v, k = self.v, self.k
+        m, w = self.metrics, self.windows
+        pack = np.asarray(pending.toks)
+        drafts, pred = pack[:, :k], pack[:, k:]
+        finished: List[Request] = []
+        for slot, r, gen_id, _base_disp, rnd in pending.spec_items:
+            if v.slot_req[slot] is not r or v.slot_gen[slot] != gen_id:
+                continue
+            # The round-start base is read LIVE from ``self.base``, not
+            # from the dispatch-time snapshot: under async overlap the
+            # dispatch of round r+1 runs before the commit of round r has
+            # advanced the host base, so the snapshot can be one round
+            # stale. Commits drain strictly FIFO and each advances
+            # ``self.base`` by exactly a+1, so at commit(r) the host base
+            # is always round r's true start offset.
+            base_t = int(self.base[slot])
+            nv = int(min(self.end[slot] - base_t, k + 1))
+            if nv <= 0:
+                continue          # zombie round of an already-finished row
+            a = 0
+            while a < nv - 1 and int(drafts[slot, a]) == int(pred[slot, a]):
+                a += 1
+            v.slot_tokens[slot].extend(
+                [int(t) for t in drafts[slot, :a]] + [int(pred[slot, a])])
+            new_base = base_t + a + 1
+            self.base[slot] = new_base
+            v.slot_pos[slot] = new_base
+            v.slot_remaining[slot] = self.end[slot] - new_base
+            self.slot_rounds[slot] += 1
+            self.slot_accepted[slot] += a
+            self.slot_proposed[slot] += nv - 1
+            m.inc("spec.rounds")
+            m.inc("spec.committed_tokens", a + 1)
+            m.inc("spec.drafts_accepted", a)
+            m.inc("spec.drafts_proposed", nv - 1)
+            if w.on:
+                w.observe("spec.tokens_per_step", now, a + 1)
+                if nv > 1:
+                    w.observe("spec.accept_rate", now, a / (nv - 1))
+            if self._slot_round[slot] == rnd:
+                # no newer round in flight (sync ticks, or async ticks
+                # interleaved with fused prefill): the next dispatch takes
+                # base/pending/resync from the host side
+                self._mode[slot] = "host"
+                self.pend_tok[slot] = int(pred[slot, a])
+                self.resync_host[slot] = a == k
+            # else: a newer round already consumed this acceptance on
+            # device — self.base just caught up to that round's base
+            if new_base >= self.end[slot]:
+                v._finish(r, v.slot_tokens[slot], now)
+                finished.append(r)
+                v._release_slot(slot)     # -> on_release drops spec state
+        return finished
+
+    def acceptance_stats(self) -> Dict:
+        rounds = int(self.slot_rounds.sum())
+        acc = int(self.slot_accepted.sum())
+        prop = int(self.slot_proposed.sum())
+        return {"rounds": rounds, "drafts_accepted": acc,
+                "drafts_proposed": prop,
+                "accept_rate": acc / max(prop, 1),
+                "tokens_per_step": (acc + rounds) / max(rounds, 1)}
+
+
 class InProcessServingEngine:
     """``ServingAPI`` on real models (continuous batching or legacy pump).
 
@@ -1150,7 +1545,9 @@ class InProcessServingEngine:
                  trace: bool = False,
                  obs: Optional[Observability] = None,
                  profile_dispatch: int = 0,
-                 async_tick: bool = False):
+                 async_tick: bool = False,
+                 speculative: Optional[str] = None,
+                 spec_k: int = 4):
         assert mode in ("continuous", "pump"), mode
         assert not async_tick or mode == "continuous", \
             "async_tick needs the continuous engine (the pump path is " \
@@ -1158,7 +1555,8 @@ class InProcessServingEngine:
         assert kv_cache in ("dense", "paged"), kv_cache
         assert kv_cache == "dense" or mode == "continuous", \
             "paged KV backends serve in continuous mode only"
-        assert preemption in ("none", "requeue", "drop"), preemption
+        assert preemption in ("none", "requeue", "drop", "migrate"), \
+            preemption
         assert not (kv_prefix_sharing and kv_cache != "paged"), \
             "kv_prefix_sharing requires kv_cache='paged' (the prefix index " \
             "maps shared blocks onto pool pages)"
@@ -1195,6 +1593,22 @@ class InProcessServingEngine:
         assert mode == "continuous" or (
             not self.sched.chunked and preemption == "none"), \
             "chunked scheduling/preemption need the continuous engine"
+        # speculative decoding on the variant ladder: "drafter:verifier"
+        # names two loaded variants; every backend of the verifier variant
+        # gets a dedicated drafter instance bound as a DraftPair
+        self.spec_drafter = self.spec_verifier = None
+        self.spec_k = int(spec_k)
+        if speculative is not None:
+            assert mode == "continuous", \
+                "speculative decoding needs the continuous engine"
+            drafter, _, verifier = speculative.partition(":")
+            assert drafter and verifier and drafter != verifier, \
+                f"speculative= wants 'drafter:verifier', got {speculative!r}"
+            assert drafter in variants and verifier in variants, \
+                f"speculative variants must be loaded: {speculative!r}"
+            assert 1 <= self.spec_k <= max_new, \
+                "spec_k must fit inside the decode budget"
+            self.spec_drafter, self.spec_verifier = drafter, verifier
         self.variant_defs = dict(variants)       # name -> (cfg, accuracy)
         self.max_batch = max_batch
         self.prompt_len = prompt_len
@@ -1243,14 +1657,44 @@ class InProcessServingEngine:
                   use_pallas=self.use_pallas, chunked=self.sched.chunked,
                   prefill_chunk_tokens=self.prefill_chunk,
                   preemption=self.preemption, clock=self.clock,
-                  obs=self.obs)
+                  obs=self.obs,
+                  # async-tick admission pipelining: build the continuation
+                  # machinery so monolithic admission can route through the
+                  # dispatch/commit pipeline (chunked admission of the same
+                  # zero-padded prompt — bitwise-identical outputs)
+                  build_chunked=self.async_tick)
         if self.kv_cache == "paged":
-            return PagedVariantBackend(variant, cfg, acc,
-                                       page_size=self.kv_page_size,
-                                       pool_pages=self.kv_pool_pages,
-                                       prefix_sharing=self.kv_prefix_sharing,
-                                       **kw)
-        return VariantBackend(variant, cfg, acc, **kw)
+            b = PagedVariantBackend(variant, cfg, acc,
+                                    page_size=self.kv_page_size,
+                                    pool_pages=self.kv_pool_pages,
+                                    prefix_sharing=self.kv_prefix_sharing,
+                                    **kw)
+        else:
+            b = VariantBackend(variant, cfg, acc, **kw)
+        if variant == self.spec_verifier:
+            self._attach_drafter(b)
+        return b
+
+    def _attach_drafter(self, verifier: VariantBackend) -> None:
+        """Materialize a dedicated drafter backend for one verifier replica
+        and bind them as a ``DraftPair``. The drafter is hidden from
+        routing/queues — it exists purely as the verifier's proposal
+        engine, with its own KV (pool) sized for scratch headroom: drafts
+        are written up to k positions past the last committed token before
+        acceptance, plus one in-flight zombie round under async commit."""
+        dcfg, dacc = self.variant_defs[self.spec_drafter]
+        kw = dict(max_batch=self.max_batch, prompt_len=self.prompt_len,
+                  max_new=self.max_new, decode_chunk=self.spec_k,
+                  use_pallas=self.use_pallas, chunked=True,
+                  prefill_chunk_tokens=self.prefill_chunk,
+                  preemption="none", clock=self.clock, obs=self.obs,
+                  cache_headroom=self.spec_k + 2)
+        if self.kv_cache == "paged":
+            d = PagedVariantBackend(self.spec_drafter, dcfg, dacc,
+                                    page_size=self.kv_page_size, **kw)
+        else:
+            d = VariantBackend(self.spec_drafter, dcfg, dacc, **kw)
+        DraftPair(verifier, d, self.spec_k)
 
     # ------------------------------------------------------------ ClusterAPI
     def apply_allocation(self, t: float, units: Mapping[str, int]) -> None:
@@ -1369,10 +1813,12 @@ class InProcessServingEngine:
         used = sum(p.used_pages for p in pools)
         usable = sum(p.usable_pages for p in pools)
         shared = sum(p.shared_pages for p in pools)
+        retained = sum(p.retained_pages for p in pools)
         occupancy = used / max(usable, 1)
         m.set("kv.used_pages", used)
         m.set("kv.usable_pages", usable)
         m.set("kv.shared_pages", shared)
+        m.set("kv.retained_pages", retained)
         m.set("kv.occupancy", occupancy)
         if m.enabled:
             lookups = int(m.value("kv.prefix_lookups"))
@@ -1384,6 +1830,7 @@ class InProcessServingEngine:
             fresh = sum(p.fresh_pages_allocated for p in pools)
         return {"used_pages": used, "usable_pages": usable,
                 "occupancy": occupancy, "shared_pages": shared,
+                "retained_pages": retained,
                 "prefix_lookups": lookups, "prefix_hits": hits,
                 "prefix_hit_rate": hits / max(lookups, 1),
                 "fresh_pages_allocated": fresh}
@@ -1543,8 +1990,22 @@ class InProcessServingEngine:
                     n_preempted += 1
                     if b.preempt(v, now) == "dropped":
                         self.done.append(v)
-                    else:               # resumes later, tokens preserved
-                        q.append(v)
+                        continue        # resumes later, tokens preserved
+                    tq = q
+                    if self.preemption == "migrate":
+                        # cross-variant migration: resume on a cheaper
+                        # variant via chunked prefill continuation — the
+                        # accuracy-for-latency escape hatch under deadline
+                        # pressure (stays put when nothing is cheaper)
+                        tgt = migration_target(name, self.backends,
+                                               self.queues)
+                        if tgt is not None:
+                            v.backend = tgt
+                            tq = self.queues.setdefault(tgt, deque())
+                            self.metrics.inc("requests.migrated")
+                            if self.windows.on:
+                                self.windows.inc("requests.migrated", now)
+                    tq.append(v)
             t1 = time.perf_counter() if tron else 0.0
             free_n = len(b.free_slots)
             if q and free_n:
@@ -1554,6 +2015,13 @@ class InProcessServingEngine:
                 q.extend(rest)
                 n_admitted = len(joiners)
                 if self.sched.chunked:
+                    self.done.extend(b.admit_chunked(joiners, now))
+                elif self.async_tick and b.chunked:
+                    # async-tick headroom: monolithic admission would
+                    # prefill synchronously inside the tick; chunked
+                    # admission of the same zero-padded prompt
+                    # (right_sized stays off) defers the prefill into the
+                    # dispatch/commit pipeline with identical outputs
                     self.done.extend(b.admit_chunked(joiners, now))
                 else:
                     # resumed requests need prefill continuation even under
@@ -1679,4 +2147,13 @@ class InProcessServingEngine:
                 out["kv_pool_occupancy"] = pool["occupancy"]
                 out["kv_shared_pages"] = pool["shared_pages"]
                 out["kv_prefix_hit_rate"] = pool["prefix_hit_rate"]
+            pairs = [b._spec_pair for b in self.backends.values()
+                     if b._spec_pair is not None]
+            if pairs:
+                rounds = sum(int(p.slot_rounds.sum()) for p in pairs)
+                acc = sum(int(p.slot_accepted.sum()) for p in pairs)
+                prop = sum(int(p.slot_proposed.sum()) for p in pairs)
+                out["spec_accept_rate"] = acc / max(prop, 1)
+                out["spec_tokens_per_step"] = \
+                    (acc + rounds) / max(rounds, 1)
         return out

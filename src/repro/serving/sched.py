@@ -145,3 +145,22 @@ def make_scheduler(spec: Union[str, SchedulerAPI]) -> SchedulerAPI:
         return ChunkedScheduler(order="fifo")
     raise ValueError(f"unknown scheduler {spec!r} "
                      "(expected fifo|edf|chunked|chunked-fifo)")
+
+
+def migration_target(current: str, backends, queues) -> Union[str, None]:
+    """Pick where a preempted request should resume under the engine's
+    ``preemption="migrate"`` mode: the *cheapest* (lowest-accuracy) loaded
+    backend strictly cheaper than the one it was preempted from, breaking
+    ties by shortest queue — the accuracy-for-latency escape hatch of
+    cross-variant migration (resume is a chunked prefill continuation, so
+    any backend with the machinery can pick the request up with every
+    generated token preserved). Returns None when nothing cheaper is
+    loaded: the request requeues where it was, plain ``"requeue"``
+    semantics."""
+    cur_acc = backends[current].accuracy
+    cheaper = [n for n, b in backends.items()
+               if n != current and b.accuracy < cur_acc]
+    if not cheaper:
+        return None
+    return min(cheaper, key=lambda n: (backends[n].accuracy,
+                                       len(queues.get(n, ())), n))

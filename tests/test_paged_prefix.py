@@ -4,9 +4,12 @@ Refcounted pages + copy-on-write are a classic source of *silent*
 corruption: an aliased write poisons someone else's attention, a missed
 decrement leaks pages, a stale index entry maps a sharer onto reused
 memory. This harness drives random admit / decode / fork / preempt /
-resume / retire sequences against the pool plus a host-side simulation of
-the device page arrays (each written position stores a known token value),
-and after **every** step asserts the DESIGN.md §Prefix sharing invariants:
+resume / retire / speculate sequences against the pool plus a host-side
+simulation of the device page arrays (each written position stores a known
+token value), and after **every** step asserts the DESIGN.md §Prefix
+sharing invariants (plus the retained-tier partition and the speculative
+rollback-never-leaks property — rejected draft positions rewind without a
+single page moving):
 
   * refcount conservation — sum of refcounts == slot->page mappings, and
     every usable page is either free or refcounted by the slots mapping it
@@ -87,10 +90,16 @@ class _HarnessCore:
         assert 1 <= len(seq) <= self.capacity
         plan = self.pool.prefix_plan(prompt, count=False)
         slot = self.next_slot
-        fresh = self.pool.alloc(slot, PAGES_PER_SLOT - len(plan.shared),
-                                shared=plan.shared)
+        fresh = self.pool.alloc(
+            slot, PAGES_PER_SLOT - len(plan.shared), shared=plan.shared,
+            protect=() if plan.cow_src is None else (plan.cow_src,))
         if fresh is None:
             return None
+        # a fresh page's previous contents are dead the moment it is handed
+        # out (it may have been reclaimed off the retained tier) — model the
+        # reuse by poisoning before this request writes
+        for pg in fresh:
+            self.kv[pg] = POISON
         self.next_slot += 1
         resuming = rid is not None
         if rid is None:
@@ -118,6 +127,24 @@ class _HarnessCore:
         self.kv[rec["table"][pos // PS], pos % PS] = tok
         rec["seq"] = np.append(rec["seq"], tok)
 
+    def speculate(self, slot, k, accept):
+        """Draft/verify/rollback (DESIGN.md §Speculative decoding): append
+        ``k`` draft tokens the way decode does, then reject all but
+        ``accept`` of them — ``pool.rollback`` validates the rewind and the
+        slot's sequence truncates back. The rejected positions' K/V stays
+        physically in the slot's pages (masked by position on device), so
+        the next append simply overwrites; no page ever moves."""
+        rec = self.live[slot]
+        base = len(rec["seq"])
+        k = min(k, self.capacity - base)
+        if k == 0:
+            return
+        for _ in range(k):
+            self.decode(slot)
+        new_len = base + min(accept, k)
+        self.pool.rollback(slot, new_len)
+        rec["seq"] = rec["seq"][:new_len]
+
     def fork(self, slot):
         """Admit a fresh request with a live slot's exact prompt — the
         full-chain match that exercises the CoW boundary case."""
@@ -133,7 +160,11 @@ class _HarnessCore:
         for pg in released:
             assert pg not in {p for r in self.live.values()
                               for p in r["table"]}
-            self.kv[pg] = POISON
+            # pages parked on the retained tier keep their K/V live (a
+            # future identical prompt may revive them); only pages actually
+            # returned for reuse are poisoned
+            if pg not in self.pool._retained:
+                self.kv[pg] = POISON
         self._stamp(rec["rid"], ev.PREEMPT if keep else ev.COMPLETE,
                     slot=slot)
         if keep:
@@ -193,7 +224,7 @@ def _make_prompt(pattern_ids, tail_seed):
 def _drive(core, rng, steps):
     """Seeded random schedule over the core (the non-hypothesis driver)."""
     for _ in range(steps):
-        op = rng.integers(0, 6)
+        op = rng.integers(0, 7)
         slots = sorted(core.live)
         if op == 0 or not slots:
             ids = list(rng.integers(0, len(_PATTERNS),
@@ -207,6 +238,10 @@ def _drive(core, rng, steps):
             core.release(slots[rng.integers(0, len(slots))], keep=True)
         elif op == 4 and core.preempted:
             core.resume()
+        elif op == 5:
+            core.speculate(slots[rng.integers(0, len(slots))],
+                           int(rng.integers(1, MAX_DECODE + 1)),
+                           int(rng.integers(0, MAX_DECODE + 1)))
         else:
             core.release(slots[rng.integers(0, len(slots))], keep=False)
         core.check()
@@ -275,6 +310,13 @@ class PrefixPoolMachine(RuleBasedStateMachine):
     def decode(self, k):
         slots = sorted(self.core.live)
         self.core.decode(slots[k % len(slots)])
+
+    @precondition(lambda self: self.core.live)
+    @rule(k=st.integers(0, 7), draft=st.integers(1, MAX_DECODE),
+          accept=st.integers(0, MAX_DECODE))
+    def speculate(self, k, draft, accept):
+        slots = sorted(self.core.live)
+        self.core.speculate(slots[k % len(slots)], draft, accept)
 
     @precondition(lambda self: self.core.live)
     @rule(k=st.integers(0, 7))
